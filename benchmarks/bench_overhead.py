@@ -1,0 +1,63 @@
+"""Paper §V.C: migration overhead ("up to two seconds").
+
+Measures the full checkpoint pipeline per split point and codec:
+payload bytes, pack/unpack wall time, simulated 75 Mbps transfer, and
+the real-TCP (localhost) transfer — plus the beyond-paper int8 payload
+and the device-relay route.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import make_batchers, make_scheduler
+from repro.core.checkpoint import EdgeCheckpoint
+from repro.core.migration import MigrationExecutor
+from repro.models.vgg import SPLIT_POINTS
+from repro.runtime.transport import LinkModel, SocketTransport
+from repro.core import split as split_lib
+from repro.models.vgg import VGG5
+from repro.optim.optimizers import sgd
+import jax
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    args = ap.parse_args(argv)
+
+    model = VGG5()
+    params = model.init(jax.random.PRNGKey(0))
+    opt = sgd(momentum=0.9)
+    link = LinkModel(bandwidth_bps=75e6, latency_s=0.005)
+
+    print("# §V.C migration overhead (VGG-5 server stage, 75 Mbps link)")
+    print(f"{'SP':>4s} {'codec':>6s} {'route':>12s} {'MB':>7s} "
+          f"{'pack s':>7s} {'sim xfer s':>10s} {'tcp xfer s':>10s} "
+          f"{'total s':>8s} {'<=2s':>5s}")
+    for spname, spn in sorted(SPLIT_POINTS.items()):
+        _, srv = split_lib.partition_params(model, params, spn)
+        ck = EdgeCheckpoint(
+            client_id="pi3_1", round_idx=50, epoch=1, batch_idx=5,
+            split_point=spn, server_params=jax.tree.map(np.asarray, srv),
+            optimizer_state=jax.tree.map(np.asarray, opt.init(srv)),
+            last_grads=jax.tree.map(np.asarray, srv), loss=1.0)
+        for codec in ("raw", "int8"):
+            for route in ("direct", "device_relay"):
+                srv_sock = SocketTransport().serve()
+                ex = MigrationExecutor(
+                    link=link, codec=codec,
+                    send=lambda dst, p: srv_sock.send_to(
+                        "127.0.0.1", srv_sock.port, p),
+                    recv=lambda dst: srv_sock.recv(timeout=30))
+                _, rep = ex.migrate(ck, "edge-A", "edge-B", route=route)
+                srv_sock.close()
+                total = rep.pack_s + rep.sim_transfer_s + rep.unpack_s
+                print(f"{spname:>4s} {codec:>6s} {route:>12s} "
+                      f"{rep.nbytes/1e6:7.2f} {rep.pack_s:7.3f} "
+                      f"{rep.sim_transfer_s:10.3f} {rep.transfer_s:10.3f} "
+                      f"{total:8.3f} {'yes' if total <= 2 else 'NO':>5s}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper Fig. 3(c): vary the split point SP1/SP2/SP3 (conv units kept on
+the device), mobile device with 25% of the data moving at 90% of
+training. Reports per-round time for FedFly vs SplitFed and the
+checkpoint transfer time at each SP (paper: "still up to two seconds").
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import make_batchers, make_scheduler
+from repro.core.mobility import MobilityTrace, move_at_round
+from repro.models.vgg import SPLIT_POINTS
+
+MOBILE = "pi3_1"
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-train", type=int, default=4000)
+    args = ap.parse_args(argv)
+
+    print("# Fig3c: split-point sweep (mobile 25% data, move at 90% of "
+          "the round)")
+    print(f"{'SP':>4s} {'fedfly':>8s} {'splitfed':>9s} {'reduction':>9s} "
+          f"{'ckpt MB':>8s} {'transfer s':>10s}")
+    for spname, spn in sorted(SPLIT_POINTS.items()):
+        batchers, _ = make_batchers(args.n_train, 0.25)
+        trace = MobilityTrace(move_at_round(MOBILE, "edge-A", "edge-B", 1,
+                                            fraction=0.9))
+        t = {}
+        rep = None
+        for mode in ("fedfly", "splitfed"):
+            s = make_scheduler(batchers, split_point=spn)
+            h = s.run(2, trace, mode=mode)
+            t[mode] = h.rounds[1].client_times_sim[MOBILE]
+            if mode == "fedfly":
+                rep = h.rounds[1].migrations[0]
+        red = 100.0 * (1 - t["fedfly"] / t["splitfed"])
+        print(f"{spname:>4s} {t['fedfly']:8.2f} {t['splitfed']:9.2f} "
+              f"{red:8.1f}% {rep.nbytes/1e6:8.2f} {rep.sim_total_s:10.3f}")
+
+
+if __name__ == "__main__":
+    main()

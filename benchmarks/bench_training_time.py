@@ -1,0 +1,58 @@
+"""Paper Fig. 3(a)/3(b): device training time per round when the mobile
+device holds 25% / 50% of the data and moves after 50% / 90% of training.
+
+For each (data share × move stage) we run FedFly (resume) and SplitFed
+(restart) and report the mobile device's per-round time in the move
+round, on the simulated testbed clock. The paper's claims:
+  ~33% reduction at 50% completion, ~45% at 90% completion
+(analytically f/(1+f) = 33.3% / 47.4%, minus the migration overhead).
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import make_batchers, make_scheduler
+from repro.core.mobility import MobilityTrace, move_at_round
+
+MOBILE = "pi3_1"
+
+
+def run_case(n_train: int, mobile_fraction: float, move_fraction: float,
+             rounds: int = 3, move_round: int = 1):
+    rows = []
+    batchers, _ = make_batchers(n_train, mobile_fraction)
+    trace = MobilityTrace(move_at_round(MOBILE, "edge-A", "edge-B",
+                                        move_round,
+                                        fraction=move_fraction))
+    times = {}
+    for mode in ("fedfly", "splitfed"):
+        s = make_scheduler(batchers)
+        h = s.run(rounds, trace, mode=mode)
+        times[mode] = h.rounds[move_round].client_times_sim[MOBILE]
+        times.setdefault("baseline",
+                         h.rounds[move_round - 1].client_times_sim[MOBILE])
+    red = 100.0 * (1 - times["fedfly"] / times["splitfed"])
+    return times, red
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n-train", type=int, default=4000)
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args(argv)
+
+    print("# Fig3a/3b: device training time per round (simulated testbed"
+          " clock, s)")
+    print(f"{'data%':>6s} {'move@':>6s} {'no-move':>8s} {'fedfly':>8s} "
+          f"{'splitfed':>9s} {'reduction':>9s}  paper")
+    for share, fig in ((0.25, "3a"), (0.50, "3b")):
+        for mf, paper in ((0.5, "33%"), (0.9, "45%")):
+            times, red = run_case(args.n_train, share, mf)
+            print(f"{int(share*100):5d}% {int(mf*100):5d}% "
+                  f"{times['baseline']:8.2f} {times['fedfly']:8.2f} "
+                  f"{times['splitfed']:9.2f} {red:8.1f}%  ~{paper}"
+                  f"  [Fig {fig}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Shared benchmark setup: the paper's testbed (4 devices, 2 edges,
+75 Mbps Wi-Fi, VGG-5, batch 100, SGD lr=0.01 momentum=0.9)."""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from repro.core.scheduler import FedFlyScheduler
+from repro.data.datasets import synthetic_cifar10
+from repro.data.loader import Batcher
+from repro.data.partition import balanced, by_fraction
+from repro.models.vgg import VGG5
+from repro.optim.optimizers import sgd
+from repro.optim.schedules import constant
+from repro.runtime.cluster import (WIFI_75MBPS, make_testbed_devices,
+                                   make_testbed_edges)
+
+
+def make_batchers(n_train: int, mobile_fraction: Optional[float],
+                  batch_size: int = 100, seed: int = 0) -> List[Batcher]:
+    train, test = synthetic_cifar10(n_train=n_train,
+                                    n_test=max(n_train // 5, 200),
+                                    seed=seed)
+    if mobile_fraction:
+        rest = (1.0 - mobile_fraction) / 3
+        parts = by_fraction(train, [mobile_fraction, rest, rest, rest],
+                            seed=seed)
+    else:
+        parts = balanced(train, 4, seed=seed)
+    return [Batcher(p, batch_size, seed=seed) for p in parts], test
+
+
+def make_scheduler(batchers, split_point: int = 2, codec: str = "raw",
+                   seed: int = 0) -> FedFlyScheduler:
+    sched = FedFlyScheduler(
+        VGG5(), sgd(momentum=0.9), make_testbed_devices(batchers),
+        make_testbed_edges(), split_point=split_point,
+        lr_schedule=constant(0.01), link=WIFI_75MBPS,
+        migration_codec=codec, seed=seed)
+    sched.initialize()
+    return sched

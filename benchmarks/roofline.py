@@ -1,0 +1,106 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × input shape) on the single-pod 16x16 mesh:
+
+  compute term     = HLO_FLOPs_global / (chips × peak_bf16)
+  memory term      = HLO_bytes_global / (chips × HBM_bw)
+  collective term  = collective_bytes_global / (chips × link_bw)
+
+All three in seconds per step; the largest is the bottleneck. FLOPs and
+bytes come from the loop-corrected HLO walk (launch/hlo_analysis —
+XLA's cost_analysis counts while bodies once, undercounting a 40-layer
+16-microbatch step ~600x). MODEL_FLOPS = 6·N·D (train) or 2·N_active·D
+(prefill/decode); the ratio MODEL_FLOPS / HLO_FLOPs measures how much of
+the compiled compute is "useful" (remat and attention push it < 1).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.configs.base import INPUT_SHAPES
+from repro.launch.mesh import TPU_V5E
+from repro.models.registry import get_config
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * cfg.num_active_params() * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * cfg.num_active_params() * tokens
+    # decode: one token per sequence
+    return 2.0 * cfg.num_active_params() * shape.global_batch
+
+
+def load_rows(dirname: str, mesh: str = "16x16") -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirname, f"*__{mesh}.json"))):
+        d = json.load(open(f))
+        if not d.get("ok"):
+            continue
+        n = d["devices"]
+        corr = d["corrected"]
+        hw = TPU_V5E
+        comp = corr["flops_per_device"] / hw.peak_flops_bf16
+        mem = corr["hbm_bytes_proxy_per_device"] / hw.hbm_bandwidth
+        coll = corr.get("collective_wire_bytes_per_device",
+                        corr["collective_bytes_per_device"]) \
+            / hw.ici_bandwidth
+        mf = model_flops(d["arch"], d["shape"])
+        terms = {"compute": comp, "memory": mem, "collective": coll}
+        bottleneck = max(terms, key=terms.get)
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "devices": n,
+            "compute_s": comp, "memory_s": mem, "collective_s": coll,
+            "bottleneck": bottleneck,
+            "model_flops": mf,
+            "hlo_flops_global": corr["flops_per_device"] * n,
+            "useful_ratio": mf / max(corr["flops_per_device"] * n, 1.0),
+            "mem_gb": d["memory"]["peak_per_device_gb"],
+            "mem_gb_tpu": d["memory"].get("tpu_corrected_peak_gb"),
+        })
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    rows = load_rows(args.dir, args.mesh)
+    if not rows:
+        print(f"no dry-run artifacts in {args.dir} for mesh {args.mesh} — "
+              f"run `python -m repro.launch.dryrun --all` first")
+        return
+    print(f"# Roofline terms per step, {args.mesh} mesh "
+          f"({rows[0]['devices']} chips, v5e: 197TF bf16, 819GB/s HBM, "
+          f"50GB/s ICI)")
+    hdr = (f"{'arch':18s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s}"
+           f" {'collect_s':>10s} {'bound':>10s} {'6ND/HLO':>8s}"
+           f" {'GB/dev':>7s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']:18s} {r['shape']:12s} {r['compute_s']:10.4f} "
+              f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+              f"{r['bottleneck']:>10s} {r['useful_ratio']:8.3f} "
+              f"{r['mem_gb']:7.2f}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"\nwrote {args.json_out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Run every benchmark (one per paper table/figure) with CPU-budget
+defaults, plus the roofline table when dry-run artifacts exist.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick|--full]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smallest datasets (CI smoke)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale rounds (slow on CPU)")
+    args = ap.parse_args(argv)
+
+    n_train = 1600 if args.quick else 4000
+    acc_rounds = 6 if args.quick else (100 if args.full else 20)
+    acc_period = 2 if args.quick else (10 if args.full else 5)
+
+    from benchmarks import (bench_accuracy, bench_overhead,
+                            bench_split_points, bench_training_time,
+                            roofline)
+
+    t0 = time.time()
+    print("=" * 72)
+    bench_training_time.main(["--n-train", str(n_train)])
+    print("\n" + "=" * 72)
+    bench_split_points.main(["--n-train", str(n_train)])
+    print("\n" + "=" * 72)
+    bench_overhead.main([])
+    print("\n" + "=" * 72)
+    bench_accuracy.main(["--n-train", str(n_train),
+                         "--rounds", str(acc_rounds),
+                         "--period", str(acc_period)])
+    print("\n" + "=" * 72)
+    roofline.main([])
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

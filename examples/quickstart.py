@@ -1,0 +1,60 @@
+"""Quickstart: the FedFly mechanism in ~60 lines.
+
+Split a model between a device and an edge server, train a few steps,
+checkpoint the server stage, "migrate" it to another edge, and resume —
+verifying the resumed training is bit-identical to never migrating.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import split
+from repro.core.checkpoint import EdgeCheckpoint
+from repro.core.migration import MigrationExecutor
+from repro.models.vgg import VGG5
+from repro.optim.optimizers import sgd
+
+model = VGG5()
+params = model.init(jax.random.PRNGKey(0))
+opt = sgd(momentum=0.9)
+
+# 1. split at SP2 (paper default): conv1-2 on device, rest on edge
+dev, srv = split.partition_params(model, params, sp := 2)
+dev_opt, srv_opt = opt.init(dev), opt.init(srv)
+
+batch = {
+    "images": jax.random.normal(jax.random.PRNGKey(1), (100, 32, 32, 3)),
+    "labels": jax.random.randint(jax.random.PRNGKey(2), (100,), 0, 10),
+}
+
+@jax.jit
+def step(dev, srv, dev_opt, srv_opt):
+    loss, g_dev, g_srv = split.split_value_and_grad(model, dev, srv,
+                                                    batch, sp)
+    dev, dev_opt = opt.update(g_dev, dev_opt, dev, 0.01)
+    srv, srv_opt = opt.update(g_srv, srv_opt, srv, 0.01)
+    return dev, srv, dev_opt, srv_opt, loss
+
+# 2. train three batches on edge-A
+for i in range(3):
+    dev, srv, dev_opt, srv_opt, loss = step(dev, srv, dev_opt, srv_opt)
+    print(f"batch {i}: loss={float(loss):.4f}")
+
+# 3. device announces a move -> edge-A checkpoints its server stage
+ck = EdgeCheckpoint(client_id="device-0", round_idx=0, epoch=0,
+                    batch_idx=3, split_point=sp, server_params=srv,
+                    optimizer_state=srv_opt, loss=float(loss))
+restored, report = MigrationExecutor().migrate(ck, "edge-A", "edge-B")
+print(f"migrated {report.nbytes/1e6:.2f} MB in {report.sim_total_s:.3f}s "
+      f"(simulated 75 Mbps link)")
+
+# 4. resume on edge-B — identical to having never moved
+srv2 = jax.tree.map(jnp.asarray, restored.server_params)
+srv_opt2 = jax.tree.map(jnp.asarray, restored.optimizer_state)
+a = step(dev, srv, dev_opt, srv_opt)
+b = step(dev, srv2, dev_opt, srv_opt2)
+same = all(bool(jnp.array_equal(x, y))
+           for x, y in zip(jax.tree.leaves(a[:2]), jax.tree.leaves(b[:2])))
+print(f"resumed training bit-identical: {same}")
+assert same

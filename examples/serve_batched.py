@@ -1,0 +1,19 @@
+"""Serve a (reduced) assigned architecture with batched prefill+decode,
+demonstrating the inference path the decode dry-run shapes lower.
+
+  PYTHONPATH=src python examples/serve_batched.py --arch hymba-1.5b
+"""
+import argparse
+import subprocess
+import sys
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen3-0.6b")
+ap.add_argument("--gen", type=int, default=12)
+args = ap.parse_args()
+
+# the serve driver is the public entry point; this example just shows
+# the invocation (and keeps a single source of truth for serving logic)
+sys.exit(subprocess.call(
+    [sys.executable, "-m", "repro.launch.serve", "--arch", args.arch,
+     "--batch", "4", "--prompt-len", "32", "--gen", str(args.gen)]))

@@ -1,0 +1,3 @@
+"""FedFly on JAX/TPU: edge-FL split training with mid-round migration,
+scaled to multi-pod TPU meshes. See README.md / DESIGN.md."""
+__version__ = "1.0.0"

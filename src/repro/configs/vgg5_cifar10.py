@@ -1,0 +1,16 @@
+"""VGG-5 on CIFAR-10 — the paper's own evaluation setup (§V.A).
+
+Not part of the assigned LLM pool; registered for the testbed runtime.
+The model lives in ``repro.models.vgg`` (heterogeneous conv/fc layer
+list with the paper's SP1/SP2/SP3 split points); the training setup is
+batch 100, SGD lr=0.01 momentum=0.9, FedAvg each round.
+"""
+TRAIN = {
+    "batch_size": 100,
+    "lr": 0.01,
+    "momentum": 0.9,
+    "num_devices": 4,            # Pi3_1, Pi3_2, Pi4_1, Pi4_2
+    "num_edges": 2,
+    "link_mbps": 75.0,
+    "default_split": "SP2",
+}

@@ -1,0 +1,4 @@
+"""FedFly core: split training, FedAvg, checkpointing, migration,
+mobility traces, and the synchronous round scheduler."""
+from repro.core import (checkpoint, fedavg, migration, mobility, scheduler,  # noqa: F401
+                        serve_migration, split)

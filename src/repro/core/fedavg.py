@@ -1,0 +1,67 @@
+"""Federated Averaging (McMahan et al. 2017) — the paper's aggregation.
+
+Two renderings of the same math:
+  * ``fedavg``            — list-of-pytrees weighted mean (testbed runtime,
+                            central-server Step 5 of Fig. 1).
+  * ``fedavg_stacked``    — jit-friendly mean over a leading ``num_edges``
+                            axis; on the production mesh that axis is
+                            sharded over ``pod`` so XLA renders the average
+                            as the cross-pod all-reduce (DESIGN.md §4).
+
+Weights are client dataset sizes (the paper's "weighted average using the
+parameter updates"). The Pallas streaming-aggregation kernel
+(`repro.kernels.fedavg_agg`) is the TPU hot-path for ``fedavg_stacked``.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def normalize_weights(weights: Sequence[float]) -> jnp.ndarray:
+    w = jnp.asarray(weights, jnp.float32)
+    total = jnp.sum(w)
+    return w / jnp.maximum(total, 1e-12)
+
+
+def fedavg(param_trees: List[Params], weights: Sequence[float]) -> Params:
+    """Weighted average of a list of identical-structure pytrees."""
+    assert len(param_trees) == len(weights) and param_trees
+    w = normalize_weights(weights)
+
+    def avg(*leaves):
+        acc = jnp.zeros_like(leaves[0], dtype=jnp.float32)
+        for wi, leaf in zip(w, leaves):
+            acc = acc + wi * leaf.astype(jnp.float32)
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *param_trees)
+
+
+def fedavg_stacked(stacked: Params, weights: jax.Array) -> Params:
+    """stacked: every leaf has leading axis E (num edges/clients);
+    weights: (E,) unnormalized. Returns the weighted average tree."""
+    w = weights.astype(jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-12)
+
+    def avg(leaf):
+        wf = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(leaf.astype(jnp.float32) * wf, axis=0).astype(leaf.dtype)
+
+    return jax.tree.map(avg, stacked)
+
+
+def broadcast_stacked(tree: Params, num: int) -> Params:
+    """Replicate a global tree onto a leading edge axis (Step 6 of Fig. 1)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (num,) + x.shape), tree)
+
+
+def tree_weighted_delta(new: Params, old: Params) -> Params:
+    """new - old, in fp32 (used by delta-codec migration payloads)."""
+    return jax.tree.map(
+        lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32), new, old)

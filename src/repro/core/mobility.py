@@ -1,0 +1,93 @@
+"""Mobility traces: when which device moves between which edge servers.
+
+The paper's experiments move one device (i) after 50% / 90% of training
+(§V-B, Fig. 3) and (ii) at every 10th round of 100 (Fig. 4). We model a
+trace as a list of ``MoveEvent``s; generators cover the paper's patterns
+plus a Poisson arrival process for the "frequency of device mobility"
+factor (§III).
+
+``fraction`` ∈ [0, 1) is the position *inside the round's local epoch* at
+which the device disconnects (the paper's "after 50%/90% of the training
+is completed" maps to fraction=0.5/0.9 of the device's batches).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class MoveEvent:
+    round_idx: int          # FL round during which the move happens
+    client_id: str
+    src_edge: str
+    dst_edge: str
+    fraction: float = 0.0   # progress through the round's batches at move
+
+
+def move_at_round(client_id: str, src: str, dst: str, round_idx: int,
+                  fraction: float = 0.0) -> List[MoveEvent]:
+    return [MoveEvent(round_idx, client_id, src, dst, fraction)]
+
+
+def move_at_fraction(client_id: str, src: str, dst: str, total_rounds: int,
+                     training_fraction: float,
+                     round_fraction: float = 0.0) -> List[MoveEvent]:
+    """Paper Fig. 3: move after ``training_fraction`` (0.5 / 0.9) of the
+    full training run."""
+    r = min(int(round(training_fraction * total_rounds)), total_rounds - 1)
+    return [MoveEvent(r, client_id, src, dst, round_fraction)]
+
+
+def periodic_moves(client_id: str, edges: Sequence[str], total_rounds: int,
+                   period: int, fraction: float = 0.0) -> List[MoveEvent]:
+    """Paper Fig. 4: move every ``period`` rounds, ping-ponging between
+    edge servers."""
+    events, cur = [], 0
+    for r in range(period, total_rounds, period):
+        nxt = (cur + 1) % len(edges)
+        events.append(MoveEvent(r, client_id, edges[cur], edges[nxt],
+                                fraction))
+        cur = nxt
+    return events
+
+
+def poisson_moves(client_ids: Sequence[str], edges: Sequence[str],
+                  total_rounds: int, rate_per_round: float,
+                  seed: int = 0) -> List[MoveEvent]:
+    """Random mobility: each round each client moves with prob
+    1-exp(-rate); destination is a uniform different edge."""
+    rng = np.random.default_rng(seed)
+    location = {c: edges[i % len(edges)] for i, c in enumerate(client_ids)}
+    events: List[MoveEvent] = []
+    p = 1.0 - np.exp(-rate_per_round)
+    for r in range(total_rounds):
+        for c in client_ids:
+            if rng.random() < p:
+                others = [e for e in edges if e != location[c]]
+                dst = others[rng.integers(len(others))]
+                events.append(MoveEvent(r, c, location[c], dst,
+                                        float(rng.random())))
+                location[c] = dst
+    return events
+
+
+class MobilityTrace:
+    """Indexable trace; the scheduler polls it once per (round, client)."""
+
+    def __init__(self, events: Sequence[MoveEvent]):
+        self._by_round = {}
+        for e in events:
+            self._by_round.setdefault(e.round_idx, []).append(e)
+        self.events = list(events)
+
+    def moves_in_round(self, round_idx: int) -> List[MoveEvent]:
+        return list(self._by_round.get(round_idx, []))
+
+    def move_for(self, round_idx: int, client_id: str) -> Optional[MoveEvent]:
+        for e in self._by_round.get(round_idx, []):
+            if e.client_id == client_id:
+                return e
+        return None

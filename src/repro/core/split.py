@@ -1,0 +1,233 @@
+"""Split-point partitioning and the split training step.
+
+SplitFed/FedFly semantics (paper §II, §IV): the *device stage* holds the
+first ``sp`` layers (plus the embedding), the *edge-server stage* holds the
+remaining layers (plus the head). A training step is:
+
+  device forward  -> smashed data (split-layer activations)
+  server forward  -> loss
+  server backward -> grads of server params + grad of smashed data
+  device backward -> grads of device params
+
+We express both halves as pure functions and compose them with ``jax.vjp``
+across the smashed-data boundary, so ``split_value_and_grad`` is *exactly*
+the chain rule of the monolithic step — this is tested as the
+"split-point equivalence" property (for any sp, same loss and grads).
+
+Works for every registered architecture:
+  - TransformerLM / EncDecLM: layers are stacked on a leading L axis, so a
+    stage is a leading-axis slice of the same pytree.
+  - VGG5 (the paper's model): layers are a heterogeneous list, a stage is
+    a list slice. Paper split points SP1/SP2/SP3 map to sp=1/2/3.
+
+Tied embeddings (gemma2, minicpm, internvl2): the table is needed on both
+stages (device: token lookup; server: output head). Each stage carries its
+own copy; ``merge_grads`` sums the two contributions — identical to the
+monolithic gradient of the shared table.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import TransformerLM, layer_windows
+from repro.models.encdec import EncDecLM
+from repro.models.vgg import VGG5
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# pytree slicing helpers (stacked leading-axis layers)
+# ---------------------------------------------------------------------------
+
+def tree_slice(tree, lo: int, hi: int):
+    return jax.tree.map(lambda x: x[lo:hi], tree)
+
+
+def tree_concat(a, b):
+    return jax.tree.map(lambda x, y: jnp.concatenate([x, y], axis=0), a, b)
+
+
+# ---------------------------------------------------------------------------
+# partition / merge
+# ---------------------------------------------------------------------------
+
+def partition_params(model, params, sp: int) -> Tuple[Params, Params]:
+    """Split full-model params into (device_stage, server_stage)."""
+    if isinstance(model, VGG5):
+        return list(params[:sp]), list(params[sp:])
+    cfg = model.cfg
+    L = cfg.num_layers
+    assert 0 < sp < L, f"split point {sp} out of range (0, {L})"
+    dev: Params = {"embed": params["embed"],
+                   "layers": tree_slice(params["layers"], 0, sp)}
+    srv: Params = {"layers": tree_slice(params["layers"], sp, L),
+                   "final_norm": params["final_norm"]}
+    if isinstance(model, EncDecLM):
+        dev["encoder"] = params["encoder"]
+    if cfg.tie_embeddings:
+        srv["embed_head"] = params["embed"]
+    else:
+        srv["lm_head"] = params["lm_head"]
+    return dev, srv
+
+
+def merge_params(model, dev: Params, srv: Params) -> Params:
+    """Inverse of partition_params (tied embed: the device copy wins)."""
+    if isinstance(model, VGG5):
+        return list(dev) + list(srv)
+    cfg = model.cfg
+    p: Params = {"embed": dev["embed"],
+                 "layers": tree_concat(dev["layers"], srv["layers"]),
+                 "final_norm": srv["final_norm"]}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = srv["lm_head"]
+    if isinstance(model, EncDecLM):
+        p["encoder"] = dev["encoder"]
+    return p
+
+
+def merge_grads(model, g_dev: Params, g_srv: Params) -> Params:
+    """Merge stage grads into a full-model grad tree. Tied-embedding
+    contributions from both stages are summed (= monolithic grad)."""
+    if isinstance(model, VGG5):
+        return list(g_dev) + list(g_srv)
+    merged = merge_params(model, g_dev, g_srv)
+    if model.cfg.tie_embeddings:
+        merged["embed"] = g_dev["embed"] + g_srv["embed_head"]
+    return merged
+
+
+# ---------------------------------------------------------------------------
+# stage forward functions
+# ---------------------------------------------------------------------------
+
+def _positions(x: jax.Array) -> jax.Array:
+    B, S = x.shape[:2]
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+
+def device_forward(model, dev: Params, batch: Params, sp: int) -> Params:
+    """Device stage: embedding + layers[:sp]. Returns the smashed-data
+    pytree sent over the network (paper: "smashed data")."""
+    if isinstance(model, VGG5):
+        return {"h": model.apply_range(dev, batch["images"], 0, sp)}
+    cfg = model.cfg
+    windows = jnp.asarray(layer_windows(cfg)[:sp])
+    smashed: Params = {}
+    if isinstance(model, EncDecLM):
+        enc_out = model.encode(dev, batch["frames"])
+        x = model.embed_tokens(dev, batch["tokens"])
+        positions = _positions(x)
+        x = model.apply_dec_layers(dev["layers"], x, enc_out,
+                                   positions=positions, windows=windows)
+        smashed["enc"] = enc_out
+    else:
+        x = model.embed_tokens(dev, batch["tokens"],
+                               batch.get("vision_embeds"))
+        positions = _positions(x)
+        x, aux = model.apply_layers(dev["layers"], x, positions=positions,
+                                    windows=windows, training=True)
+        if cfg.is_moe:
+            smashed["moe_loss"] = aux["moe_loss"]   # (sp,) device-side aux
+    smashed["h"] = x
+    return smashed
+
+
+def server_loss(model, srv: Params, smashed: Params, batch: Params,
+                sp: int) -> jax.Array:
+    """Server stage: layers[sp:] + head + loss. The MoE aux loss averages
+    device-side (rides in the smashed payload) and server-side terms, so
+    the total equals the monolithic loss."""
+    if isinstance(model, VGG5):
+        logits = _vgg_tail(model, srv, smashed["h"], sp)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.take_along_axis(lp, batch["labels"][:, None],
+                                    axis=-1).mean()
+    cfg = model.cfg
+    L = cfg.num_layers
+    windows = jnp.asarray(layer_windows(cfg)[sp:])
+    x = smashed["h"]
+    positions = _positions(x)
+    head_params = dict(srv)
+    if cfg.tie_embeddings:
+        head_params["embed"] = srv["embed_head"]
+    if isinstance(model, EncDecLM):
+        x = model.apply_dec_layers(srv["layers"], x, smashed["enc"],
+                                   positions=positions, windows=windows)
+        logits = model.logits(head_params, x)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.take_along_axis(lp, batch["labels"][..., None],
+                                    axis=-1)[..., 0].mean()
+    x, aux = model.apply_layers(srv["layers"], x, positions=positions,
+                                windows=windows, training=True)
+    logits = model.logits(head_params, x)
+    if cfg.vision_prefix > 0:
+        logits = logits[:, cfg.vision_prefix:]
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(lp, batch["labels"][..., None],
+                               axis=-1)[..., 0].mean()
+    if cfg.is_moe:
+        total_moe = (jnp.sum(smashed["moe_loss"])
+                     + jnp.sum(aux["moe_loss"])) / L
+        nll = nll + 0.01 * total_moe
+    return nll
+
+
+def _vgg_tail(model: VGG5, srv, h, sp: int) -> jax.Array:
+    x = h
+    for i, p in enumerate(srv):
+        x = model.apply_layer(sp + i, p, x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# the split training step
+# ---------------------------------------------------------------------------
+
+def split_value_and_grad(model, dev: Params, srv: Params, batch: Params,
+                         sp: int) -> Tuple[jax.Array, Params, Params]:
+    """Loss + per-stage grads via two chained VJPs across the smashed-data
+    boundary — the exact computation FedFly distributes across device and
+    edge server. Returns (loss, g_dev, g_srv)."""
+    smashed, dev_vjp = jax.vjp(
+        lambda dp: device_forward(model, dp, batch, sp), dev)
+    loss, srv_vjp = jax.vjp(
+        lambda sv, sm: server_loss(model, sv, sm, batch, sp), srv, smashed)
+    g_srv, g_smashed = srv_vjp(jnp.ones_like(loss))
+    (g_dev,) = dev_vjp(g_smashed)
+    return loss, g_dev, g_srv
+
+
+def monolithic_value_and_grad(model, params: Params, batch: Params
+                              ) -> Tuple[jax.Array, Params]:
+    """Reference: ordinary end-to-end grad of the unsplit model."""
+    return jax.value_and_grad(lambda p: model.loss(p, batch))(params)
+
+
+def smashed_bytes(model, dev: Params, batch_shape: Tuple[int, int],
+                  sp: int) -> int:
+    """Size of the smashed-data payload (device -> edge uplink per batch)."""
+    if isinstance(model, VGG5):
+        B = batch_shape[0]
+        spec = jax.eval_shape(
+            lambda d, im: device_forward(model, d, {"images": im}, sp),
+            dev, jax.ShapeDtypeStruct((B, 32, 32, 3), jnp.float32))
+    else:
+        B, S = batch_shape
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        cfg = model.cfg
+        if cfg.vision_prefix:
+            batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.vision_prefix, cfg.d_model), jnp.float32)
+        if cfg.encoder_layers:
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        spec = jax.eval_shape(
+            lambda d, b: device_forward(model, d, b, sp), dev, batch)
+    return sum(np.prod(s.shape) * s.dtype.itemsize
+               for s in jax.tree.leaves(spec))

@@ -1,0 +1,47 @@
+"""Client data partitioning: balanced / fraction-based imbalanced (the
+paper gives one mobile device 20%/25%/50% of the data) / Dirichlet
+label-skew (the standard non-IID FL benchmark)."""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.data.datasets import ImageDataset, NUM_CLASSES
+
+
+def balanced(ds: ImageDataset, num_clients: int, seed: int = 0
+             ) -> List[ImageDataset]:
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(ds))
+    return [ds.subset(part) for part in np.array_split(idx, num_clients)]
+
+
+def by_fraction(ds: ImageDataset, fractions: Sequence[float], seed: int = 0
+                ) -> List[ImageDataset]:
+    """fractions per client, must sum to ≤ 1. Paper §V-B: the mobile device
+    holds 20%/25%/50% of the total data."""
+    assert sum(fractions) <= 1.0 + 1e-6
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(ds))
+    out, lo = [], 0
+    for f in fractions:
+        hi = lo + int(round(f * len(ds)))
+        out.append(ds.subset(idx[lo:hi]))
+        lo = hi
+    return out
+
+
+def dirichlet(ds: ImageDataset, num_clients: int, alpha: float = 0.5,
+              seed: int = 0) -> List[ImageDataset]:
+    rng = np.random.default_rng(seed)
+    parts: Dict[int, list] = {i: [] for i in range(num_clients)}
+    for c in range(NUM_CLASSES):
+        cls_idx = np.where(ds.labels == c)[0]
+        rng.shuffle(cls_idx)
+        probs = rng.dirichlet([alpha] * num_clients)
+        bounds = (np.cumsum(probs) * len(cls_idx)).astype(int)[:-1]
+        for i, part in enumerate(np.split(cls_idx, bounds)):
+            parts[i].extend(part.tolist())
+    return [ds.subset(np.asarray(sorted(parts[i]), dtype=np.int64))
+            for i in range(num_clients)]

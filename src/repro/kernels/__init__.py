@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+flash_attention — blocked causal/sliding-window GQA attention
+wkv6            — RWKV6 chunked data-dependent-decay recurrence
+fedavg_agg      — streaming weighted parameter aggregation (FedAvg)
+int8_codec      — blockwise int8 quantize/dequantize (migration payloads)
+
+Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with jnp fallback), ref.py (pure-jnp oracle). All validated in
+interpret=True mode on CPU; the TPU path is the same kernel compiled.
+"""

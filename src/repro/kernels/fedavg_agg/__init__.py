@@ -1,0 +1,3 @@
+from repro.kernels.fedavg_agg.fedavg_agg import fedavg_agg  # noqa: F401
+from repro.kernels.fedavg_agg.ops import fedavg_tree  # noqa: F401
+from repro.kernels.fedavg_agg.ref import fedavg_agg_ref  # noqa: F401

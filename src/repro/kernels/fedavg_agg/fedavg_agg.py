@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: streaming weighted parameter aggregation (FedAvg).
+
+The central server averages E client models (paper Step 5). For
+multi-GB parameter vectors the aggregation is bandwidth-bound; this
+kernel streams (E, BLOCK) tiles HBM->VMEM, reduces in fp32 on the VPU,
+and writes one BLOCK tile back — one pass over the data, no (E, N)
+fp32 temporary like the naive jnp path materializes.
+
+Grid: (N / BLOCK,). Weights are pre-normalized scalars in SMEM-like
+(1, E) VMEM; the block reduce is a (E, BLOCK) x (E,) contraction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4096
+
+
+def _agg_kernel(w_ref, x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (E, BLOCK)
+    w = w_ref[...].astype(jnp.float32)          # (1, E)
+    o_ref[...] = (w @ x)[0].astype(o_ref.dtype)  # (BLOCK,)
+
+
+def fedavg_agg(stacked: jax.Array, weights: jax.Array, *,
+               block: int = BLOCK, interpret: bool = True) -> jax.Array:
+    """stacked: (E, N); weights: (E,) unnormalized -> (N,)."""
+    E, N = stacked.shape
+    w = weights.astype(jnp.float32)
+    w = (w / jnp.maximum(w.sum(), 1e-12)).reshape(1, E)
+    pad = (-N) % block
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    Np = N + pad
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=(Np // block,),
+        in_specs=[
+            pl.BlockSpec((1, E), lambda i: (0, 0)),
+            pl.BlockSpec((E, block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Np,), stacked.dtype),
+        interpret=interpret,
+    )(w, stacked)
+    return out[:N]

@@ -1,0 +1,22 @@
+"""Jit'd FedAvg aggregation over whole pytrees (kernel per flat block)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fedavg_agg.fedavg_agg import fedavg_agg
+from repro.kernels.fedavg_agg.ref import fedavg_agg_ref
+
+
+def fedavg_tree(stacked_tree, weights, *, use_pallas: bool = True,
+                interpret: bool = True):
+    """Every leaf has leading axis E; returns the weighted-average tree."""
+    def agg(leaf):
+        E = leaf.shape[0]
+        flat = leaf.reshape(E, -1)
+        if use_pallas and flat.shape[1] >= 1024:
+            out = fedavg_agg(flat, weights, interpret=interpret)
+        else:
+            out = fedavg_agg_ref(flat, weights)
+        return out.reshape(leaf.shape[1:])
+    return jax.tree.map(agg, stacked_tree)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: weighted average over a stacked client/edge axis."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fedavg_agg_ref(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """stacked: (E, N) flat parameter block; weights: (E,) unnormalized."""
+    w = weights.astype(jnp.float32)
+    w = w / jnp.maximum(w.sum(), 1e-12)
+    return jnp.einsum("e,en->n", w,
+                      stacked.astype(jnp.float32)).astype(stacked.dtype)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Plain materialized causal/sliding-window GQA attention, fp32 softmax.
+Shapes follow the kernel convention:
+  q: (B, H, S, hd)   k/v: (B, KV, T, hd)   with H = KV · rep.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BIG_NEG = -2.3819763e38
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  softcap: float = 0.0) -> jax.Array:
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    rep = H // KV
+    qg = q.reshape(B, KV, rep, S, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bgrsh,bgth->bgrst", qg, kf) / jnp.sqrt(
+        jnp.float32(hd))
+    if softcap and softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    T = k.shape[2]
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    dist = qpos - kpos
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok = ok & (dist >= 0)
+    if window and window > 0:
+        ok = ok & (dist < window)
+    logits = jnp.where(ok[None, None, None], logits, BIG_NEG)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrst,bgth->bgrsh", w, vf)
+    return out.reshape(B, H, S, hd).astype(q.dtype)

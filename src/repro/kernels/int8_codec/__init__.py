@@ -1,0 +1,3 @@
+from repro.kernels.int8_codec.int8_codec import dequantize, quantize  # noqa: F401
+from repro.kernels.int8_codec.ops import quantize_leaf, roundtrip  # noqa: F401
+from repro.kernels.int8_codec.ref import dequantize_ref, quantize_ref  # noqa: F401

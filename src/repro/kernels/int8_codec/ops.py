@@ -1,0 +1,28 @@
+"""Round-trip helpers for migration payloads."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.int8_codec.int8_codec import BLOCK, ROWS, dequantize, quantize
+from repro.kernels.int8_codec.ref import dequantize_ref, quantize_ref
+
+
+def quantize_leaf(x, *, use_pallas: bool = True, interpret: bool = True):
+    flat = x.reshape(-1)
+    if use_pallas:
+        return quantize(flat, interpret=interpret)
+    return quantize_ref(flat)
+
+
+def roundtrip(x, *, use_pallas: bool = True, interpret: bool = True):
+    """Quantize + dequantize one tensor (error-analysis helper)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    if use_pallas:
+        q, s = quantize(flat, interpret=interpret)
+        out = dequantize(q, s, n, x.dtype, interpret=interpret)
+    else:
+        q, s = quantize_ref(flat)
+        out = dequantize_ref(q, s, n, dtype=x.dtype)
+    return out.reshape(x.shape)

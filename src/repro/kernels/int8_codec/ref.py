@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: blockwise symmetric int8 quantization.
+
+Per BLOCK-element block: scale = max|x| / 127, q = round(x / scale).
+Matches the migration payload codec (runtime/serialization int8) but
+blockwise, which bounds the quantization error by the *local* dynamic
+range — tighter than the per-leaf scale the CPU codec uses.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BLOCK = 1024
+
+
+def quantize_ref(x: jnp.ndarray, block: int = BLOCK):
+    n = x.shape[0]
+    pad = (-n) % block
+    xf = jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(xf), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1)[:n + pad], scale
+
+
+def dequantize_ref(q: jnp.ndarray, scale: jnp.ndarray, n: int,
+                   block: int = BLOCK, dtype=jnp.float32):
+    x = q.reshape(-1, block).astype(jnp.float32) * scale[:, None]
+    return x.reshape(-1)[:n].astype(dtype)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the WKV6 (RWKV "Finch") recurrence.
+
+State S_t ∈ R^{K×V} per head; per token t with r_t, k_t, v_t ∈ R^K/R^V,
+data-dependent decay w_t ∈ (0,1)^K and bonus u ∈ R^K:
+
+    y_t = r_t · (S_t + u ⊙ k_t v_tᵀ)
+    S_{t+1} = diag(w_t) S_t + k_t v_tᵀ
+
+Shapes: r/k/w (B, T, H, K); v (B, T, H, V); u (H, K).
+Returns (y (B, T, H, V), final state (B, H, K, V)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, state0=None):
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    if state0 is None:
+        state0 = jnp.zeros((B, H, K, V), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp           # (B, H, K/V)
+        kv = kt[..., :, None] * vt[..., None, :]        # (B, H, K, V)
+        y = jnp.einsum("bhk,bhkv->bhv", rt,
+                       S + uf[None, :, :, None] * kv)
+        S = S * wt[..., None] + kv
+        return S, y
+
+    inputs = tuple(jnp.moveaxis(x, 1, 0) for x in (rf, kf, vf, wf))
+    S, ys = jax.lax.scan(step, state0, inputs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), S

@@ -1,0 +1,2 @@
+"""Production launch layer: meshes, sharding rules, jit-able steps,
+multi-pod dry-run, train/serve drivers."""

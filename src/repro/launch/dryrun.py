@@ -1,0 +1,353 @@
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+combination against the production mesh, without allocating a single
+model array (ShapeDtypeStruct stand-ins everywhere).
+
+The two lines above MUST precede any other import — jax locks the device
+count on first init, and the dry-run needs 512 placeholder host devices
+for the (2, 16, 16) production mesh. Do not import this module from tests
+or benchmarks; they must see 1 device.
+
+For every combination this emits a JSON artifact under results/dryrun/
+with:
+  memory_analysis  — per-device argument/output/temp bytes (proves the
+                     16 GB/chip HBM budget holds)
+  cost_analysis    — per-device HLO FLOPs + bytes accessed
+  collectives      — bytes moved per collective kind, parsed from the
+                     post-SPMD HLO (all-gather / all-reduce /
+                     reduce-scatter / all-to-all / collective-permute)
+These feed EXPERIMENTS.md §Dry-run and the §Roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"  # noqa: E402
+# ^ MUST run before any jax import — jax locks device count on first init.
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import INPUT_SHAPES, InputShape
+from repro.launch import hlo_analysis
+from repro.launch import sharding as sh
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.launch.plans import ExecPlan, apply_plan, plan_for
+from repro.models import hints
+from repro.models.registry import ARCH_IDS, build_model, get_config
+from repro.optim.optimizers import sgd
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# collective-bytes parser (post-SPMD HLO)
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum byte sizes of every tensor literal in an HLO type string
+    (handles tuple types)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Per-device bytes produced by each collective kind: the result-type
+    size on the lhs of ``= <type> <op>(...)``. Ops inside while-loop
+    bodies are counted once (trip counts are not expanded; §Roofline
+    methodology multiplies scan-internal collectives analytically where
+    it matters). ``-start`` async forms are counted; ``-done`` is not."""
+    out: Dict[str, Any] = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        eq = s.find("= ")
+        if eq < 0:
+            continue
+        rhs = s[eq + 2:]
+        for kind in _COLLECTIVES:
+            hit = None
+            for form in (f" {kind}(", f" {kind}-start("):
+                idx = rhs.find(form)
+                if idx > 0:
+                    hit = rhs[:idx]
+                    break
+            if hit is not None:
+                out[kind]["count"] += 1
+                out[kind]["bytes"] += _shape_bytes(hit)
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+_CONVERT_RE = re.compile(
+    r"= f32\[([\d,]+)\][^ ]* convert\(%([\w.\-]+)\)")
+
+
+def _bf16_upcast_bytes(hlo_text: str) -> int:
+    """Total bytes of large fp32 buffers that exist only because the CPU
+    backend upcasts bf16 values (float-normalization). Distinct buffer
+    shapes are counted once per convert site, deduplicated by operand."""
+    types: Dict[str, str] = {}
+    for mm in re.finditer(r"%([\w.\-]+) = (bf16\[[\d,]*\])", hlo_text):
+        types[mm.group(1)] = mm.group(2)
+    seen = set()
+    total = 0
+    for mm in _CONVERT_RE.finditer(hlo_text):
+        dims, operand = mm.groups()
+        if operand in seen or not types.get(operand, "").startswith("bf16"):
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        if n * 4 >= (64 << 20):
+            seen.add(operand)
+            total += n * 4
+    return total
+
+
+# ---------------------------------------------------------------------------
+# one dry-run
+# ---------------------------------------------------------------------------
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               save_hlo: Optional[str] = None,
+               flags: tuple = (),
+               verbose: bool = True) -> Dict[str, Any]:
+    cfg0 = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    plan = plan_for(cfg0, shape)
+    if flags:
+        kw = {**plan.__dict__, "opt_flags": tuple(flags)}
+        for f in flags:
+            if f.startswith("mb") and f[2:].isdigit():
+                kw["microbatches"] = int(f[2:])
+            if f == "pbf16":
+                kw["param_dtype"] = "bfloat16"
+                kw["momentum_dtype"] = "float32"
+        plan = ExecPlan(**kw)
+    flags = plan.opt_flags
+    cfg = apply_plan(cfg0, plan)
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    E = mesh.devices.shape[0] if multi_pod else 0
+    n_dev = mesh.devices.size
+
+    t0 = time.time()
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "plan": {"microbatches": plan.microbatches,
+                 "param_dtype": plan.param_dtype,
+                 "compute_dtype": plan.compute_dtype,
+                 "window_override": plan.window_override,
+                 "opt_flags": list(flags),
+                 "note": plan.note},
+        "num_params": cfg.num_params(),
+        "num_active_params": cfg.num_active_params(),
+    }
+
+    p_spec = steps_lib.params_spec(model, num_edges=E)
+    p_sh = sh.param_shardings(p_spec, mesh, stacked_edge_axis=multi_pod,
+                              flags=flags)
+    g_sh = sh.grad_shardings(p_spec, mesh, stacked_edge_axis=multi_pod,
+                             flags=flags)
+    mb = plan.microbatches if shape.kind == "train" else 1
+    if multi_pod and mb > 1:
+        # per-edge batch is global/E; keep >= one full data-axis worth of
+        # rows per microbatch so the batch hints still shard
+        rows = shape.global_batch // max(E, 1)
+        mb = max(1, min(mb, rows // 16))
+    batch_spec = steps_lib.input_specs(cfg, shape, num_edges=E,
+                                       microbatches=mb)
+    b_sh = sh.batch_shardings(batch_spec, mesh, stacked_edge_axis=multi_pod,
+                              microbatched=mb > 1, flags=flags)
+
+    act_rules = sh.make_activation_rules(cfg, mesh, flags=flags)
+    with mesh, hints.rules_ctx(act_rules):
+        if shape.kind == "train":
+            opt = sgd(momentum=0.9,
+                      momentum_dtype=plan.momentum_dtype or plan.param_dtype)
+            o_spec = jax.eval_shape(opt.init, p_spec)
+            o_sh = sh.opt_state_shardings(o_spec, mesh,
+                                          stacked_edge_axis=multi_pod,
+                                          flags=flags)
+            step = (steps_lib.make_multipod_train_step(
+                        model, opt, mb, grad_shardings=g_sh)
+                    if multi_pod else
+                    steps_lib.make_train_step(
+                        model, opt, mb, grad_shardings=g_sh))
+            jitted = jax.jit(step,
+                             in_shardings=(p_sh, o_sh, b_sh, None),
+                             out_shardings=(p_sh, o_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(p_spec, o_spec, batch_spec,
+                                   SDS((), jnp.float32))
+        elif shape.kind == "prefill":
+            step = (steps_lib.make_multipod_prefill_step(model)
+                    if multi_pod else steps_lib.make_prefill_step(model))
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(p_spec, batch_spec)
+        else:  # decode
+            c_spec = steps_lib.cache_spec(model, shape, num_edges=E)
+            c_sh = sh.cache_shardings(c_spec, mesh,
+                                      stacked_edge_axis=multi_pod)
+            step = (steps_lib.make_multipod_serve_step(model)
+                    if multi_pod else steps_lib.make_serve_step(model))
+            jitted = jax.jit(step,
+                             in_shardings=(p_sh, c_sh, b_sh["tokens"], None),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(p_spec, c_spec, batch_spec["tokens"],
+                                   SDS((), jnp.int32))
+
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = parse_collective_bytes(hlo)
+    corrected = hlo_analysis.analyze(hlo)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+
+    result.update({
+        "corrected": {   # loop-aware (see launch/hlo_analysis.py)
+            "flops_per_device": corrected["flops"],
+            "hbm_bytes_proxy_per_device": corrected["op_bytes"],
+            "collective_bytes_per_device": corrected["coll"]["total_bytes"],
+            "collective_wire_bytes_per_device":
+                corrected["coll"]["total_wire_bytes"],
+            "collectives": {k: v for k, v in corrected["coll"].items()
+                            if isinstance(v, dict)},
+        },
+        "lower_s": round(t_lower - t0, 2),
+        "compile_s": round(t_compile - t_lower, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {"flops_per_device": cost.get("flops", 0.0),
+                 "bytes_accessed_per_device": cost.get("bytes accessed", 0.0)},
+        "collectives": coll,
+        "devices": n_dev,
+        "ok": True,
+    })
+    m = result["memory"]
+    unaliased_out = max(0, int(m["output_bytes"] or 0)
+                        - int(m["alias_bytes"] or 0))
+    peak = (int(m["argument_bytes"] or 0) + int(m["temp_bytes"] or 0)
+            + unaliased_out)
+    result["memory"]["peak_per_device_gb"] = round(peak / 1e9, 3)
+    # The CPU backend's float-normalization pass materializes fp32 copies
+    # of large bf16 buffers (CPUs have no bf16 ALUs); a TPU compile keeps
+    # them bf16. Estimate that inflation from `convert(bf16->f32)` ops on
+    # >64 MB buffers and report a TPU-corrected peak alongside the
+    # measured one (EXPERIMENTS.md §Dry-run documents the methodology).
+    upcast = _bf16_upcast_bytes(hlo)
+    floor = int(m["argument_bytes"] or 0) + unaliased_out
+    result["memory"]["cpu_bf16_upcast_gb"] = round(upcast / 1e9, 3)
+    # lower-bounded by arguments+outputs (always live); when the upcast
+    # estimate exceeds measured temps the convert sites were not all
+    # simultaneously live and the correction saturates at that floor.
+    result["memory"]["tpu_corrected_peak_gb"] = round(
+        max(float(floor), peak - upcast / 2) / 1e9, 3)
+    if verbose:
+        print(f"[dryrun] {arch:18s} {shape_name:12s} "
+              f"mesh={result['mesh']:8s} "
+              f"mem/dev={result['memory']['peak_per_device_gb']:7.3f}GB "
+              f"flops/dev={corrected['flops']:.3e} "
+              f"coll/dev={corrected['coll']['total_wire_bytes']/1e9:9.2f}GB "
+              f"compile={result['compile_s']:6.1f}s")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default=None)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) combination")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--flags", default="",
+                    help="comma-separated opt flags (zero1,moe_ep_data,...)")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                flags = tuple(f for f in args.flags.split(",") if f)
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                if flags:
+                    tag += "__" + "-".join(flags)
+                path = os.path.join(args.out, tag + ".json")
+                hlo_path = (os.path.join(args.out, tag + ".hlo.txt")
+                            if args.save_hlo else None)
+                try:
+                    res = dryrun_one(arch, shape, multi_pod=mp,
+                                     save_hlo=hlo_path, flags=flags)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    traceback.print_exc()
+                    res = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "ok": False, "error": f"{type(e).__name__}: {e}"}
+                    failures.append(tag)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+    if failures:
+        print(f"\nFAILED ({len(failures)}): {failures}")
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,333 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body* once —
+but our programs put the layer stack (L iterations), gradient
+accumulation (M), blocked attention (T/BK) and the chunked cross-entropy
+(S/C) inside ``lax.scan``. For a 40-layer, 16-microbatch train step that
+undercounts FLOPs by ~600×, which would make every roofline term
+garbage.
+
+This module re-derives the dominant cost terms from the *post-SPMD
+optimized HLO text* with loop trip counts multiplied through the call
+graph:
+
+  flops             — dot/convolution FLOPs (2 · prod(result) · K). Dots
+                      dominate transformer cost; elementwise flops are
+                      ignored (documented, <2% for these models).
+  collective bytes  — per-kind output bytes of all-gather / all-reduce /
+                      reduce-scatter / all-to-all / collective-permute.
+  hbm bytes         — estimated parameter+activation traffic: sum over
+                      executed ops of (operand + result bytes), the
+                      standard upper-bound proxy for HBM traffic (fusion
+                      keeps actual traffic lower; we report both this and
+                      XLA's single-iteration 'bytes accessed').
+
+Everything is *per device* (the HLO module is the per-device SPMD
+program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _parse_shape(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = tuple(int(d) for d in m.group(2).split(",") if d)
+        out.append((dt, dims))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _parse_shape(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(dims: Tuple[int, ...]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclass
+class Op:
+    name: str
+    result_type: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}]+))\s+"
+    r"([\w\-]+)\((.*)$")
+
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(|\.v\d)")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
+    """Parse HLO text into computations. Returns (comps, entry_name)."""
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//") or s.startswith("HloModule"):
+            continue
+        # computation header: `%name (params) -> type {` or `ENTRY %name ...`
+        if not line.startswith(" ") and "{" in s:
+            m = _COMP_HDR_RE.match(s)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if s.startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if s == "}":
+            continue
+        m = _OP_RE.match(s)
+        if m and cur is not None:
+            name, rtype, opcode, rest = m.groups()
+            # split args from attributes at the matching close paren
+            depth, idx = 1, 0
+            for idx, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            args, attrs = rest[:idx], rest[idx + 1:]
+            operands = re.findall(r"%([\w.\-]+)", args)
+            cur.ops.append(Op(name, rtype, opcode, operands, attrs, s))
+    if entry is None and comps:
+        entry = next(iter(comps))
+    return comps, entry
+
+
+def _called_comps(op: Op) -> List[str]:
+    names = []
+    for key in ("calls=", "to_apply=", "body=", "condition=",
+                "branch_computations="):
+        for m in re.finditer(re.escape(key) + r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?",
+                             op.attrs):
+            for nm in re.split(r",\s*", m.group(1)):
+                names.append(nm.lstrip("%"))
+    return names
+
+
+_GROUP_RE1 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_RE2 = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_size(attrs: str) -> int:
+    """Participants per replica group (ring length). Formats:
+    ``replica_groups=[G,N]<=[...]`` (G groups of N) or explicit
+    ``{{0,1,...},...}`` lists."""
+    m = _GROUP_RE1.search(attrs)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUP_RE2.search(attrs)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def _wire_bytes(kind: str, out_bytes: int, attrs: str) -> float:
+    """Per-device ICI wire-byte estimate for ring algorithms:
+      all-gather       (N-1)/N x output
+      reduce-scatter   (N-1)/N x input  = (N-1) x output
+      all-reduce       2(N-1)/N x size  (RS + AG phases)
+      all-to-all       (N-1)/N x size
+      collective-permute  1 x size
+    (`bytes` in the tables stays the raw output size; wire_bytes is what
+    the roofline collective term uses.)"""
+    n = _group_size(attrs)
+    frac = (n - 1) / n if n > 1 else 0.0
+    if kind == "all-gather":
+        return out_bytes * frac
+    if kind == "reduce-scatter":
+        return out_bytes * (n - 1)
+    if kind == "all-reduce":
+        return 2.0 * out_bytes * frac
+    if kind == "all-to-all":
+        return out_bytes * frac
+    return float(out_bytes)          # collective-permute
+
+
+def _dims_from_attr(attrs: str, key: str) -> Tuple[int, ...]:
+    m = re.search(re.escape(key) + r"=\{([\d,]*)\}", attrs)
+    if not m:
+        return ()
+    return tuple(int(x) for x in m.group(1).split(",") if x)
+
+
+class HLOCost:
+    """Walks the call graph multiplying while-loop trip counts."""
+
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_hlo(text)
+        # name -> result type string, for operand shape lookup
+        self.types: Dict[str, str] = {}
+        for c in self.comps.values():
+            for op in c.ops:
+                self.types[op.name] = op.result_type
+        self._memo: Dict[str, Dict] = {}
+
+    # -- trip counts --------------------------------------------------------
+
+    def _trip_count(self, cond_name: str) -> int:
+        """Constant bound in the loop condition (lax.scan: iter < N)."""
+        cond = self.comps.get(cond_name)
+        if cond is None:
+            return 1
+        # lax.scan conditions are `iter < N`; the compare may be wrapped in
+        # a fusion, so just take the largest integer constant present.
+        consts = []
+        for op in cond.ops:
+            if op.opcode == "constant":
+                m = re.search(r"constant\((-?\d+)\)", op.line)
+                if m:
+                    consts.append(int(m.group(1)))
+        return max(1, max(consts)) if consts else 1
+
+    # -- per-op flops ---------------------------------------------------------
+
+    def _dot_flops(self, op: Op) -> float:
+        res = _parse_shape(op.result_type)
+        if not res:
+            return 0.0
+        out_elems = _shape_elems(res[0][1])
+        lhs = op.operands[0] if op.operands else None
+        lhs_type = self.types.get(lhs, "")
+        lhs_shapes = _parse_shape(lhs_type)
+        if not lhs_shapes:
+            return 0.0
+        lhs_dims = lhs_shapes[0][1]
+        contract = _dims_from_attr(op.attrs, "lhs_contracting_dims")
+        k = 1
+        for i in contract:
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+        return 2.0 * out_elems * k
+
+    def _conv_flops(self, op: Op) -> float:
+        res = _parse_shape(op.result_type)
+        if not res:
+            return 0.0
+        out_elems = _shape_elems(res[0][1])
+        rhs = op.operands[1] if len(op.operands) > 1 else None
+        rhs_shapes = _parse_shape(self.types.get(rhs, ""))
+        if not rhs_shapes:
+            return 0.0
+        # kernel: spatial × in_channels multiplies per output element
+        kdims = rhs_shapes[0][1]
+        k = _shape_elems(kdims) // max(kdims[-1], 1)   # all but out-feature
+        return 2.0 * out_elems * k
+
+    # -- walk ---------------------------------------------------------------
+
+    def comp_cost(self, comp_name: str) -> Dict:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        cost = {"flops": 0.0,
+                "coll": {k: {"count": 0.0, "bytes": 0.0, "wire_bytes": 0.0}
+                         for k in _COLLECTIVES},
+                "op_bytes": 0.0}
+        if comp is None:
+            return cost
+        self._memo[comp_name] = cost    # break cycles defensively
+        for op in comp.ops:
+            if op.opcode == "dot":
+                cost["flops"] += self._dot_flops(op)
+            elif op.opcode in ("convolution",):
+                cost["flops"] += self._conv_flops(op)
+            elif op.opcode == "while":
+                body, cond = None, None
+                m = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                if m:
+                    body = m.group(1)
+                m = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                if m:
+                    cond = m.group(1)
+                trips = self._trip_count(cond) if cond else 1
+                sub = self.comp_cost(body) if body else None
+                if sub:
+                    cost["flops"] += trips * sub["flops"]
+                    cost["op_bytes"] += trips * sub["op_bytes"]
+                    for kind in _COLLECTIVES:
+                        for fld in ("count", "bytes", "wire_bytes"):
+                            cost["coll"][kind][fld] += (
+                                trips * sub["coll"][kind][fld])
+                continue
+            else:
+                matched = False
+                for kind in _COLLECTIVES:
+                    if op.opcode == kind or op.opcode == kind + "-start":
+                        out_b = _shape_bytes(op.result_type)
+                        cost["coll"][kind]["count"] += 1
+                        cost["coll"][kind]["bytes"] += out_b
+                        cost["coll"][kind]["wire_bytes"] += _wire_bytes(
+                            kind, out_b, op.attrs)
+                        matched = True
+                        break
+                if matched:
+                    cost["op_bytes"] += _shape_bytes(op.result_type)
+                    continue
+            # recurse into fusions / calls / reducers (while handled above).
+            # flops and collectives propagate; op_bytes does NOT cross into
+            # fusion internals — a fusion is one kernel, its HBM traffic is
+            # its operands+result, and the result is counted below while
+            # internal temporaries live in registers/VMEM.
+            for sub_name in _called_comps(op):
+                sub = self.comp_cost(sub_name)
+                cost["flops"] += sub["flops"]
+                for kind in _COLLECTIVES:
+                    for fld in ("count", "bytes", "wire_bytes"):
+                        cost["coll"][kind][fld] += sub["coll"][kind][fld]
+            cost["op_bytes"] += _shape_bytes(op.result_type)
+        return cost
+
+    def entry_cost(self) -> Dict:
+        out = self.comp_cost(self.entry)
+        out["coll"]["total_bytes"] = sum(
+            v["bytes"] for k, v in out["coll"].items()
+            if isinstance(v, dict))
+        out["coll"]["total_wire_bytes"] = sum(
+            v["wire_bytes"] for k, v in out["coll"].items()
+            if isinstance(v, dict))
+        return out
+
+
+def analyze(hlo_text: str) -> Dict:
+    """Loop-corrected per-device cost of a compiled HLO module."""
+    return HLOCost(hlo_text).entry_cost()

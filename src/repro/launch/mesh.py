@@ -1,0 +1,43 @@
+"""Production meshes and TPU hardware constants.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module never touches jax device state — only
+``launch/dryrun.py`` sets XLA_FLAGS for 512 host devices.
+
+Mesh semantics (DESIGN.md §4): the ``pod`` axis is the *edge-server* axis
+of FedFly — each pod is one edge realm training its own model replica;
+``data`` shards clients/batch inside a realm; ``model`` shards tensors.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """A mesh over whatever devices actually exist (CPU testbed runs)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# TPU v5e-like hardware constants (per assignment: the roofline targets)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TPUSpec:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12      # FLOP/s per chip
+    hbm_bandwidth: float = 819e9         # bytes/s per chip
+    ici_bandwidth: float = 50e9          # bytes/s per link
+    hbm_bytes: float = 16e9              # capacity per chip
+
+
+TPU_V5E = TPUSpec()

@@ -1,0 +1,93 @@
+"""Execution plans: per-(arch × input-shape) knobs for the production mesh.
+
+A plan decides what the dry-run lowers:
+  * dtypes       — ≥100B-param MoE archs (arctic, grok) hold params,
+                   momentum and grad-accumulators in bf16 so train_4k fits
+                   16 GB HBM per chip (DESIGN.md §6); everything else
+                   trains params fp32 / compute bf16.
+  * microbatches — grad accumulation splits train_4k's global batch so the
+                   remat stash (L × rows × S × d) stays ≲2 GB per chip.
+  * window_override — long_500k on pure full-attention archs runs the
+                   framework's sliding-window variant (4096) per the
+                   assignment carve-out; recorded in the plan's note.
+  * skip         — (arch, shape) pairs that are out of scope, with reason.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+@dataclass(frozen=True)
+class ExecPlan:
+    arch: str
+    shape: str
+    microbatches: int = 1
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    momentum_dtype: Optional[str] = None    # None = same as param dtype
+    window_override: int = 0                # >0: force sliding window
+    skip: bool = False
+    note: str = ""
+    # §Perf hillclimb levers (beyond-paper optimizations; default off so
+    # the recorded baseline stays the paper-faithful generic layout):
+    #   zero1       — params model-sharded only (no FSDP over data);
+    #                 grads+momentum data-sharded; per-microbatch grad
+    #                 reduce-scatter instead of full all-reduce; one
+    #                 param gather per step (ZeRO-1).
+    #   moe_ep_data — expert axis sharded over ``data`` (tokens all-to-all
+    #                 to their experts), f over ``model``: expert grads
+    #                 are local, no cross-data grad reduction.
+    #   wkv_chunked — RWKV6 chunk-parallel closed form (matmul within
+    #                 64-token chunks) instead of the token-level scan.
+    opt_flags: tuple = ()
+
+
+# archs whose every layer is full-causal attention (no native long-context
+# path); long_500k runs only via the sliding-window variant
+_FULL_ATTN = ("yi-6b", "minicpm-2b", "qwen3-0.6b", "whisper-large-v3",
+              "internvl2-1b", "arctic-480b", "grok-1-314b")
+_GIANT = ("arctic-480b", "grok-1-314b")    # ≥100B params: bf16 everywhere
+
+
+def plan_for(cfg: ModelConfig, shape: InputShape) -> ExecPlan:
+    arch = cfg.name
+    kw = dict(arch=arch, shape=shape.name)
+
+    if arch in _GIANT:
+        kw.update(param_dtype="bfloat16", momentum_dtype="bfloat16")
+
+    if shape.kind == "train":
+        # one batch row per chip per microbatch keeps the remat stash
+        # small; more microbatches than (global_batch / data-axis) would
+        # leave data shards idle and break the batch sharding hints.
+        kw["microbatches"] = 16
+
+    if shape.name == "long_500k":
+        if arch in _FULL_ATTN:
+            kw.update(window_override=4096,
+                      note="full-attention arch: long_500k uses the "
+                           "framework sliding-window variant (assignment "
+                           "carve-out); native 512k full attention skipped")
+        elif arch == "gemma2-9b":
+            kw["note"] = ("native local/global alternation: local layers "
+                          "keep a 4096 ring, global layers the full 512k "
+                          "cache")
+        else:
+            kw["note"] = "native sub-quadratic decode (SSM/hybrid state)"
+
+    return ExecPlan(**kw)
+
+
+def apply_plan(cfg: ModelConfig, plan: ExecPlan) -> ModelConfig:
+    """Return the config the dry-run actually lowers."""
+    kw = dict(param_dtype=plan.param_dtype, compute_dtype=plan.compute_dtype)
+    if plan.window_override > 0:
+        kw.update(sliding_window=plan.window_override, local_global_period=0)
+    if "wkv_chunked" in plan.opt_flags and cfg.rwkv:
+        kw["rwkv_chunked"] = True
+    if "mamba_chunked" in plan.opt_flags and cfg.hybrid_attn_ssm:
+        kw["mamba_chunked"] = True
+    return cfg.replace(**kw)

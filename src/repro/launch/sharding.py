@@ -1,0 +1,425 @@
+"""Sharding rules for the production mesh (DESIGN.md §6).
+
+Strict *divisible-or-None*: a tensor axis is assigned a mesh axis only if
+the axis size divides the mesh-axis size — jax rejects uneven explicit
+input shardings, so anything non-divisible stays replicated on that mesh
+axis and GSPMD is free to pick layouts for intermediates.
+
+Parameters get a 2-D (fsdp × tensor) assignment:
+  * ``model``: the last divisible tensor axis (column-parallel d_out,
+    expert f, flattened H·hd, embed d, ...)
+  * ``data``:  the first remaining divisible axis (FSDP-style weight
+    sharding: expert E, d_in, vocab V, ...)
+Stacked-layer leaves (leading L axis from the scan) never shard L.
+Tiny leaves (< 2^14 elements) stay replicated.
+
+Caches/activations use the same generic assignment but with batch-major
+preference, which puts B on ``data`` (or the 512k sequence axis when
+B = 1) and head_dim/feature on ``model``.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Params = Any
+
+_MIN_SHARD_ELEMS = 1 << 14
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def generic_dim_assignment(shape: Sequence[int], mesh: Mesh, *,
+                           skip_leading: int = 0,
+                           model_axis: str = "model",
+                           data_axis: str = "data") -> Tuple[Optional[str], ...]:
+    """Assign (model, data) mesh axes to tensor dims per the rules above."""
+    dims: list = [None] * len(shape)
+    if int(np.prod(shape)) < _MIN_SHARD_ELEMS:
+        return tuple(dims)
+    msize = _axis_size(mesh, model_axis)
+    dsize = _axis_size(mesh, data_axis)
+    # model: last divisible dim
+    mi = None
+    if msize > 1:
+        for i in range(len(shape) - 1, skip_leading - 1, -1):
+            if shape[i] % msize == 0 and shape[i] >= msize:
+                dims[i] = model_axis
+                mi = i
+                break
+    # data: first divisible dim that isn't the model dim
+    if dsize > 1:
+        for i in range(skip_leading, len(shape)):
+            if i != mi and shape[i] % dsize == 0 and shape[i] >= dsize:
+                dims[i] = data_axis
+                break
+    return tuple(dims)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def param_pspec(path, leaf_shape: Sequence[int], mesh: Mesh,
+                stacked_edge_axis: bool = False,
+                flags: Sequence[str] = ()) -> P:
+    """PartitionSpec for one parameter leaf. ``stacked_edge_axis`` marks
+    the multi-pod layout where every leaf has a leading num_edges axis
+    sharded over ``pod``. ``flags`` are the §Perf hillclimb levers
+    (see launch/plans.py): "zero1" drops the FSDP data-axis assignment
+    (params model-sharded only); "moe_ep_data" puts the expert axis on
+    ``data`` instead of ``model``."""
+    names = _path_names(path)
+    shape = list(leaf_shape)
+    lead: list = []
+    if stacked_edge_axis:
+        lead = ["pod"]
+        shape = shape[1:]
+    skip = 1 if "layers" in names else 0
+    msize = _axis_size(mesh, "model")
+    dsize = _axis_size(mesh, "data") if "zero1" not in flags else 1
+
+    if "fsdp2d" in flags and not ("moe" in names
+                                  and "moe_ep_data" in flags):
+        # ZeRO-3: shard one weight axis over the ENTIRE mesh (data x
+        # model) and use no tensor parallelism — per-layer weight
+        # all-gathers replace per-layer activation all-reduces. Right
+        # for models whose largest layer fits one chip (<= ~10B).
+        # (With moe_ep_data, expert banks fall through to the EP rule.)
+        both = _axis_size(mesh, "data") * _axis_size(mesh, "model")
+        dims = [None] * len(shape)
+        if int(np.prod(shape)) >= _MIN_SHARD_ELEMS:
+            for i in range(skip, len(shape)):
+                if shape[i] % both == 0 and shape[i] >= both:
+                    dims[i] = ("data", "model")
+                    break
+            else:
+                for i in range(skip, len(shape)):
+                    if shape[i] % dsize == 0 and shape[i] >= dsize:
+                        dims[i] = "data"
+                        break
+        return P(*lead, *dims)
+
+    # Vocabulary tables (embed (V, d), lm_head (d, V), tied embed_head):
+    # shard the vocab axis over ``model`` only. FSDP-sharding d over
+    # ``data`` would put the contraction axis of the logits matmul on the
+    # data axis, forcing GSPMD to replicate activation rows and all-reduce
+    # full (B, chunk, V) logits every xent chunk (~300 MB × chunks × mb).
+    if names and names[-1] in ("embed", "lm_head", "embed_head") \
+            and len(shape) == 2:
+        v_ax = 0 if shape[0] >= shape[1] else 1
+        dims = [None, None]
+        if msize > 1 and shape[v_ax] % msize == 0:
+            dims[v_ax] = "model"
+        elif msize > 1 and shape[1 - v_ax] % msize == 0:
+            dims[1 - v_ax] = "model"
+        return P(*lead, *dims)
+
+    # Second projections ("wo": attention out (H·hd, d), mlp down (f, d)):
+    # row-parallel — model on the *input* dim so it pairs with the
+    # column-parallel first projection and the contraction stays local
+    # (Megatron pairing); otherwise GSPMD all-gathers the f-sharded
+    # activations every layer.
+    if names and names[-1] == "wo" and len(shape) - skip == 2:
+        dims = [None] * len(shape)
+        if msize > 1 and shape[skip] % msize == 0 and shape[skip] >= msize:
+            dims[skip] = "model"
+            if dsize > 1 and shape[skip + 1] % dsize == 0 \
+                    and shape[skip + 1] >= dsize:
+                dims[skip + 1] = "data"
+            return P(*lead, *dims)
+
+    # MoE expert banks (L, E, d, f): expert-parallel over ``model`` when E
+    # divides it (arctic 128/16) — the dispatch buffer is already expert-
+    # major, so this avoids re-gathering the full bank every layer. FSDP
+    # over the widest remaining axis. Falls through to the generic rule
+    # when E doesn't divide (grok: 8 experts → shard f instead).
+    if "moe" in names and len(shape) - skip == 3:
+        E_ax = skip
+        if "moe_ep_data" in flags:
+            # expert-parallel over DATA: tokens all-to-all to their
+            # experts; expert grads become rank-local (no cross-data
+            # reduction at all). f pairs over ``model`` (wi column /
+            # wo row parallel).
+            real_d = _axis_size(mesh, "data")
+            dims = [None] * len(shape)
+            if real_d > 1 and shape[E_ax] % real_d == 0 \
+                    and shape[E_ax] >= real_d:
+                dims[E_ax] = "data"
+                f_ax = (skip + 2) if names[-1] in ("wi_gate", "wi_up") \
+                    else (skip + 1)
+                if msize > 1 and shape[f_ax] % msize == 0:
+                    dims[f_ax] = "model"
+                return P(*lead, *dims)
+        if msize > 1 and shape[E_ax] % msize == 0 and shape[E_ax] >= msize:
+            dims: list = [None] * len(shape)
+            dims[E_ax] = "model"
+            cands = sorted(range(E_ax + 1, len(shape)),
+                           key=lambda i: -shape[i])
+            for i in cands:
+                if dsize > 1 and shape[i] % dsize == 0 and shape[i] >= dsize:
+                    dims[i] = "data"
+                    break
+            return P(*lead, *dims)
+        if names[-1] == "wo":
+            # E non-divisible (grok: 8 experts on a 16-way model axis):
+            # expert banks fall through to tensor parallelism on f. The
+            # down-projection (E, f, d) must be ROW-parallel (model on f)
+            # to pair with wi_gate/wi_up's column-parallel f — the generic
+            # last-dim rule would put model on d and force a full gather
+            # of the (B, E, C, f) expert hidden every layer.
+            dims = [None] * len(shape)
+            f_ax, d_ax = skip + 1, skip + 2
+            if msize > 1 and shape[f_ax] % msize == 0:
+                dims[f_ax] = "model"
+            if dsize > 1 and shape[d_ax] % dsize == 0:
+                dims[d_ax] = "data"
+            return P(*lead, *dims)
+
+    dims = generic_dim_assignment(
+        shape, mesh, skip_leading=skip,
+        data_axis="data" if "zero1" not in flags else "__none__")
+    return P(*lead, *dims)
+
+
+def param_shardings(params_shape: Params, mesh: Mesh,
+                    stacked_edge_axis: bool = False,
+                    flags: Sequence[str] = ()) -> Params:
+    """NamedSharding tree matching a params (or grads/momentum) pytree of
+    ShapeDtypeStructs or arrays."""
+    def f(path, leaf):
+        return NamedSharding(
+            mesh, param_pspec(path, np.shape(leaf), mesh,
+                              stacked_edge_axis=stacked_edge_axis,
+                              flags=flags))
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def grad_shardings(params_shape: Params, mesh: Mesh,
+                   stacked_edge_axis: bool = False,
+                   flags: Sequence[str] = ()) -> Params:
+    """Gradient/momentum shardings. Under "zero1" these keep the FSDP
+    data-axis sharding even though params drop it: per-microbatch grad
+    contributions reduce-scatter onto data-sharded accumulators, the
+    optimizer updates shards, and the updated params are gathered once
+    per step (ZeRO-1)."""
+    grad_flags = tuple(f for f in flags if f != "zero1")
+    return param_shardings(params_shape, mesh,
+                           stacked_edge_axis=stacked_edge_axis,
+                           flags=grad_flags)
+
+
+def opt_state_shardings(opt_shape: Params, mesh: Mesh,
+                        stacked_edge_axis: bool = False,
+                        flags: Sequence[str] = ()) -> Params:
+    """Optimizer state: moment buffers shard like GRADS (data-sharded
+    under "zero1"); step counters replicate."""
+    grad_flags = tuple(f for f in flags if f != "zero1")
+    def f(path, leaf):
+        shape = np.shape(leaf)
+        if "step" in _path_names(path):
+            # step counter: scalar, or (E,) in the stacked-edge layout
+            spec = P("pod") if (stacked_edge_axis and len(shape) == 1) else P()
+            return NamedSharding(mesh, spec)
+        return NamedSharding(
+            mesh, param_pspec(path, shape, mesh,
+                              stacked_edge_axis=stacked_edge_axis,
+                              flags=grad_flags))
+    return jax.tree_util.tree_map_with_path(f, opt_shape)
+
+
+def batch_pspec(shape: Sequence[int], mesh: Mesh,
+                stacked_edge_axis: bool = False,
+                microbatched: bool = False,
+                flags: Sequence[str] = ()) -> P:
+    """Input batches: row dim over ``data``; the leading edge axis over
+    ``pod`` (multi-pod layout); the grad-accumulation index axis (when
+    ``microbatched``) explicitly unsharded; features replicated."""
+    dims: list = [None] * len(shape)
+    i = 0
+    if stacked_edge_axis:
+        dims[0] = "pod"
+        i = 1
+    if microbatched:
+        i += 1                       # (E,) M axis: never sharded
+    dsize = _axis_size(mesh, "data")
+    if "fsdp2d" in flags:
+        both = dsize * _axis_size(mesh, "model")
+        if i < len(shape) and shape[i] % both == 0 and shape[i] >= both:
+            dims[i] = ("data", "model")
+            return P(*dims)
+    if i < len(shape) and shape[i] % dsize == 0 and shape[i] >= dsize:
+        dims[i] = "data"
+    return P(*dims)
+
+
+def batch_shardings(batch_shape: Params, mesh: Mesh,
+                    stacked_edge_axis: bool = False,
+                    microbatched: bool = False,
+                    flags: Sequence[str] = ()) -> Params:
+    def f(path, leaf):
+        return NamedSharding(mesh, batch_pspec(np.shape(leaf), mesh,
+                                               stacked_edge_axis,
+                                               microbatched, flags))
+    return jax.tree_util.tree_map_with_path(f, batch_shape)
+
+
+def cache_pspec(path, leaf_shape: Sequence[int], mesh: Mesh,
+                stacked_edge_axis: bool = False) -> P:
+    """Decode-cache sharding (leading L axis never sharded):
+
+      k / v / pos_tab (L, B, C, [KV, hd]) — batch over ``data``, *cache
+        sequence* C over ``model`` (flash-decode style: the per-step
+        attention reduces over C, so XLA renders softmax statistics and
+        the PV product as tiny all-reduces instead of re-gathering the
+        cache; sharding hd instead provokes involuntary full
+        rematerialization of the cache in GSPMD). When B doesn't divide
+        (long_500k: B=1), C takes ``data`` and hd takes ``model``.
+      ssm_state (L, B, d, N)      — B over data, d over model.
+      rwkv_state (L, B, H, K, V)  — B over data, H over model.
+      *_xprev (L, B, d)           — B over data, d over model.
+    """
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    shape = list(leaf_shape)
+    lead: list = []
+    if stacked_edge_axis:
+        lead = ["pod"]
+        shape = shape[1:]
+    if int(np.prod(shape)) < _MIN_SHARD_ELEMS:
+        return P(*lead, *([None] * len(shape)))
+    dims: list = [None] * len(shape)
+    msize = _axis_size(mesh, "model")
+    dsize = _axis_size(mesh, "data")
+
+    def div(i, size):
+        return shape[i] % size == 0 and shape[i] >= size
+
+    if name in ("k", "v", "pos_tab", "cross_k", "cross_v") and len(shape) >= 3:
+        if div(1, dsize):
+            dims[1] = "data"                      # batch
+            if div(2, msize):
+                dims[2] = "model"                 # cache sequence C
+            elif len(shape) >= 5 and div(4, msize):
+                dims[4] = "model"                 # head_dim fallback
+        else:
+            if div(2, dsize):
+                dims[2] = "data"                  # B=1: sequence over data
+            if len(shape) >= 5 and div(4, msize):
+                dims[4] = "model"
+        return P(*lead, *dims)
+
+    if name == "ssm_state" and len(shape) == 4:
+        if div(1, dsize):
+            dims[1] = "data"
+        if div(2, msize):
+            dims[2] = "model"
+        return P(*lead, *dims)
+
+    if name == "rwkv_state" and len(shape) == 5:
+        if div(1, dsize):
+            dims[1] = "data"
+        if div(2, msize):
+            dims[2] = "model"
+        return P(*lead, *dims)
+
+    if name.endswith("xprev") and len(shape) == 3:
+        if div(1, dsize):
+            dims[1] = "data"
+        if div(2, msize):
+            dims[2] = "model"
+        return P(*lead, *dims)
+
+    # fallback: generic assignment skipping the L axis
+    dims = list(generic_dim_assignment(shape, mesh, skip_leading=1))
+    return P(*lead, *dims)
+
+
+def cache_shardings(cache_shape: Params, mesh: Mesh,
+                    stacked_edge_axis: bool = False) -> Params:
+    def f(path, leaf):
+        return NamedSharding(mesh, cache_pspec(path, np.shape(leaf), mesh,
+                                               stacked_edge_axis))
+    return jax.tree_util.tree_map_with_path(f, cache_shape)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def make_activation_rules(cfg, mesh: Mesh, flags: Sequence[str] = ()) -> dict:
+    """Site → NamedSharding table for ``repro.models.hints`` (see there
+    for site semantics). Batch on ``data``, features on ``model``; the
+    MoE dispatch buffer rides expert-parallel when E divides the model
+    axis, else the expert-hidden f axis takes ``model``."""
+    msize = _axis_size(mesh, "model")
+    dsize = _axis_size(mesh, "data")
+
+    def ns(*spec):
+        return NamedSharding(mesh, P(*spec))
+
+    def m_if(n):
+        return "model" if (msize > 1 and n % msize == 0 and n >= msize) \
+            else None
+
+    if "fsdp2d" in flags:
+        dm = ("data", "model")
+        rules = {
+            "act_btd": ns(dm, None, None),
+            "act_btf": ns(dm, None, None),
+            "act_bth": ns(dm, None, None),
+            "act_bth_kv": ns(dm, None, None),
+            "logits_chunk": ns(dm, None, None),
+        }
+        if cfg.is_moe and "moe_ep_data" in flags:
+            # 2D MoE: tokens batch-sharded over the whole mesh, experts
+            # E over data / f over model — dispatch is the all-to-all
+            rules["moe_disp_d"] = ns(None, "data", None, None)
+            rules["moe_disp_f"] = ns(None, "data", None, m_if(cfg.d_ff))
+        return rules
+
+    rules = {
+        "act_btd": ns("data", None, None),
+        "act_btf": ns("data", None, m_if(cfg.d_ff)),
+        # attn_dp: keep attention activations data-parallel only — when
+        # the head count doesn't align with the model axis (arctic: 56
+        # heads, 16 ranks), flat-H·hd sharding splits head_dim and every
+        # logit/PV product becomes a partial-sum all-reduce.
+        "act_bth": ns("data", None,
+                      None if "attn_dp" in flags
+                      else m_if(cfg.num_heads * cfg.head_dim)),
+        "act_bth_kv": ns("data", None,
+                         None if "attn_dp" in flags
+                         else m_if(cfg.num_kv_heads * cfg.head_dim)),
+        "logits_chunk": ns("data", None, m_if(cfg.vocab_size)),
+        # blocked-attention query stream (B, S, G, R, hd): S over model
+        "attn_q_seq": ns("data", "model", None, None, None),
+        "attn_pos_seq": ns("data", "model"),
+    }
+    if cfg.is_moe:
+        if "moe_ep_data" in flags and dsize > 1 \
+                and cfg.num_experts % dsize == 0:
+            # dispatch buffers expert-major over ``data`` — the reshard
+            # from batch-major activations is the MoE all-to-all
+            rules["moe_disp_d"] = ns(None, "data", None, None)
+            rules["moe_disp_f"] = ns(None, "data", None, m_if(cfg.d_ff))
+        elif msize > 1 and cfg.num_experts % msize == 0:
+            rules["moe_disp_d"] = ns("data", "model", None, None)
+            rules["moe_disp_f"] = ns("data", "model", None, None)
+        else:
+            rules["moe_disp_d"] = ns("data", None, None, None)
+            rules["moe_disp_f"] = ns("data", None, None, m_if(cfg.d_ff))
+    return rules

@@ -1,0 +1,289 @@
+"""Jit-able production steps: train / prefill / serve / fedavg / migrate.
+
+Three execution layouts:
+  single-pod   — plain steps on the (data, model) mesh. This is what the
+                 §Roofline table measures.
+  multi-pod    — FedFly rendered SPMD (DESIGN.md §4): per-edge parameters
+                 are stacked on a leading ``num_edges`` axis sharded over
+                 ``pod``; the local train step is vmapped over that axis,
+                 so gradients reduce over ``data`` only and the edge
+                 replicas *diverge* between aggregations, exactly like FL
+                 rounds. ``fedavg_step`` is the cross-pod weighted average
+                 (the paper's Step 4-5) and ``migrate_step`` permutes one
+                 replica's state along ``pod`` (the SPMD rendering of the
+                 checkpoint socket transfer).
+  testbed      — repro.core.scheduler (simulated devices/edges, CPU).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input:
+weak-type-correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core import fedavg as fedavg_lib
+from repro.optim.optimizers import Optimizer
+
+Params = Any
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                num_edges: int = 0, microbatches: int = 1) -> Dict[str, SDS]:
+    """Batch inputs for one step of the given kind. ``num_edges > 0``
+    prepends the stacked-edge axis (multi-pod layout); the global batch is
+    divided across edges. ``microbatches > 1`` (training) prepends the
+    grad-accumulation axis, so the (M, B/M, ...) layout arrives with an
+    explicit in_sharding — the microbatch index axis stays unsharded and
+    the row axis stays on ``data`` (leaving GSPMD to choose would let it
+    shard the index axis and replicate every row)."""
+    B = shape.global_batch
+    if num_edges:
+        if B % num_edges == 0:
+            B = B // num_edges
+        elif B == 1:
+            # one long-context session cannot split across edge realms —
+            # each edge serves its own session (per-edge batch = 1)
+            B = 1
+        else:
+            raise AssertionError((B, num_edges))
+    lead = (num_edges,) if num_edges else ()
+    if shape.kind == "train" and microbatches > 1:
+        assert B % microbatches == 0, (B, microbatches)
+        lead = lead + (microbatches,)
+        B = B // microbatches
+
+    def sds(s, dt):
+        return SDS(lead + s, dt)
+
+    if shape.kind == "train":
+        S = shape.seq_len
+        specs = {"tokens": sds((B, S), jnp.int32),
+                 "labels": sds((B, S), jnp.int32)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": sds((B, shape.seq_len), jnp.int32)}
+    else:  # decode: one new token against a seq_len-deep cache
+        specs = {"tokens": sds((B, 1), jnp.int32)}
+
+    if cfg.vision_prefix and shape.kind != "decode":
+        specs["vision_embeds"] = sds((B, cfg.vision_prefix, cfg.d_model),
+                                     jnp.dtype(cfg.compute_dtype))
+    if cfg.encoder_layers and shape.kind != "decode":
+        specs["frames"] = sds((B, cfg.encoder_seq, cfg.d_model),
+                              jnp.dtype(cfg.compute_dtype))
+    return specs
+
+
+def params_spec(model, num_edges: int = 0) -> Params:
+    """ShapeDtypeStruct tree of the model parameters (optionally stacked
+    on a leading edge axis)."""
+    spec = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if num_edges:
+        spec = jax.tree.map(
+            lambda s: SDS((num_edges,) + s.shape, s.dtype), spec)
+    return spec
+
+
+def cache_spec(model, shape: InputShape, num_edges: int = 0) -> Params:
+    B = max(shape.global_batch // (num_edges or 1), 1)
+    spec = jax.eval_shape(
+        functools.partial(model.init_cache, B, shape.seq_len))
+    if num_edges:
+        spec = jax.tree.map(
+            lambda s: SDS((num_edges,) + s.shape, s.dtype), spec)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# single-pod steps
+# ---------------------------------------------------------------------------
+
+def _constrain(tree, shardings):
+    if shardings is None:
+        return tree
+    return jax.lax.with_sharding_constraint(tree, shardings)
+
+
+def make_train_step(model, optimizer: Optimizer,
+                    microbatches: int = 1,
+                    grad_shardings: Params = None) -> Callable:
+    """(params, opt_state, batch, lr) -> (params, opt_state, metrics).
+    ``microbatches > 1`` runs gradient accumulation via lax.scan over a
+    pre-reshaped (M, B/M, ...) batch (see ``input_specs``) so the remat
+    stash covers one microbatch at a time.
+
+    ``grad_shardings`` (same tree as params) pins the accumulator carried
+    through the scan. Without it GSPMD is free to keep the accumulator
+    replicated, which turns every per-microbatch gradient reduction into
+    a full-size all-reduce (28 TB/device/step for arctic-480b) instead of
+    a reduce-scatter onto the sharded accumulator."""
+
+    def loss_fn(p, mb):
+        return model.loss(p, mb)
+
+    def train_step(params, opt_state, batch, lr):
+        M = microbatches
+        if M == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = _constrain(grads, grad_shardings)
+        else:
+            mbs = batch   # already (M, B/M, ...)
+
+            def body(carry, mb):
+                ls, gs = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                # constrain g itself (not just the sum): this pins the
+                # stacked per-layer grad buffer assembled by the backward
+                # scan, so cross-data reductions lower as reduce-scatters
+                # into shards instead of full-size all-reduces.
+                g = _constrain(g, grad_shardings)
+                gs = _constrain(jax.tree.map(jnp.add, gs, g),
+                                grad_shardings)
+                return (ls + l, gs), None
+
+            zeros = _constrain(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params),
+                grad_shardings)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.float32(0), zeros), mbs)
+            loss = loss / M
+            grads = jax.tree.map(lambda g: g / M, grads)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
+        return new_params, new_opt, {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(model) -> Callable:
+    """(params, batch) -> (last-token logits, prefill cache entries)."""
+
+    def prefill_step(params, batch):
+        x, aux = model.hidden(params, batch, training=False,
+                              collect_cache=True)
+        return model.logits(params, x[:, -1:]), aux
+
+    return prefill_step
+
+
+def make_serve_step(model) -> Callable:
+    """(params, cache, tokens (B,1), pos) -> (logits, new cache).
+    ONE new token against a seq_len-deep KV cache / recurrent state."""
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# multi-pod (stacked-edge) steps — FedFly semantics in one SPMD program
+# ---------------------------------------------------------------------------
+
+def make_multipod_train_step(model, optimizer: Optimizer,
+                             microbatches: int = 1,
+                             grad_shardings: Params = None) -> Callable:
+    """Local train steps of all edge replicas in one SPMD program.
+
+    The loss is ``sum_e loss_e`` over the stacked edge axis: since edge
+    e's replica only enters loss_e, its gradient w.r.t. the stacked tree
+    is exactly the stack of per-edge gradients — identical to a vmapped
+    per-edge step, but expressible with sharding constraints on the
+    stacked (pod-sharded) accumulator. Gradients never cross the ``pod``
+    axis; edge replicas diverge between FedAvg rounds, like real FL."""
+
+    def stacked_loss(stacked_params, stacked_mb):
+        losses = jax.vmap(model.loss)(stacked_params, stacked_mb)   # (E,)
+        return losses.sum(), losses
+
+    def step(stacked_params, stacked_opt, stacked_batch, lr):
+        M = microbatches
+        grad_fn = jax.value_and_grad(stacked_loss, has_aux=True)
+        if M == 1:
+            (_, losses), grads = grad_fn(stacked_params, stacked_batch)
+            grads = _constrain(grads, grad_shardings)
+        else:
+            # stacked_batch: (E, M, B/E/M, ...) -> scan over M
+            mbs = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1),
+                               stacked_batch)
+
+            def body(carry, mb):
+                ls, gs = carry
+                (_, l), g = grad_fn(stacked_params, mb)
+                gs = _constrain(jax.tree.map(jnp.add, gs, g),
+                                grad_shardings)
+                return (ls + l, gs), None
+
+            E = jax.tree.leaves(stacked_params)[0].shape[0]
+            zeros = _constrain(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                             stacked_params), grad_shardings)
+            (losses, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((E,), jnp.float32), zeros), mbs)
+            losses = losses / M
+            grads = jax.tree.map(lambda g: g / M, grads)
+        new_params, new_opt = optimizer.update(grads, stacked_opt,
+                                               stacked_params, lr)
+        return new_params, new_opt, {"loss": losses}
+
+    return step
+
+
+def make_multipod_prefill_step(model) -> Callable:
+    base = make_prefill_step(model)
+
+    def step(stacked_params, stacked_batch):
+        return jax.vmap(base)(stacked_params, stacked_batch)
+
+    return step
+
+
+def make_multipod_serve_step(model) -> Callable:
+    base = make_serve_step(model)
+
+    def step(stacked_params, stacked_cache, stacked_tokens, pos):
+        return jax.vmap(lambda p, c, t: base(p, c, t, pos))(
+            stacked_params, stacked_cache, stacked_tokens)
+
+    return step
+
+
+def make_fedavg_step() -> Callable:
+    """(stacked_params, weights (E,)) -> global params. On the production
+    mesh the stacked axis is sharded over ``pod``, so XLA renders this as
+    the cross-pod all-reduce — the paper's Step 4-5."""
+
+    def fedavg_step(stacked_params, weights):
+        return fedavg_lib.fedavg_stacked(stacked_params, weights)
+
+    return fedavg_step
+
+
+def make_migrate_step(shift: int = 1) -> Callable:
+    """Permute per-edge state along the stacked edge (= ``pod``) axis: the
+    SPMD rendering of FedFly's checkpoint transfer (Fig. 2 step 8). On the
+    multi-pod mesh XLA lowers this to collective-permute."""
+
+    def migrate_step(stacked_state):
+        return jax.tree.map(lambda x: jnp.roll(x, shift, axis=0),
+                            stacked_state)
+
+    return migrate_step
+
+
+def make_broadcast_step(num_edges: int) -> Callable:
+    """Global params -> stacked per-edge replicas (Step 6 of Fig. 1)."""
+
+    def broadcast_step(global_params):
+        return fedavg_lib.broadcast_stacked(global_params, num_edges)
+
+    return broadcast_step

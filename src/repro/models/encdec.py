@@ -1,0 +1,222 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment carve-out, the mel-spectrogram + conv feature extractor
+is a STUB: ``input_specs`` provides precomputed frame embeddings of shape
+(B, encoder_seq, d_model). This module implements the transformer that
+consumes them: a bidirectional self-attention encoder and a causal decoder
+with cross-attention. The decoder stack is the FedFly-splittable trunk.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.transformer import (TransformerLM, _dt,
+                                      cast_layer_params, layer_windows)
+
+Params = Dict[str, Any]
+
+
+class EncDecLM(TransformerLM):
+    """Adds an encoder stack and per-decoder-layer cross-attention."""
+
+    # -- init ---------------------------------------------------------------
+
+    def init_enc_layer(self, key) -> Params:
+        cfg, dtype = self.cfg, _dt(self.cfg.param_dtype)
+        ks = jax.random.split(key, 2)
+        return {
+            "ln1": layers.rmsnorm_init(cfg.d_model, dtype),
+            "attn": layers.attention_init(ks[0], cfg, dtype),
+            "ln2": layers.rmsnorm_init(cfg.d_model, dtype),
+            "mlp": layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    def init_layer(self, key) -> Params:
+        cfg, dtype = self.cfg, _dt(self.cfg.param_dtype)
+        k0, k1 = jax.random.split(key)
+        p = super().init_layer(k0)
+        p["ln_cross"] = layers.rmsnorm_init(cfg.d_model, dtype)
+        p["cross"] = layers.attention_init(k1, cfg, dtype)
+        return p
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k0, k1 = jax.random.split(key)
+        p = super().init(k0)
+        p["encoder"] = {
+            "layers": jax.vmap(self.init_enc_layer)(
+                jax.random.split(k1, cfg.encoder_layers)),
+            "final_norm": layers.rmsnorm_init(cfg.d_model,
+                                              _dt(cfg.param_dtype)),
+        }
+        return p
+
+    # -- encoder ------------------------------------------------------------
+
+    def encode(self, params: Params, frames: jax.Array,
+               remat: bool = True) -> jax.Array:
+        """frames: (B, T, d) stub conv-frontend embeddings -> (B, T, d)."""
+        cfg = self.cfg
+        B, T, _ = frames.shape
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        x = frames.astype(_dt(cfg.compute_dtype))
+
+        def body(carry, p):
+            p = cast_layer_params(p, _dt(cfg.compute_dtype))
+            h = layers.rmsnorm(p["ln1"], carry, cfg.norm_eps)
+            carry = carry + layers.attention(
+                p["attn"], cfg, h, positions=positions,
+                window=jnp.int32(0), causal=False)
+            h2 = layers.rmsnorm(p["ln2"], carry, cfg.norm_eps)
+            return carry + layers.mlp(p["mlp"], h2), None
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["encoder"]["layers"])
+        return layers.rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+    # -- decoder blocks (override: insert cross-attention) ------------------
+
+    def block(self, p: Params, x: jax.Array, *, positions, window,
+              training: bool, enc_out: Optional[jax.Array] = None,
+              enc_kv: Optional[Tuple[jax.Array, jax.Array]] = None
+              ) -> Tuple[jax.Array, Params]:
+        cfg = self.cfg
+        aux: Params = {}
+        h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        x = x + layers.attention(p["attn"], cfg, h, positions=positions,
+                                 window=window)
+        hc = layers.rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        if enc_kv is None:
+            B, T, _ = enc_out.shape
+            k = (enc_out @ p["cross"]["wk"]).reshape(
+                B, T, cfg.num_kv_heads, cfg.head_dim)
+            v = (enc_out @ p["cross"]["wv"]).reshape(
+                B, T, cfg.num_kv_heads, cfg.head_dim)
+            enc_kv = (k, v)
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(enc_kv[0].shape[1], dtype=jnp.int32),
+            enc_kv[0].shape[:2])
+        x = x + layers.attention(p["cross"], cfg, hc, positions=positions,
+                                 window=jnp.int32(0), kv=enc_kv,
+                                 kv_positions=kv_pos, causal=False)
+        h2 = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + layers.mlp(p["mlp"], h2)
+        return x, aux
+
+    # -- full forward -------------------------------------------------------
+
+    def apply_dec_layers(self, stacked: Params, x: jax.Array,
+                         enc_out: jax.Array, *, positions: jax.Array,
+                         windows: jax.Array, training: bool = True,
+                         collect_cache: bool = False, remat: bool = True):
+        """Scan ``x`` through a stacked slice of decoder layers (the
+        FedFly-splittable trunk). Returns x, or (x, aux) when collecting
+        prefill caches."""
+        cfg = self.cfg
+        B, S, _ = x.shape
+
+        def body(carry, per_layer):
+            p, window = per_layer
+            p = cast_layer_params(p, _dt(cfg.compute_dtype))
+            y, _ = self.block(p, carry, positions=positions, window=window,
+                              training=training, enc_out=enc_out)
+            out_aux: Params = {}
+            if collect_cache:
+                h = layers.rmsnorm(p["ln1"], carry, cfg.norm_eps)
+                k = (h @ p["attn"]["wk"]).reshape(B, S, cfg.num_kv_heads,
+                                                  cfg.head_dim)
+                if cfg.rope_theta > 0:
+                    k = layers.rope(k, positions, cfg.rope_theta)
+                v = (h @ p["attn"]["wv"]).reshape(B, S, cfg.num_kv_heads,
+                                                  cfg.head_dim)
+                out_aux = {"k": k, "v": v}
+            return y, out_aux
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, aux = jax.lax.scan(body, x, (stacked, windows))
+        if collect_cache:
+            return x, aux
+        return x
+
+    def hidden(self, params: Params, batch: Params, *, training=True,
+               collect_cache=False, remat=True) -> Tuple[jax.Array, Params]:
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"], remat=remat)
+        x = self.embed_tokens(params, batch["tokens"])
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        windows = jnp.asarray(layer_windows(cfg))
+        out = self.apply_dec_layers(params["layers"], x, enc_out,
+                                    positions=positions, windows=windows,
+                                    training=training,
+                                    collect_cache=collect_cache, remat=remat)
+        return out if collect_cache else (out, {})
+
+    def forward(self, params: Params, batch: Params, *, training=True,
+                collect_cache=False, remat=True) -> Tuple[jax.Array, Params]:
+        x, aux = self.hidden(params, batch, training=training,
+                             collect_cache=collect_cache, remat=remat)
+        return self.logits(params, x), aux
+
+    def loss(self, params: Params, batch: Params) -> jax.Array:
+        x, _ = self.hidden(params, batch, training=True)
+        return self._xent(params, x, batch["labels"])
+
+    # -- decode -------------------------------------------------------------
+
+    def init_cache(self, batch: int, seq_len: int, *,
+                   params: Optional[Params] = None,
+                   frames: Optional[jax.Array] = None) -> Params:
+        cfg = self.cfg
+        cache = super().init_cache(batch, seq_len)
+        T = cfg.encoder_seq
+        dtype = _dt(cfg.compute_dtype)
+        if params is not None and frames is not None:
+            enc_out = self.encode(params, frames)
+
+            def per_layer(p):
+                k = (enc_out @ p["cross"]["wk"]).reshape(
+                    batch, T, cfg.num_kv_heads, cfg.head_dim)
+                v = (enc_out @ p["cross"]["wv"]).reshape(
+                    batch, T, cfg.num_kv_heads, cfg.head_dim)
+                return k, v
+
+            ck, cv = jax.vmap(per_layer)(params["layers"])
+            cache["cross_k"], cache["cross_v"] = ck, cv
+        else:
+            cache["cross_k"] = jnp.zeros(
+                (cfg.num_layers, batch, T, cfg.num_kv_heads, cfg.head_dim), dtype)
+            cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+        return cache
+
+    def decode_block(self, p: Params, x: jax.Array, cache_sl: Params, *,
+                     pos, window) -> Tuple[jax.Array, Params]:
+        cfg = self.cfg
+        h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        attn_out, nk, nv, npos = layers.decode_attention(
+            p["attn"], cfg, h, pos=pos, cache_k=cache_sl["k"],
+            cache_v=cache_sl["v"], cache_positions=cache_sl["pos_tab"],
+            window=window)
+        x = x + attn_out
+        hc = layers.rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(cfg.encoder_seq, dtype=jnp.int32),
+            (x.shape[0], cfg.encoder_seq))
+        B = x.shape[0]
+        positions = jnp.broadcast_to(pos[None], (B,))[:, None]
+        x = x + layers.attention(
+            p["cross"], cfg, hc, positions=positions, window=jnp.int32(0),
+            kv=(cache_sl["cross_k"], cache_sl["cross_v"]),
+            kv_positions=kv_pos, causal=False)
+        h2 = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + layers.mlp(p["mlp"], h2)
+        return x, {"k": nk, "v": nv, "pos_tab": npos,
+                   "cross_k": cache_sl["cross_k"],
+                   "cross_v": cache_sl["cross_v"]}

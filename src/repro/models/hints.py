@@ -1,0 +1,72 @@
+"""Activation sharding hints.
+
+Model code calls ``hint(x, "<site>")`` at the canonical cut points; by
+default this is a no-op (CPU tests, testbed runtime). The production
+launcher installs a site → NamedSharding table built from the mesh
+(``repro.launch.sharding.make_activation_rules``), turning each hint into
+``with_sharding_constraint``. Pinning activations forces GSPMD into the
+Megatron-style layout (batch on ``data``, features on ``model``) instead
+of letting weight-layout propagation replicate activation rows.
+
+Sites (logical shapes, before any vmap batching):
+  act_btd      (B, S, d)     residual stream        -> (data, None, None)
+  act_btf      (B, S, f)     mlp hidden             -> (data, None, model)
+  act_bth      (B, S, H·hd)  attention projections  -> (data, None, model)
+  moe_disp_d   (B, E, C, d)  MoE dispatch buffer    -> (data, model?, ...)
+  moe_disp_f   (B, E, C, f)  MoE expert hidden      -> (data, model?, ...)
+  logits_chunk (B, C, V)     xent logits chunk      -> (data, None, model)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+
+_RULES: Optional[Dict[str, Any]] = None
+
+
+def set_rules(rules: Optional[Dict[str, Any]]) -> None:
+    global _RULES
+    _RULES = rules
+
+
+def clear_rules() -> None:
+    set_rules(None)
+
+
+def hint(x: jax.Array, site: str) -> jax.Array:
+    if _RULES is None:
+        return x
+    sh = _RULES.get(site)
+    if sh is None:
+        return x
+    # divisible-or-skip: explicit shardings must divide evenly (e.g. the
+    # B=1 long_500k batch can't take the data axis).
+    spec = getattr(sh, "spec", None)
+    if spec is not None and hasattr(sh, "mesh"):
+        sizes = dict(zip(sh.mesh.axis_names, sh.mesh.devices.shape))
+        if len(spec) > x.ndim:
+            return x
+        for dim, names in enumerate(spec):
+            if names is None:
+                continue
+            for name in ((names,) if isinstance(names, str) else names):
+                n = sizes.get(name, 1)
+                if x.shape[dim] % n != 0 or x.shape[dim] < n:
+                    return x
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+class rules_ctx:
+    """Context manager: install rules for the duration of a lowering."""
+
+    def __init__(self, rules: Optional[Dict[str, Any]]):
+        self.rules = rules
+
+    def __enter__(self):
+        set_rules(self.rules)
+        return self
+
+    def __exit__(self, *exc):
+        clear_rules()
+        return False

@@ -1,0 +1,327 @@
+"""Core NN layers: norms, RoPE, GQA attention (cache/sliding/softcap), MLP.
+
+All layers are pure functions over explicit parameter pytrees (dicts of
+jnp arrays). Weights for projections are stored flat 2-D ``(d_in, d_out)``
+so tensor-parallel sharding never depends on head-count divisibility.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.hints import hint
+
+Params = Dict[str, Any]
+
+BIG_NEG = -2.3819763e38  # most-negative bf16, the standard XLA mask value
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d_in, jnp.float32))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg, dtype) -> Params:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, dtype),
+        "wk": dense_init(ks[1], d, KV * hd, dtype),
+        "wv": dense_init(ks[2], d, KV * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def _mask_logits(logits, q_pos, k_pos, window, causal: bool):
+    """Mask: causal + optional sliding window.  ``window`` is a traced
+    int32 scalar (0 = full attention) so layers with different windows can
+    share one scanned computation."""
+    dist = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = (dist >= 0) if causal else jnp.ones_like(dist, dtype=bool)
+    win = jnp.where(window > 0, window, jnp.iinfo(jnp.int32).max)
+    ok = ok & (dist < win)
+    return jnp.where(ok[..., None, :, :], logits, BIG_NEG)
+
+
+# Above this many key positions attention switches to the blocked
+# (online-softmax) path so the (S, T) logit matrix is never materialized.
+# The Pallas flash-attention kernel implements the same blocking on TPU.
+BLOCKED_ATTN_THRESHOLD = 4096
+BLOCK_KV = 1024
+
+
+def _blocked_attention(q, k, v, *, q_pos, k_pos, window, softcap,
+                       causal: bool, kv_mask=None) -> jax.Array:
+    """Flash-style attention: scan over KV blocks with an online softmax.
+
+    q: (B, S, G, R, hd); k/v: (B, T, G, hd); q_pos: (B, S); k_pos: (B, T).
+    Memory is O(S · BLOCK_KV) instead of O(S · T). Exact, differentiable.
+    Returns fp32 (B, S, G, R, hd).
+    """
+    B, S, G, R, hd = q.shape
+    T = k.shape[1]
+    nb = -(-T // BLOCK_KV)
+    pad = nb * BLOCK_KV - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+        if kv_mask is not None:
+            kv_mask = jnp.pad(kv_mask, ((0, 0), (0, pad)))
+    kb = jnp.moveaxis(k.reshape(B, nb, BLOCK_KV, G, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nb, BLOCK_KV, G, hd), 1, 0)
+    pb = jnp.moveaxis(k_pos.reshape(B, nb, BLOCK_KV), 1, 0)
+    mb = jnp.moveaxis(
+        (kv_mask if kv_mask is not None
+         else jnp.ones_like(k_pos, bool)).reshape(B, nb, BLOCK_KV), 1, 0)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    # shard the query sequence over ``model`` for the blocked scan:
+    # queries are independent, so this keeps the (B, S, G, R, BK) logit
+    # block sharded even when the head count doesn't divide the mesh
+    # (hymba: 25 heads). KV blocks stay replicated across model ranks.
+    qf = hint(q.astype(jnp.float32) * scale, "attn_q_seq")
+    q_pos = hint(q_pos, "attn_pos_seq") if q_pos.shape[-1] == qf.shape[1] \
+        else q_pos
+    win = jnp.where(window > 0, window, jnp.iinfo(jnp.int32).max)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, pblk, mblk = blk
+        lg = jnp.einsum("bsgrh,btgh->bsgrt", qf, kblk,
+                        preferred_element_type=jnp.float32)
+        if softcap and softcap > 0:
+            lg = softcap * jnp.tanh(lg / softcap)
+        ok = (pblk >= 0)[:, None, :] & mblk[:, None, :]      # (B, S?, BK)
+        if causal:
+            dist = q_pos[:, :, None] - pblk[:, None, :]
+            ok = ok & (dist >= 0) & (dist < win)
+        lg = jnp.where(ok[:, :, None, None, :] if ok.ndim == 3
+                       else ok[:, None, None, None, :], lg, BIG_NEG)
+        m_blk = jnp.max(lg, axis=-1)
+        m_new = jnp.maximum(m, m_blk)
+        p = jnp.exp(lg - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = (acc * corr[..., None]
+                   + jnp.einsum("bsgrt,btgh->bsgrh", p, vblk,
+                                preferred_element_type=jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, G, R), BIG_NEG, jnp.float32)
+    l0 = jnp.zeros((B, S, G, R), jnp.float32)
+    a0 = jnp.zeros((B, S, G, R, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
+                                  (kb, vb, pb, mb))
+    return hint(acc / jnp.maximum(l, 1e-30)[..., None], "attn_q_seq")
+
+
+def attention(params: Params, cfg, x: jax.Array, *,
+              positions: jax.Array,
+              window,
+              kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+              kv_positions: Optional[jax.Array] = None,
+              kv_mask: Optional[jax.Array] = None,
+              causal: bool = True) -> jax.Array:
+    """GQA attention (self- or cross-).
+
+    x: (B, S, d). positions: (B, S). When ``kv`` is given (decode with
+    cache, or cross-attention) it is (k, v) each (B, T, KV, hd) with
+    kv_positions (B, T) and optional validity kv_mask (B, T).
+    """
+    B, S, d = x.shape
+    H, KVh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    q = hint(x @ params["wq"], "act_bth").reshape(B, S, H, hd)
+    if kv is None:
+        k = hint(x @ params["wk"], "act_bth_kv").reshape(B, S, KVh, hd)
+        v = hint(x @ params["wv"], "act_bth_kv").reshape(B, S, KVh, hd)
+        k_pos = positions
+    else:
+        k, v = kv
+        k_pos = kv_positions
+
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        if kv is None:
+            k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+
+    if kv is None and cfg.rope_theta > 0:
+        # RoPE only on the self-attention path; cross-attention (whisper)
+        # attends to unroped encoder states.
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    rep = H // KVh
+    q = q.reshape(B, S, KVh, rep, hd)
+    T = k.shape[1]
+
+    if max(S, T) > BLOCKED_ATTN_THRESHOLD:
+        out = _blocked_attention(
+            q, k, v, q_pos=positions, k_pos=k_pos, window=window,
+            softcap=cfg.attn_softcap, causal=causal, kv_mask=kv_mask)
+        out = hint(out.astype(x.dtype).reshape(B, S, H * hd), "act_bth")
+        return hint((out @ params["wo"]).astype(x.dtype), "act_btd")
+
+    logits = jnp.einsum("bsgrh,btgh->bgrst", q, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = _softcap(logits, cfg.attn_softcap)
+
+    # masking: (B, g, r, S, T)
+    lg = logits.reshape(B, KVh * rep, S, T)
+    if causal:
+        lg = _mask_logits(lg, positions, k_pos, window, causal=True)
+    if kv_mask is not None:
+        lg = jnp.where(kv_mask[:, None, None, :], lg, BIG_NEG)
+    w = jax.nn.softmax(lg, axis=-1).astype(x.dtype)
+    w = w.reshape(B, KVh, rep, S, T)
+    out = hint(jnp.einsum("bgrst,btgh->bsgrh", w, v).reshape(B, S, H * hd),
+               "act_bth")
+    return hint((out @ params["wo"]).astype(x.dtype), "act_btd")
+
+
+def decode_attention(params: Params, cfg, x: jax.Array, *,
+                     pos: jax.Array,
+                     cache_k: jax.Array, cache_v: jax.Array,
+                     cache_positions: jax.Array,
+                     window) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Single-token decode with a (ring-buffered) KV cache.
+
+    x: (B, 1, d); pos: scalar int32 current position.
+    cache_k/v: (B, C, KV, hd); cache_positions: (B, C) int32 (-1 = empty).
+    Returns (out, new_k, new_v, new_positions).
+    """
+    B, S, d = x.shape
+    KVh, hd = cfg.num_kv_heads, cfg.head_dim
+    C = cache_k.shape[1]
+
+    k = (x @ params["wk"]).reshape(B, S, KVh, hd)
+    v = (x @ params["wv"]).reshape(B, S, KVh, hd)
+    if cfg.qk_norm:
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    positions = jnp.broadcast_to(pos[None], (B,))[:, None]  # (B,1)
+    if cfg.rope_theta > 0:
+        k = rope(k, positions, cfg.rope_theta)
+
+    slot = jnp.where(window > 0, pos % jnp.maximum(C, 1), pos)
+    slot = jnp.minimum(slot, C - 1)
+    new_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                         (0, slot, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                         (0, slot, 0, 0))
+    new_pos = jax.lax.dynamic_update_slice(
+        cache_positions, positions.astype(cache_positions.dtype), (0, slot))
+
+    q = (x @ params["wq"]).reshape(B, S, cfg.num_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+    if cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+
+    rep = cfg.num_heads // KVh
+    q = q.reshape(B, S, KVh, rep, hd)
+    logits = jnp.einsum("bsgrh,btgh->bgrst", q, new_k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = _softcap(logits, cfg.attn_softcap)
+    lg = logits.reshape(B, KVh * rep, S, C)
+    valid = new_pos >= 0
+    dist = pos - new_pos  # (B, C)
+    win = jnp.where(window > 0, window, jnp.iinfo(jnp.int32).max)
+    ok = valid & (dist >= 0) & (dist < win)
+    lg = jnp.where(ok[:, None, None, :], lg, BIG_NEG)
+    w = jax.nn.softmax(lg, axis=-1).astype(x.dtype).reshape(B, KVh, rep, S, C)
+    out = jnp.einsum("bgrst,btgh->bsgrh", w, new_v).reshape(B, S, cfg.num_heads * hd)
+    return (out @ params["wo"]).astype(x.dtype), new_k, new_v, new_pos
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, f: int, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(ks[0], d, f, dtype),
+        "wi_up": dense_init(ks[1], d, f, dtype),
+        "wo": dense_init(ks[2], f, d, dtype),
+    }
+
+
+def mlp(params: Params, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(hint(x @ params["wi_gate"], "act_btf"))
+    h = g * hint(x @ params["wi_up"], "act_btf")
+    return hint((h @ params["wo"]).astype(x.dtype), "act_btd")

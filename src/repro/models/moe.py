@@ -1,0 +1,120 @@
+"""Mixture-of-Experts with per-sequence-capacity, sort-free dispatch.
+
+Design (DESIGN.md §7): for each sequence row we compute top-k expert
+assignments, rank tokens within each expert by position (cumulative sum of
+the selection one-hot), and scatter token indices into a ``(B, E, C)``
+gather table, ``C = k·S/E·capacity_factor``. Tokens are gathered into a
+``(B, E, C, d)`` buffer, run through a batched SwiGLU expert einsum, and
+scatter-added back. Capacity-overflow tokens are dropped (pass through the
+residual), which is standard practice.
+
+Sharding: the batch dim stays on ``data``; the expert dim goes on ``model``
+when divisible (arctic: 128/16), otherwise the expert ffn dim is sharded
+(grok: 8 experts, f=32768). No global token sort and no (N, E·C) one-hot
+materialization, so memory stays O(tokens · d) per shard.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.hints import hint
+
+Params = Dict[str, Any]
+
+
+def moe_init(key, cfg, dtype) -> Params:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    p = {
+        "router": layers.dense_init(ks[0], d, E, dtype),
+        "wi_gate": (jax.random.normal(ks[1], (E, d, f), jnp.float32) * scale).astype(dtype),
+        "wi_up": (jax.random.normal(ks[2], (E, d, f), jnp.float32) * scale).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (E, f, d), jnp.float32)
+               / jnp.sqrt(jnp.asarray(f, jnp.float32))).astype(dtype),
+    }
+    if cfg.moe_dense_residual:
+        p["dense"] = layers.mlp_init(ks[4], d, cfg.moe_dense_ff, dtype)
+    return p
+
+
+def capacity(cfg, seq_len: int) -> int:
+    c = int(cfg.num_experts_per_tok * seq_len * cfg.capacity_factor
+            / cfg.num_experts)
+    return max(c, 4 if seq_len > 1 else cfg.num_experts_per_tok)
+
+
+def moe(params: Params, cfg, x: jax.Array) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d). Top-k routing with aux-loss-free dispatch.
+
+    Returns the combined expert output (plus arctic-style dense residual
+    when configured). Router runs in fp32.
+    """
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    C = capacity(cfg, S)
+
+    gates = jax.nn.softmax((x @ params["router"]).astype(jnp.float32), axis=-1)
+    topv, topi = jax.lax.top_k(gates, k)                    # (B, S, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # rank of each (token, slot) within its chosen expert: cumsum of one-hot
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.int32)       # (B, S, k, E)
+    flat = onehot.reshape(B, S * k, E)
+    ranks = jnp.cumsum(flat, axis=1) - flat                 # exclusive (B, S*k, E)
+    rank = (ranks * flat).sum(-1)                           # (B, S*k)
+    e_sel = topi.reshape(B, S * k)
+    w_sel = topv.reshape(B, S * k)
+    s_sel = jnp.broadcast_to(jnp.arange(S)[:, None], (S, k)).reshape(S * k)
+    keep = rank < C
+
+    # scatter token positions into the (B, E, C) dispatch table — the only
+    # scatter in the MoE path; (B, E, C) int32 is tiny, so SPMD
+    # replicating it is harmless.
+    b_idx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S * k))
+    tok_tab = jnp.full((B, E, C), -1, jnp.int32)
+    e_cl = jnp.where(keep, e_sel, E)     # drop → out-of-bounds → 'drop' mode
+    r_cl = jnp.where(keep, rank, C)
+    tok_tab = tok_tab.at[b_idx, e_cl, r_cl].set(
+        jnp.broadcast_to(s_sel[None], (B, S * k)), mode="drop")
+
+    valid = tok_tab >= 0
+    gather_idx = jnp.maximum(tok_tab, 0)                    # (B, E, C)
+    xe = jnp.take_along_axis(
+        x[:, None, :, :], gather_idx[..., None], axis=2)    # (B, E, C, d)
+    xe = hint(xe * valid[..., None].astype(x.dtype), "moe_disp_d")
+
+    h = jax.nn.silu(hint(jnp.einsum("becd,edf->becf", xe,
+                                    params["wi_gate"]), "moe_disp_f"))
+    h = h * hint(jnp.einsum("becd,edf->becf", xe, params["wi_up"]),
+                 "moe_disp_f")
+    ye = hint(jnp.einsum("becf,efd->becd", h, params["wo"]), "moe_disp_d")
+
+    # combine by GATHER, not scatter-add: out[b,s] = Σ_k w·ye[b, e, rank].
+    # take_along_axis carries batch_dims, which GSPMD partitions on the
+    # batch axis in both directions; an explicit-index scatter-add here
+    # replicates the full (B, S, d) activation in fp32 on every device.
+    slot = e_sel * C + jnp.minimum(rank, C - 1)             # (B, S*k)
+    ge = jnp.take_along_axis(ye.reshape(B, E * C, ye.shape[-1]),
+                             slot[..., None], axis=1)       # (B, S*k, d)
+    w_eff = (w_sel * keep).astype(ge.dtype)                 # (B, S*k)
+    y = (ge * w_eff[..., None]).reshape(B, S, k, d).sum(axis=2)
+
+    y = hint(y, "act_btd")
+    if cfg.moe_dense_residual:
+        y = y + layers.mlp(params["dense"], x)
+    return y
+
+
+def load_balance_loss(params: Params, cfg, x: jax.Array) -> jax.Array:
+    """Switch-style auxiliary load-balance loss (mean fraction · mean prob)."""
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    gates = jax.nn.softmax((x @ params["router"]).astype(jnp.float32), axis=-1)
+    _, topi = jax.lax.top_k(gates, k)
+    frac = jax.nn.one_hot(topi, E).sum(-2).mean(axis=(0, 1)) / k   # (E,)
+    prob = gates.mean(axis=(0, 1))
+    return E * jnp.sum(frac * prob)

@@ -1,0 +1,301 @@
+"""State-space sequence mixers: Mamba-style selective scan (hymba's SSM
+heads) and RWKV6 "Finch" data-dependent-decay WKV (attention-free).
+
+Full-sequence paths use ``lax.scan`` over time — a single while-loop in HLO
+(compile-friendly at 4k–500k). The TPU perf path for WKV6 is the chunked
+Pallas kernel in ``repro.kernels.wkv6`` (same math, chunk-parallel); model
+code keeps the scan form as the portable oracle.
+
+Decode uses the same cell functions on a carried state — the state is part
+of the FedFly checkpoint, so SSM archs migrate exactly like dense ones.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (hymba)
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg, dtype) -> Params:
+    d, N = cfg.d_model, cfg.ssm_state
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": layers.dense_init(ks[0], d, d, dtype),
+        "w_z": layers.dense_init(ks[1], d, d, dtype),
+        "w_B": layers.dense_init(ks[2], d, N, dtype),
+        "w_C": layers.dense_init(ks[3], d, N, dtype),
+        "w_dt": layers.dense_init(ks[4], d, d, dtype),
+        "dt_bias": jnp.zeros((d,), dtype),
+        "A_log": jnp.zeros((d, N), dtype),   # A = -exp(A_log) ∈ [-1, 0)-ish
+        "D": jnp.ones((d,), dtype),
+        "w_out": layers.dense_init(ks[5], d, d, dtype),
+    }
+
+
+def mamba_cell(params: Params, h: jax.Array, xt: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """One selective-scan step. h: (B, d, N) fp32; xt: (B, d_model)."""
+    xi = (xt @ params["w_x"]).astype(jnp.float32)           # (B, d)
+    z = xt @ params["w_z"]
+    Bt = (xt @ params["w_B"]).astype(jnp.float32)           # (B, N)
+    Ct = (xt @ params["w_C"]).astype(jnp.float32)
+    dt = jax.nn.softplus((xt @ params["w_dt"]).astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B, d)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))       # (d, N)
+    decay = jnp.exp(dt[..., None] * A[None])                # (B, d, N)
+    h = h * decay + (dt * xi)[..., None] * Bt[:, None, :]
+    y = (h * Ct[:, None, :]).sum(-1) + params["D"].astype(jnp.float32) * xi
+    out = (y.astype(xt.dtype) * jax.nn.silu(z)) @ params["w_out"]
+    return h, out
+
+
+def mamba_scan(params: Params, cfg, x: jax.Array,
+               h0: jax.Array | None = None
+               ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y (B, S, d), final state (B, d, N))."""
+    B, S, d = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, d, cfg.ssm_state), jnp.float32)
+
+    def step(h, xt):
+        h, y = mamba_cell(params, h, xt)
+        return h, y
+
+    hT, ys = jax.lax.scan(step, h0, jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(ys, 0, 1), hT
+
+
+def mamba_scan_chunked(params: Params, cfg, x: jax.Array,
+                       h0: jax.Array | None = None,
+                       chunk: int = 32) -> Tuple[jax.Array, jax.Array]:
+    """Chunk-parallel selective scan (§Perf bonus hillclimb for hymba).
+
+    Two changes vs ``mamba_scan``:
+      1. all per-token projections (xi, z, B, C, Δ, decay) hoisted out of
+         the recurrence and computed as whole-sequence matmuls;
+      2. the diagonal recurrence h_t = decay_t ⊙ h_{t-1} + u_t solved in
+         closed form inside CHUNK-token blocks via the log-space cumsum
+         identity  h_t = e^{c_t} (h_0 + Σ_{s≤t} u_s e^{-c_s}),
+         c_t = Σ_{τ≤t} log decay_τ — exact (≤1e-4 vs the sequential
+         scan). Stability: e^{-c} ≤ e^{chunk·|log w|}; mamba's Δ·A decay
+         can be much stronger than RWKV's, so the default chunk is 32
+         (fp32-safe for |log w| ≤ ~2.7; the sequential scan remains the
+         fallback for pathological decays).
+
+    The sequential loop shrinks S -> S/chunk and every remaining op is a
+    parallel (B, T, d, N) elementwise/cumsum — the memory roofline term
+    drops by ~the chunk factor.
+    """
+    B, S, d = x.shape
+    N = cfg.ssm_state
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    if h0 is None:
+        h0 = jnp.zeros((B, d, N), jnp.float32)
+
+    xi = (x @ params["w_x"]).astype(jnp.float32)            # (B, S, d)
+    z = x @ params["w_z"]
+    Bt = (x @ params["w_B"]).astype(jnp.float32)            # (B, S, N)
+    Ct = (x @ params["w_C"]).astype(jnp.float32)
+    dt = jax.nn.softplus((x @ params["w_dt"]).astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))       # (d, N)
+    logw = dt[..., None] * A[None, None]                    # (B,S,d,N) < 0
+    u = (dt * xi)[..., None] * Bt[:, :, None, :]            # (B, S, d, N)
+
+    nc = S // chunk
+
+    def to_chunks(t, trail):
+        return jnp.moveaxis(
+            t.reshape((B, nc, chunk) + trail), 1, 0)
+
+    lw = to_chunks(logw, (d, N))
+    uc = to_chunks(u, (d, N))
+    Cc = to_chunks(Ct, (N,))
+
+    def body(h, ch):
+        lw_, u_, C_ = ch
+        c = jnp.cumsum(lw_, axis=1)                          # inclusive
+        hs = jnp.exp(c) * (h[:, None]
+                           + jnp.cumsum(u_ * jnp.exp(-c), axis=1))
+        y = jnp.einsum("btdn,btn->btd", hs, C_)
+        return hs[:, -1], y
+
+    hT, ys = jax.lax.scan(jax.checkpoint(body), h0, (lw, uc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d)
+    y = y + params["D"].astype(jnp.float32) * xi
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["w_out"]
+    return out, hT
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch): data-dependent decay WKV
+# ---------------------------------------------------------------------------
+
+RWKV_HEAD = 64
+
+
+def rwkv_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    H = d // RWKV_HEAD
+    ks = jax.random.split(key, 9)
+    lora = max(32, d // 32)
+    return {
+        # token-shift mixing coefficients for r,k,v,w,g
+        "mu": (0.5 * jnp.ones((5, d))).astype(dtype),
+        "w_r": layers.dense_init(ks[0], d, d, dtype),
+        "w_k": layers.dense_init(ks[1], d, d, dtype),
+        "w_v": layers.dense_init(ks[2], d, d, dtype),
+        "w_g": layers.dense_init(ks[3], d, d, dtype),
+        "w_o": layers.dense_init(ks[4], d, d, dtype),
+        # data-dependent decay: w_t = exp(-exp(w0 + tanh(x A) B))
+        "decay_w0": (-6.0 * jnp.ones((d,))).astype(dtype),
+        "decay_A": layers.dense_init(ks[5], d, lora, dtype),
+        "decay_B": layers.dense_init(ks[6], lora, d, dtype),
+        "bonus_u": (jax.random.normal(ks[7], (H, RWKV_HEAD), jnp.float32)
+                    * 0.1).astype(dtype),
+        "ln_out": layers.layernorm_init(d, dtype),
+    }
+
+
+def _rwkv_mix(params, x, xprev):
+    """Token-shift interpolation for the five streams."""
+    mu = params["mu"].astype(x.dtype)
+    outs = []
+    for i in range(5):
+        outs.append(x + (xprev - x) * mu[i])
+    return outs  # xr, xk, xv, xw, xg
+
+
+def rwkv_decay(params: Params, xw: jax.Array) -> jax.Array:
+    """Data-dependent per-channel decay in (0, 1): the RWKV6 signature."""
+    lora = jnp.tanh(xw @ params["decay_A"]) @ params["decay_B"]
+    logw = params["decay_w0"].astype(jnp.float32) + lora.astype(jnp.float32)
+    return jnp.exp(-jnp.exp(logw))
+
+
+def rwkv_cell(params: Params, cfg, state, xt, xprev_t):
+    """One WKV6 step.
+
+    state: (B, H, K, V) fp32 matrix-valued state; xt/xprev_t: (B, d).
+    Returns (new_state, y (B, d)).
+    """
+    B, d = xt.shape
+    H = d // RWKV_HEAD
+    xr, xk, xv, xw, xg = _rwkv_mix(params, xt, xprev_t)
+    r = (xr @ params["w_r"]).reshape(B, H, RWKV_HEAD).astype(jnp.float32)
+    k = (xk @ params["w_k"]).reshape(B, H, RWKV_HEAD).astype(jnp.float32)
+    v = (xv @ params["w_v"]).reshape(B, H, RWKV_HEAD).astype(jnp.float32)
+    g = jax.nn.silu(xg @ params["w_g"])
+    w = rwkv_decay(params, xw).reshape(B, H, RWKV_HEAD)     # (B, H, K)
+    u = params["bonus_u"].astype(jnp.float32)               # (H, K)
+
+    kv = k[..., :, None] * v[..., None, :]                  # (B, H, K, V)
+    y = jnp.einsum("bhk,bhkv->bhv", r, state + u[None, :, :, None] * kv)
+    new_state = state * w[..., None] + kv
+    y = y.reshape(B, d).astype(xt.dtype)
+    y = layers.layernorm(params["ln_out"], y, cfg.norm_eps) * g
+    return new_state, y @ params["w_o"]
+
+
+def rwkv_scan_chunked(params: Params, cfg, x: jax.Array,
+                      state0: jax.Array | None = None,
+                      xprev0: jax.Array | None = None,
+                      chunk: int = 64):
+    """Chunk-parallel WKV6 (DESIGN.md §8): closed form inside CHUNK-token
+    blocks, recurrent state carry between blocks. Same math as
+    ``rwkv_scan`` (tested ≤1e-4), but the sequential loop shrinks S ->
+    S/CHUNK and the inner work becomes causally-masked (T, T)/(T, K)
+    matmuls — MXU-shaped, and ~S·d fewer HBM round trips.
+
+    Derivation: with S_{t+1} = diag(w_t) S_t + k_t v_tᵀ and
+    y_t = r_t·(S_t + u⊙k_t v_tᵀ), let ce_t = Σ_{τ<t} log w_τ (exclusive
+    cumsum). Then a_t = r_t⊙exp(ce_t), b_s = k_s⊙exp(-ce_{s+1}):
+      y_t = a_t·S_0 + Σ_{s<t} (a_t·b_s) v_s + (r_t⊙u·k_t) v_t
+      S_T = exp(ce_T)⊙(S_0 + Σ_s b_s v_sᵀ)
+    exp(-ce) ≤ exp(chunk·|log w|): fp32-safe for chunk ≤ 64 at the
+    strongest representable decay.
+    """
+    B, S, d = x.shape
+    H = d // RWKV_HEAD
+    K = RWKV_HEAD
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    if state0 is None:
+        state0 = jnp.zeros((B, H, K, K), jnp.float32)
+    if xprev0 is None:
+        xprev0 = jnp.zeros((B, d), x.dtype)
+
+    # token-shift mixing over the whole sequence (parallel)
+    xprev = jnp.concatenate([xprev0[:, None], x[:, :-1]], axis=1)
+    mu = params["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = [x + (xprev - x) * mu[i] for i in range(5)]
+    r = (xr @ params["w_r"]).reshape(B, S, H, K).astype(jnp.float32)
+    k = (xk @ params["w_k"]).reshape(B, S, H, K).astype(jnp.float32)
+    v = (xv @ params["w_v"]).reshape(B, S, H, K).astype(jnp.float32)
+    g = jax.nn.silu(xg @ params["w_g"])
+    w = rwkv_decay(params, xw).reshape(B, S, H, K)          # (0,1) fp32
+    u = params["bonus_u"].astype(jnp.float32)               # (H, K)
+
+    nc = S // chunk
+
+    def to_chunks(t):       # (B, S, H, K) -> (nc, B, H, chunk, K)
+        return jnp.moveaxis(t.reshape(B, nc, chunk, H, K), (1, 3), (0, 2))
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+    logw = jnp.log(jnp.maximum(wc, 1e-38))                  # < 0
+    ce = jnp.cumsum(logw, axis=-2) - logw                   # exclusive
+    ce_end = ce[..., -1:, :] + logw[..., -1:, :]            # full-chunk sum
+
+    a = rc * jnp.exp(ce)
+    b = kc * jnp.exp(-(ce + logw))
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def body(S0, ch):
+        a_, b_, rc_, kc_, vc_, ce_end_ = ch
+        inter = jnp.einsum("bhtk,bhkv->bhtv", a_, S0)
+        A = jnp.einsum("bhtk,bhsk->bhts", a_, b_)
+        A = jnp.where(mask[None, None], A, 0.0)
+        diag = jnp.einsum("bhtk,bhtk->bht", rc_ * u[None, :, None, :], kc_)
+        intra = jnp.einsum("bhts,bhsv->bhtv", A, vc_) \
+            + diag[..., None] * vc_
+        S1 = ((jnp.exp(ce_end_)).swapaxes(-2, -1)
+              * (S0 + jnp.einsum("bhsk,bhsv->bhkv", b_, vc_)))
+        return S1, inter + intra
+
+    stateT, ys = jax.lax.scan(jax.checkpoint(body), state0,
+                              (a, b, rc, kc, vc, ce_end))
+    # (nc, B, H, chunk, K) -> (B, S, d)
+    y = jnp.moveaxis(ys, (0, 2), (1, 3)).reshape(B, S, d).astype(x.dtype)
+    y = layers.layernorm(params["ln_out"], y, cfg.norm_eps) * g
+    return y @ params["w_o"], (stateT, x[:, -1])
+
+
+def rwkv_scan(params: Params, cfg, x: jax.Array,
+              state0: jax.Array | None = None,
+              xprev0: jax.Array | None = None):
+    """x: (B, S, d) -> (y (B, S, d), (final_state, last_x))."""
+    B, S, d = x.shape
+    H = d // RWKV_HEAD
+    if state0 is None:
+        state0 = jnp.zeros((B, H, RWKV_HEAD, RWKV_HEAD), jnp.float32)
+    if xprev0 is None:
+        xprev0 = jnp.zeros((B, d), x.dtype)
+
+    def step(carry, xt):
+        state, xprev = carry
+        state, y = rwkv_cell(params, cfg, state, xt, xprev)
+        return (state, xt), y
+
+    (stateT, xlast), ys = jax.lax.scan(step, (state0, xprev0),
+                                       jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(ys, 0, 1), (stateT, xlast)

@@ -1,0 +1,369 @@
+"""Generic decoder-only transformer covering the dense / moe / ssm /
+hybrid / vlm families.
+
+Layers are *stacked* on a leading L axis and applied with ``lax.scan`` +
+``jax.checkpoint`` (remat): HLO stays one loop regardless of depth, which
+keeps full-config lowering tractable and activation memory O(1 layer).
+Per-layer heterogeneity (gemma2 local/global alternation) is carried by a
+scanned ``windows: (L,) int32`` array (0 = full attention).
+
+The stacked layout is also what makes FedFly splits trivial: the device
+stage is ``layers[:SP]`` and the server stage ``layers[SP:]`` — a leading-
+axis slice of the same pytree (see repro.core.split).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, moe as moe_lib, ssm as ssm_lib
+from repro.models.hints import hint
+
+Params = Dict[str, Any]
+
+
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """Static per-layer sliding-window sizes (0 = full attention)."""
+    L, w, period = cfg.num_layers, cfg.sliding_window, cfg.local_global_period
+    if w <= 0:
+        return np.zeros((L,), np.int32)
+    if period <= 0:           # all layers local
+        return np.full((L,), w, np.int32)
+    out = np.full((L,), w, np.int32)
+    out[period - 1::period] = 0   # every period-th layer is global
+    return out
+
+
+def _dt(name: str):
+    return jnp.dtype(name)
+
+
+def cast_layer_params(p: Params, dtype) -> Params:
+    """Cast float params to the compute dtype at point of use (params are
+    stored in ``param_dtype``, matmuls run in ``compute_dtype``)."""
+    return jax.tree.map(
+        lambda w: w.astype(dtype)
+        if jnp.issubdtype(w.dtype, jnp.floating) else w, p)
+
+
+class TransformerLM:
+    """Pure-function model; ``cfg`` is the only instance state."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- init ---------------------------------------------------------------
+
+    def init_layer(self, key) -> Params:
+        cfg, dtype = self.cfg, _dt(self.cfg.param_dtype)
+        ks = jax.random.split(key, 6)
+        p: Params = {"ln1": layers.rmsnorm_init(cfg.d_model, dtype),
+                     "ln2": layers.rmsnorm_init(cfg.d_model, dtype)}
+        if cfg.rwkv:
+            p["rwkv"] = ssm_lib.rwkv_init(ks[0], cfg, dtype)
+            p["cmix"] = {
+                "mu": (0.5 * jnp.ones((2, cfg.d_model))).astype(dtype),
+                "wk": layers.dense_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+                "wv": layers.dense_init(ks[2], cfg.d_ff, cfg.d_model, dtype),
+                "wr": layers.dense_init(ks[3], cfg.d_model, cfg.d_model, dtype),
+            }
+            return p
+        p["attn"] = layers.attention_init(ks[0], cfg, dtype)
+        if cfg.hybrid_attn_ssm:
+            p["ssm"] = ssm_lib.mamba_init(ks[1], cfg, dtype)
+            p["attn_out_ln"] = layers.rmsnorm_init(cfg.d_model, dtype)
+            p["ssm_out_ln"] = layers.rmsnorm_init(cfg.d_model, dtype)
+        if cfg.is_moe:
+            p["moe"] = moe_lib.moe_init(ks[2], cfg, dtype)
+        else:
+            p["mlp"] = layers.mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype)
+        return p
+
+    def init(self, key) -> Params:
+        cfg, dtype = self.cfg, _dt(self.cfg.param_dtype)
+        kl, ke, kh = jax.random.split(key, 3)
+        stacked = jax.vmap(self.init_layer)(jax.random.split(kl, cfg.num_layers))
+        p = {
+            "embed": layers.embed_init(ke, cfg.vocab_size, cfg.d_model, dtype),
+            "layers": stacked,
+            "final_norm": layers.rmsnorm_init(cfg.d_model, dtype),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = layers.dense_init(kh, cfg.d_model, cfg.vocab_size, dtype)
+        return p
+
+    def param_specs(self, key=None) -> Params:
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    # -- blocks -------------------------------------------------------------
+
+    def _cmix(self, p: Params, x: jax.Array, xprev: jax.Array) -> jax.Array:
+        """RWKV channel mixing (token-shifted squared-relu gate)."""
+        mu = p["mu"].astype(x.dtype)
+        xk = x + (xprev - x) * mu[0]
+        xr = x + (xprev - x) * mu[1]
+        k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+        return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+
+    def block(self, p: Params, x: jax.Array, *, positions: jax.Array,
+              window, training: bool) -> Tuple[jax.Array, Params]:
+        """Full-sequence block. Returns (x, aux) where aux carries prefill
+        cache entries and the MoE aux loss."""
+        cfg = self.cfg
+        aux: Params = {}
+        if cfg.rwkv:
+            h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+            scan_fn = (ssm_lib.rwkv_scan_chunked if cfg.rwkv_chunked
+                       else ssm_lib.rwkv_scan)
+            y, (state, xlast) = scan_fn(p["rwkv"], cfg, h)
+            x = x + y
+            h2 = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+            h2prev = jnp.pad(h2[:, :-1], ((0, 0), (1, 0), (0, 0)))
+            x = x + self._cmix(p["cmix"], h2, h2prev)
+            aux["rwkv_state"] = state
+            aux["rwkv_xprev"] = xlast
+            aux["cmix_xprev"] = h2[:, -1]
+            return x, aux
+
+        h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        attn_out = layers.attention(p["attn"], cfg, h, positions=positions,
+                                    window=window)
+        if cfg.hybrid_attn_ssm:
+            mscan = (ssm_lib.mamba_scan_chunked if cfg.mamba_chunked
+                     else ssm_lib.mamba_scan)
+            ssm_out, state = mscan(p["ssm"], cfg, h)
+            mixed = 0.5 * (layers.rmsnorm(p["attn_out_ln"], attn_out, cfg.norm_eps)
+                           + layers.rmsnorm(p["ssm_out_ln"], ssm_out, cfg.norm_eps))
+            x = x + mixed
+            aux["ssm_state"] = state
+        else:
+            x = x + attn_out
+        h2 = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if cfg.is_moe:
+            x = x + moe_lib.moe(p["moe"], cfg, h2)
+            if training:
+                aux["moe_loss"] = moe_lib.load_balance_loss(p["moe"], cfg, h2)
+        else:
+            x = x + layers.mlp(p["mlp"], h2)
+        return x, aux
+
+    # -- full forward (train / prefill) -------------------------------------
+
+    def apply_layers(self, stacked: Params, x: jax.Array, *,
+                     positions: jax.Array, windows: jax.Array,
+                     training: bool, collect_cache: bool = False,
+                     remat: bool = True) -> Tuple[jax.Array, Params]:
+        """Scan ``x`` through a stacked slice of layers."""
+        cfg = self.cfg
+
+        def body(carry, per_layer):
+            p, window = per_layer
+            p = cast_layer_params(p, _dt(cfg.compute_dtype))
+            y, aux = self.block(p, carry, positions=positions, window=window,
+                                training=training)
+            y = hint(y, "act_btd")
+            out_aux: Params = {}
+            if training and cfg.is_moe:
+                out_aux["moe_loss"] = aux.get("moe_loss", jnp.float32(0))
+            if collect_cache:
+                if cfg.rwkv:
+                    out_aux.update({k: aux[k] for k in
+                                    ("rwkv_state", "rwkv_xprev", "cmix_xprev")})
+                else:
+                    h = layers.rmsnorm(p["ln1"], carry, cfg.norm_eps)
+                    k = (h @ p["attn"]["wk"]).reshape(
+                        *h.shape[:2], cfg.num_kv_heads, cfg.head_dim)
+                    if cfg.qk_norm:
+                        k = layers.rmsnorm(p["attn"]["k_norm"], k, cfg.norm_eps)
+                    if cfg.rope_theta > 0:
+                        k = layers.rope(k, positions, cfg.rope_theta)
+                    v = (h @ p["attn"]["wv"]).reshape(
+                        *h.shape[:2], cfg.num_kv_heads, cfg.head_dim)
+                    out_aux["k"] = k
+                    out_aux["v"] = v
+                    if cfg.hybrid_attn_ssm:
+                        out_aux["ssm_state"] = aux["ssm_state"]
+            return y, out_aux
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, aux = jax.lax.scan(body, x, (stacked, windows))
+        return x, aux
+
+    def embed_tokens(self, params: Params, tokens: jax.Array,
+                     vision_embeds: Optional[jax.Array] = None) -> jax.Array:
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))
+        if cfg.vision_prefix > 0:
+            assert vision_embeds is not None, "vlm arch needs vision_embeds"
+            x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+        return hint(x.astype(_dt(cfg.compute_dtype)), "act_btd")
+
+    def logits(self, params: Params, x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        out = (x @ head).astype(jnp.float32)
+        if cfg.logit_softcap and cfg.logit_softcap > 0:
+            out = cfg.logit_softcap * jnp.tanh(out / cfg.logit_softcap)
+        return out
+
+    def hidden(self, params: Params, batch: Params, *,
+               training: bool = True, collect_cache: bool = False,
+               remat: bool = True) -> Tuple[jax.Array, Params]:
+        """Trunk only — embeddings + layer stack, no head.
+        batch: {"tokens": (B, S_text) [, "vision_embeds": (B, P, d)]}."""
+        cfg = self.cfg
+        x = self.embed_tokens(params, batch["tokens"],
+                              batch.get("vision_embeds"))
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        windows = jnp.asarray(layer_windows(cfg))
+        return self.apply_layers(params["layers"], x, positions=positions,
+                                 windows=windows, training=training,
+                                 collect_cache=collect_cache, remat=remat)
+
+    def forward(self, params: Params, batch: Params, *,
+                training: bool = True, collect_cache: bool = False,
+                remat: bool = True) -> Tuple[jax.Array, Params]:
+        x, aux = self.hidden(params, batch, training=training,
+                             collect_cache=collect_cache, remat=remat)
+        return self.logits(params, x), aux
+
+    # cross-entropy switches to the S-chunked path above this many
+    # (token × vocab) logit entries per row, so the (B, S, V) fp32 matrix
+    # is never materialized (gemma2's 256k vocab at 4k seq = 4 GB/row).
+    XENT_CHUNK_THRESHOLD = 1 << 26
+    XENT_CHUNK = 512
+
+    def _xent(self, params: Params, x: jax.Array, labels: jax.Array
+              ) -> jax.Array:
+        """Mean next-token NLL from final hidden states (B, S, d)."""
+        cfg = self.cfg
+        B, S, _ = x.shape
+        if (S * cfg.vocab_size <= self.XENT_CHUNK_THRESHOLD
+                or S % self.XENT_CHUNK != 0):
+            lp = jax.nn.log_softmax(self.logits(params, x), axis=-1)
+            return -jnp.take_along_axis(lp, labels[..., None],
+                                        axis=-1)[..., 0].mean()
+
+        C = self.XENT_CHUNK
+        xc = jnp.moveaxis(x.reshape(B, S // C, C, x.shape[-1]), 1, 0)
+        lc = jnp.moveaxis(labels.reshape(B, S // C, C), 1, 0)
+
+        def body(_, inp):
+            xi, li = inp
+            lg = hint(self.logits(params, xi), "logits_chunk")
+            lse = jax.nn.logsumexp(lg, axis=-1)
+            gold = jnp.take_along_axis(lg, li[..., None], axis=-1)[..., 0]
+            return None, (lse - gold).sum()
+
+        _, nll = jax.lax.scan(jax.checkpoint(body), None, (xc, lc))
+        return nll.sum() / (B * S)
+
+    def loss(self, params: Params, batch: Params) -> jax.Array:
+        cfg = self.cfg
+        x, aux = self.hidden(params, batch, training=True)
+        if cfg.vision_prefix > 0:
+            x = x[:, cfg.vision_prefix:]
+        loss = self._xent(params, x, batch["labels"])
+        if cfg.is_moe:
+            loss = loss + 0.01 * jnp.mean(aux["moe_loss"])
+        return loss
+
+    # -- decode -------------------------------------------------------------
+
+    def cache_len(self, seq_len: int) -> int:
+        w = layer_windows(self.cfg)
+        if self.cfg.rwkv:
+            return 0
+        if (w > 0).all():
+            return int(min(seq_len, int(w.max())))
+        return seq_len
+
+    def init_cache(self, batch: int, seq_len: int) -> Params:
+        # KV caches live in compute dtype (bf16 on TPU) — 2x HBM saving
+        # over fp32 params, standard serving practice.
+        cfg = self.cfg
+        L, dtype = cfg.num_layers, _dt(cfg.compute_dtype)
+        cache: Params = {}
+        if not cfg.rwkv:
+            C = self.cache_len(seq_len)
+            cache["k"] = jnp.zeros((L, batch, C, cfg.num_kv_heads, cfg.head_dim), dtype)
+            cache["v"] = jnp.zeros_like(cache["k"])
+            cache["pos_tab"] = jnp.full((L, batch, C), -1, jnp.int32)
+        if cfg.hybrid_attn_ssm:
+            cache["ssm_state"] = jnp.zeros((L, batch, cfg.d_model, cfg.ssm_state),
+                                           jnp.float32)
+        if cfg.rwkv:
+            H = cfg.d_model // ssm_lib.RWKV_HEAD
+            cache["rwkv_state"] = jnp.zeros(
+                (L, batch, H, ssm_lib.RWKV_HEAD, ssm_lib.RWKV_HEAD), jnp.float32)
+            cache["rwkv_xprev"] = jnp.zeros((L, batch, cfg.d_model), dtype)
+            cache["cmix_xprev"] = jnp.zeros((L, batch, cfg.d_model), dtype)
+        return cache
+
+    def decode_block(self, p: Params, x: jax.Array, cache_sl: Params, *,
+                     pos: jax.Array, window) -> Tuple[jax.Array, Params]:
+        cfg = self.cfg
+        new_sl: Params = {}
+        if cfg.rwkv:
+            h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+            state, y = ssm_lib.rwkv_cell(p["rwkv"], cfg, cache_sl["rwkv_state"],
+                                         h[:, 0], cache_sl["rwkv_xprev"])
+            x = x + y[:, None]
+            h2 = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+            x = x + self._cmix(p["cmix"], h2[:, 0],
+                               cache_sl["cmix_xprev"])[:, None]
+            new_sl = {"rwkv_state": state, "rwkv_xprev": h[:, 0],
+                      "cmix_xprev": h2[:, 0]}
+            return x, new_sl
+
+        h = layers.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        attn_out, nk, nv, npos = layers.decode_attention(
+            p["attn"], cfg, h, pos=pos, cache_k=cache_sl["k"],
+            cache_v=cache_sl["v"], cache_positions=cache_sl["pos_tab"],
+            window=window)
+        new_sl = {"k": nk, "v": nv, "pos_tab": npos}
+        if cfg.hybrid_attn_ssm:
+            state, ssm_out = ssm_lib.mamba_cell(p["ssm"],
+                                                cache_sl["ssm_state"], h[:, 0])
+            mixed = 0.5 * (layers.rmsnorm(p["attn_out_ln"], attn_out, cfg.norm_eps)
+                           + layers.rmsnorm(p["ssm_out_ln"], ssm_out[:, None],
+                                            cfg.norm_eps))
+            x = x + mixed
+            new_sl["ssm_state"] = state
+        else:
+            x = x + attn_out
+        h2 = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if cfg.is_moe:
+            x = x + moe_lib.moe(p["moe"], cfg, h2)
+        else:
+            x = x + layers.mlp(p["mlp"], h2)
+        return x, new_sl
+
+    def decode_step(self, params: Params, cache: Params, tokens: jax.Array,
+                    pos: jax.Array) -> Tuple[jax.Array, Params]:
+        """One decode step. tokens: (B, 1); pos: scalar int32 position.
+        Returns (logits (B, 1, V), new cache)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = (x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))
+             ).astype(_dt(cfg.compute_dtype))
+        windows = jnp.asarray(layer_windows(cfg))
+
+        def body(carry, per_layer):
+            p, window, cache_sl = per_layer
+            p = cast_layer_params(p, _dt(cfg.compute_dtype))
+            y, new_sl = self.decode_block(p, carry, cache_sl, pos=pos,
+                                          window=window)
+            return y, new_sl
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], windows, cache))
+        return self.logits(params, x), new_cache

@@ -1,0 +1,93 @@
+"""VGG-5 — the model FedFly evaluates (VGG-5 on CIFAR-10, §V.A).
+
+Layer list matches the FedFly/FedAdapt codebase: three conv+pool units
+followed by two FC layers. The model is expressed as an explicit layer
+*list* (heterogeneous), and the FedFly split points SP1/SP2/SP3 are the
+paper's: SP_k keeps the first k conv units on the device.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+# (type, spec) per layer. conv spec: (in_ch, out_ch, pool); fc: (in, out)
+VGG5_LAYERS: Tuple = (
+    ("conv", (3, 32, True)),
+    ("conv", (32, 64, True)),
+    ("conv", (64, 64, True)),
+    ("fc", (64 * 4 * 4, 128)),
+    ("fc", (128, 10)),
+)
+
+# paper split points: number of leading layers on the device stage
+SPLIT_POINTS = {"SP1": 1, "SP2": 2, "SP3": 3}
+
+
+class VGG5:
+    """CIFAR-10 VGG-5. Input (B, 32, 32, 3) NHWC float32."""
+
+    def __init__(self, num_classes: int = 10, image_size: int = 32):
+        self.num_classes = num_classes
+        self.image_size = image_size
+        self.layer_specs: Sequence = VGG5_LAYERS
+        self.num_layers = len(VGG5_LAYERS)
+        self.default_split = SPLIT_POINTS["SP2"]
+
+    def init(self, key) -> List[Params]:
+        params: List[Params] = []
+        ks = jax.random.split(key, self.num_layers)
+        for k, (kind, spec) in zip(ks, self.layer_specs):
+            if kind == "conv":
+                cin, cout, _ = spec
+                w = jax.random.normal(k, (3, 3, cin, cout), jnp.float32)
+                w = w * jnp.sqrt(2.0 / (9 * cin))
+                params.append({"w": w, "b": jnp.zeros((cout,), jnp.float32)})
+            else:
+                fin, fout = spec
+                w = jax.random.normal(k, (fin, fout), jnp.float32)
+                w = w * jnp.sqrt(2.0 / fin)
+                params.append({"w": w, "b": jnp.zeros((fout,), jnp.float32)})
+        return params
+
+    def apply_layer(self, idx: int, p: Params, x: jax.Array) -> jax.Array:
+        kind, spec = self.layer_specs[idx]
+        if kind == "conv":
+            _, _, pool = spec
+            x = jax.lax.conv_general_dilated(
+                x, p["w"], window_strides=(1, 1), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jax.nn.relu(x + p["b"])
+            if pool:
+                x = jax.lax.reduce_window(
+                    x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                    "VALID")
+            return x
+        if x.ndim > 2:
+            x = x.reshape(x.shape[0], -1)
+        x = x @ p["w"] + p["b"]
+        if idx < self.num_layers - 1:
+            x = jax.nn.relu(x)
+        return x
+
+    def apply_range(self, params: Sequence[Params], x: jax.Array,
+                    lo: int, hi: int) -> jax.Array:
+        for i in range(lo, hi):
+            x = self.apply_layer(i, params[i], x)
+        return x
+
+    def forward(self, params: Sequence[Params], x: jax.Array) -> jax.Array:
+        return self.apply_range(params, x, 0, self.num_layers)
+
+    def loss(self, params: Sequence[Params], batch: Params) -> jax.Array:
+        logits = self.forward(params, batch["images"])
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.take_along_axis(lp, batch["labels"][:, None],
+                                    axis=-1).mean()
+
+    def accuracy(self, params: Sequence[Params], batch: Params) -> jax.Array:
+        logits = self.forward(params, batch["images"])
+        return (jnp.argmax(logits, -1) == batch["labels"]).mean()

@@ -1,0 +1,99 @@
+"""Optimizers as pure (init, update) pairs over pytrees.
+
+SGD+momentum is the paper's optimizer (lr 0.01, momentum 0.9, §V.A); its
+state is part of the FedFly migration checkpoint. AdamW is provided for
+the LLM-scale architectures. ``momentum_dtype`` lets ≥100B-param archs keep
+momentum in bf16 so the train_4k dry-run fits HBM (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+OptState = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Params], OptState]
+    update: Callable[..., Tuple[Params, OptState]]  # (grads, state, params, lr)
+
+
+def sgd(momentum: float = 0.9, momentum_dtype: Optional[str] = None,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        def mk(p):
+            dt = jnp.dtype(momentum_dtype) if momentum_dtype else p.dtype
+            return jnp.zeros(p.shape, dt)
+        return {"mu": jax.tree.map(mk, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        def upd(g, mu, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            mu_new = momentum * mu.astype(jnp.float32) + g
+            p_new = p.astype(jnp.float32) - lr * mu_new
+            return p_new.astype(p.dtype), mu_new.astype(mu.dtype)
+        out = jax.tree.map(upd, grads, state["mu"], params)
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"mu": new_mu, "step": state["step"] + 1}
+
+    return Optimizer("sgd", init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1,
+          moment_dtype: Optional[str] = "float32") -> Optimizer:
+    def init(params):
+        def mk(p):
+            dt = jnp.dtype(moment_dtype) if moment_dtype else p.dtype
+            return jnp.zeros(p.shape, dt)
+        return {"m": jax.tree.map(mk, params),
+                "v": jax.tree.map(mk, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+            upd_ = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+            p_new = (p.astype(jnp.float32)
+                     - lr * (upd_ + weight_decay * p.astype(jnp.float32)))
+            return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        leaf = lambda t: isinstance(t, tuple)
+        return (jax.tree.map(lambda t: t[0], out, is_leaf=leaf),
+                {"m": jax.tree.map(lambda t: t[1], out, is_leaf=leaf),
+                 "v": jax.tree.map(lambda t: t[2], out, is_leaf=leaf),
+                 "step": step})
+
+    return Optimizer("adamw", init, update)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm

@@ -1,0 +1,41 @@
+"""LR schedules: constant (paper), cosine, and MiniCPM's WSD
+(warmup-stable-decay, arXiv:2404.06395 §4)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine(peak_lr: float, total_steps: int, warmup_steps: int = 0,
+           final_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = final_frac * peak_lr + (1 - final_frac) * peak_lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return f
+
+
+def wsd(peak_lr: float, total_steps: int, warmup_frac: float = 0.01,
+        decay_frac: float = 0.1, floor_frac: float = 0.1):
+    """Warmup-Stable-Decay: linear warmup, long flat plateau, sharp decay
+    in the final ``decay_frac`` of training (MiniCPM)."""
+    warmup_steps = max(int(total_steps * warmup_frac), 1)
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / warmup_steps
+        prog = jnp.clip((step - decay_start)
+                        / jnp.maximum(total_steps - decay_start, 1), 0, 1)
+        decay = peak_lr * (floor_frac ** prog)   # exponential to floor
+        out = jnp.where(step < warmup_steps, warm,
+                        jnp.where(step < decay_start, peak_lr, decay))
+        return out
+    return f

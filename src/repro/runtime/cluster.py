@@ -1,0 +1,159 @@
+"""Simulated FedFly cluster: devices, edge servers, central server.
+
+Mirrors the paper's lab testbed (§V.A): four Raspberry Pis, two x86 edge
+servers, one central server, Wi-Fi at 75 Mbps. Hardware profiles carry a
+sustained-FLOP/s estimate used by the *simulated clock*; per-batch stage
+times are
+
+    t = 3 · FLOPs_fwd(stage) / flops_per_s        (fwd + bwd ≈ 3× fwd)
+      + link time of the smashed activations (up) and their grads (down)
+
+with stage FLOPs taken from XLA's ``compiled.cost_analysis()`` of the
+actual device/server stage functions — the same machinery the TPU
+roofline analysis uses. Wall-clock CPU timings are also recorded so the
+33%/45% reduction claims can be checked on real (if rescaled) hardware.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import split as split_lib
+from repro.data.loader import Batcher
+from repro.runtime.transport import LinkModel
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# hardware profiles (paper testbed, §V.A)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HardwareProfile:
+    name: str
+    flops_per_s: float
+
+
+# Sustained practical throughputs (not peak datasheet numbers).
+PI3 = HardwareProfile("pi3", 2.4e9)       # 1.2GHz quad Cortex-A53
+PI4 = HardwareProfile("pi4", 6.0e9)       # 1.5GHz quad Cortex-A72
+EDGE_I5 = HardwareProfile("edge-i5", 6.0e10)
+EDGE_I7 = HardwareProfile("edge-i7", 9.0e10)
+CENTRAL_I5 = HardwareProfile("central-i5", 7.5e10)
+
+WIFI_75MBPS = LinkModel(bandwidth_bps=75e6, latency_s=0.005)
+
+
+# ---------------------------------------------------------------------------
+# cluster entities
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Device:
+    client_id: str
+    profile: HardwareProfile
+    batcher: Batcher
+    edge_id: str                      # current attachment
+    dev_params: Params = None
+    dev_opt: Params = None
+
+    @property
+    def num_samples(self) -> int:
+        return len(self.batcher.ds)
+
+
+@dataclass
+class ClientServerState:
+    """Per-client server-side training state held by an edge server."""
+    srv_params: Params
+    srv_opt: Params
+    epoch: int = 0
+    batch_idx: int = 0
+    last_loss: float = 0.0
+    last_grads: Optional[Params] = None
+
+
+@dataclass
+class EdgeServer:
+    edge_id: str
+    profile: HardwareProfile
+    clients: Dict[str, ClientServerState] = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# stage cost model (XLA cost analysis, cached per shape signature)
+# ---------------------------------------------------------------------------
+
+def _flops_of(fn: Callable, *args) -> float:
+    lowered = jax.jit(fn).lower(*args)
+    cost = lowered.compile().cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    return float(cost.get("flops", 0.0))
+
+
+class StageCostModel:
+    """FLOPs + smashed-bytes of the two stages for one (model, sp, batch
+    shape); memoized because XLA lowering is not free on CPU."""
+
+    def __init__(self):
+        self._cache: Dict[Tuple, Tuple[float, float, int]] = {}
+
+    def costs(self, model, dev: Params, srv: Params, batch: Params,
+              sp: int) -> Tuple[float, float, int]:
+        shapes = tuple((k, tuple(np.shape(v)))
+                       for k, v in sorted(batch.items()))
+        key = (id(model), sp, shapes)
+        if key not in self._cache:
+            dev_s = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype), dev)
+            srv_s = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype), srv)
+            batch_s = {k: jax.ShapeDtypeStruct(np.shape(v),
+                                               jnp.asarray(v).dtype)
+                       for k, v in batch.items()}
+            dev_fwd = _flops_of(
+                lambda d, b: split_lib.device_forward(model, d, b, sp),
+                dev_s, batch_s)
+            smashed = jax.eval_shape(
+                lambda d, b: split_lib.device_forward(model, d, b, sp),
+                dev_s, batch_s)
+            srv_fwd = _flops_of(
+                lambda s, sm, b: split_lib.server_loss(model, s, sm, b, sp),
+                srv_s, smashed, batch_s)
+            sm_bytes = sum(int(np.prod(s.shape)) * s.dtype.itemsize
+                           for s in jax.tree.leaves(smashed))
+            self._cache[key] = (dev_fwd, srv_fwd, sm_bytes)
+        return self._cache[key]
+
+
+def batch_time_s(dev_profile: HardwareProfile, edge_profile: HardwareProfile,
+                 link: LinkModel, dev_fwd_flops: float, srv_fwd_flops: float,
+                 smashed_nbytes: int) -> float:
+    """Simulated time of one split training batch (fwd+bwd ≈ 3× fwd)."""
+    t_dev = 3.0 * dev_fwd_flops / dev_profile.flops_per_s
+    t_srv = 3.0 * srv_fwd_flops / edge_profile.flops_per_s
+    t_link = link.transfer_time(smashed_nbytes) * 2  # smashed up, grads down
+    return t_dev + t_srv + t_link
+
+
+def make_testbed_devices(batchers: List[Batcher],
+                         edges: Tuple[str, str] = ("edge-A", "edge-B")
+                         ) -> List[Device]:
+    """The paper's four devices: Pi3_1, Pi3_2, Pi4_1, Pi4_2 — split across
+    two edge servers."""
+    profiles = [PI3, PI3, PI4, PI4]
+    names = ["pi3_1", "pi3_2", "pi4_1", "pi4_2"]
+    return [Device(n, p, b, edges[i % len(edges)])
+            for i, (n, p, b) in enumerate(zip(names, profiles, batchers))]
+
+
+def make_testbed_edges() -> List[EdgeServer]:
+    return [EdgeServer("edge-A", EDGE_I5), EdgeServer("edge-B", EDGE_I7)]

@@ -1,0 +1,120 @@
+"""Versioned, ISA-independent pytree serialization.
+
+Format (little-endian):
+  magic b"FFLY" | u32 version | u64 header_len | header JSON | leaf blobs
+
+The header holds the tree *skeleton* (nested dicts/lists/tuples with leaf
+indices) and per-leaf dtype/shape/codec. No pickle: checkpoints written on
+one host/ISA are readable on any other — this addresses the paper's
+"hardware heterogeneity" future-work item directly.
+
+Codecs:
+  raw   — exact bytes (bit-exact roundtrip; default for migration)
+  int8  — symmetric per-leaf int8 quantization of float leaves (4-8x
+          smaller payloads; a beyond-paper optimization of the 2 s
+          migration overhead, evaluated in benchmarks/bench_overhead.py)
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, List, Tuple
+
+import numpy as np
+
+MAGIC = b"FFLY"
+VERSION = 1
+
+_FLOATS = ("float16", "float32", "float64", "bfloat16")
+
+
+def _encode_skeleton(tree, leaves: List[np.ndarray]):
+    if isinstance(tree, dict):
+        return {"t": "dict",
+                "v": {k: _encode_skeleton(tree[k], leaves)
+                      for k in sorted(tree)}}
+    if isinstance(tree, (list, tuple)):
+        return {"t": "list" if isinstance(tree, list) else "tuple",
+                "v": [_encode_skeleton(x, leaves) for x in tree]}
+    arr = np.asarray(tree)
+    leaves.append(arr)
+    return {"t": "leaf", "i": len(leaves) - 1}
+
+
+def _decode_skeleton(node, leaves):
+    if node["t"] == "dict":
+        return {k: _decode_skeleton(v, leaves) for k, v in node["v"].items()}
+    if node["t"] in ("list", "tuple"):
+        seq = [_decode_skeleton(x, leaves) for x in node["v"]]
+        return seq if node["t"] == "list" else tuple(seq)
+    return leaves[node["i"]]
+
+
+def _leaf_bytes(arr: np.ndarray, codec: str) -> Tuple[dict, bytes]:
+    dtype = str(arr.dtype)
+    meta = {"dtype": dtype, "shape": list(arr.shape)}
+    if codec == "int8" and dtype in _FLOATS and arr.size > 64:
+        f32 = np.asarray(arr, np.float32)
+        scale = float(np.max(np.abs(f32))) / 127.0 or 1.0
+        q = np.clip(np.round(f32 / scale), -127, 127).astype(np.int8)
+        meta.update(codec="int8", scale=scale)
+        return meta, q.tobytes()
+    meta["codec"] = "raw"
+    if dtype == "bfloat16":
+        return meta, arr.view(np.uint16).tobytes()
+    return meta, arr.tobytes()
+
+
+def _leaf_from_bytes(meta: dict, blob: bytes) -> np.ndarray:
+    shape = tuple(meta["shape"])
+    if meta["codec"] == "int8":
+        q = np.frombuffer(blob, np.int8).reshape(shape)
+        out = (q.astype(np.float32) * meta["scale"])
+        import ml_dtypes  # noqa: PLC0415  (jax dependency, always present)
+        return out.astype(np.dtype(meta["dtype"])
+                          if meta["dtype"] != "bfloat16"
+                          else ml_dtypes.bfloat16)
+    if meta["dtype"] == "bfloat16":
+        import ml_dtypes  # noqa: PLC0415
+        return np.frombuffer(blob, np.uint16).view(
+            ml_dtypes.bfloat16).reshape(shape)
+    return np.frombuffer(blob, np.dtype(meta["dtype"])).reshape(shape).copy()
+
+
+def pack_pytree(tree: Any, codec: str = "raw") -> bytes:
+    leaves: List[np.ndarray] = []
+    skeleton = _encode_skeleton(tree, leaves)
+    metas, blobs = [], []
+    for arr in leaves:
+        m, b = _leaf_bytes(arr, codec)
+        m["nbytes"] = len(b)
+        metas.append(m)
+        blobs.append(b)
+    header = json.dumps({"skeleton": skeleton, "leaves": metas,
+                         "codec": codec}).encode()
+    out = bytearray()
+    out += MAGIC
+    out += VERSION.to_bytes(4, "little")
+    out += len(header).to_bytes(8, "little")
+    out += header
+    for b in blobs:
+        out += b
+    return bytes(out)
+
+
+def unpack_pytree(data: bytes) -> Any:
+    assert data[:4] == MAGIC, "bad magic"
+    version = int.from_bytes(data[4:8], "little")
+    assert version == VERSION, f"unsupported version {version}"
+    hlen = int.from_bytes(data[8:16], "little")
+    header = json.loads(data[16:16 + hlen].decode())
+    off = 16 + hlen
+    leaves = []
+    for meta in header["leaves"]:
+        blob = data[off:off + meta["nbytes"]]
+        off += meta["nbytes"]
+        leaves.append(_leaf_from_bytes(meta, blob))
+    return _decode_skeleton(header["skeleton"], leaves)
+
+
+def packed_size(tree: Any, codec: str = "raw") -> int:
+    return len(pack_pytree(tree, codec))

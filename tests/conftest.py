@@ -1,0 +1,39 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see the real
+single CPU device; only launch/dryrun.py forces 512 host devices."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.data.datasets import synthetic_tokens
+from repro.models.registry import ARCH_IDS, build_model, get_config, make_reduced
+
+
+def batch_for(cfg, B=2, S=16, seed=1):
+    b = {k: jnp.asarray(v)
+         for k, v in synthetic_tokens(B, S, cfg.vocab_size, seed).items()}
+    if cfg.vision_prefix:
+        b["vision_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 1), (B, cfg.vision_prefix, cfg.d_model))
+    if cfg.encoder_layers:
+        b["frames"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 2), (B, cfg.encoder_seq, cfg.d_model))
+    return b
+
+
+@pytest.fixture(scope="session")
+def reduced_models():
+    """Reduced (smoke-size) model + params per arch, built lazily and
+    cached for the whole session."""
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = make_reduced(get_config(name))
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            cache[name] = (cfg, model, params)
+        return cache[name]
+
+    return get

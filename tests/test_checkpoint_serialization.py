@@ -1,0 +1,118 @@
+"""Checkpoint + serialization: bit-exact raw roundtrips for arbitrary
+pytrees (hypothesis), bounded int8 error, EdgeCheckpoint metadata, and
+the pickle-free versioned format guards."""
+from __future__ import annotations
+
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.checkpoint import EdgeCheckpoint
+from repro.runtime import serialization as ser
+
+dtypes = st.sampled_from([np.float32, np.float16, np.int32, np.int8,
+                          np.int64])
+arrays = st.builds(
+    lambda shape, dt, seed: np.random.default_rng(seed)
+    .standard_normal(shape).astype(dt) if np.issubdtype(dt, np.floating)
+    else np.random.default_rng(seed).integers(-100, 100, shape).astype(dt),
+    hnp.array_shapes(min_dims=0, max_dims=3, max_side=8), dtypes,
+    st.integers(0, 2**31))
+
+
+@st.composite
+def pytrees(draw, depth=2):
+    if depth == 0:
+        return draw(arrays)
+    return draw(st.one_of(
+        arrays,
+        st.lists(pytrees(depth=depth - 1), min_size=1, max_size=3),
+        st.dictionaries(st.text("abcdef", min_size=1, max_size=4),
+                        pytrees(depth=depth - 1), min_size=1, max_size=3)))
+
+
+def _assert_tree_equal(a, b):
+    import jax
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@settings(max_examples=40, deadline=None)
+@given(tree=pytrees())
+def test_raw_roundtrip_bit_exact(tree):
+    data = ser.pack_pytree(tree, codec="raw")
+    back = ser.unpack_pytree(data)
+    _assert_tree_equal(tree, back)
+
+
+def test_bf16_roundtrip():
+    import ml_dtypes
+    x = np.arange(16, dtype=np.float32).astype(ml_dtypes.bfloat16)
+    back = ser.unpack_pytree(ser.pack_pytree({"x": x}))
+    assert back["x"].dtype == ml_dtypes.bfloat16
+    np.testing.assert_array_equal(back["x"], x)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_int8_bounded_error(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(256,)).astype(np.float32) * 5
+    back = ser.unpack_pytree(ser.pack_pytree({"x": x}, codec="int8"))["x"]
+    bound = np.abs(x).max() / 127.0 * 0.51 + 1e-6
+    assert np.max(np.abs(back - x)) <= bound
+
+
+def test_int8_smaller_payload():
+    x = {"w": np.random.default_rng(0).normal(size=(128, 128))
+         .astype(np.float32)}
+    raw = ser.packed_size(x, "raw")
+    q = ser.packed_size(x, "int8")
+    assert q < raw / 3
+
+
+def test_bad_magic_rejected():
+    with pytest.raises(AssertionError):
+        ser.unpack_pytree(b"NOPE" + b"\0" * 32)
+
+
+def test_int_leaves_never_quantized():
+    x = {"idx": np.arange(1000, dtype=np.int32)}
+    back = ser.unpack_pytree(ser.pack_pytree(x, codec="int8"))
+    np.testing.assert_array_equal(back["idx"], x["idx"])
+    assert back["idx"].dtype == np.int32
+
+
+def test_edge_checkpoint_roundtrip():
+    params = {"layers": {"w": np.ones((4, 4), np.float32)}}
+    opt = {"mu": {"layers": {"w": np.zeros((4, 4), np.float32)}},
+           "step": np.int32(7)}
+    ck = EdgeCheckpoint(client_id="pi3_1", round_idx=50, epoch=3,
+                        batch_idx=11, split_point=2, server_params=params,
+                        optimizer_state=opt, loss=1.25, rng_seed=42)
+    back = EdgeCheckpoint.unpack(ck.pack())
+    assert back.client_id == "pi3_1"
+    assert (back.round_idx, back.epoch, back.batch_idx) == (50, 3, 11)
+    assert back.split_point == 2
+    assert back.loss == pytest.approx(1.25)
+    _assert_tree_equal(back.server_params, params)
+    _assert_tree_equal(back.optimizer_state, opt)
+
+
+def test_checkpoint_contains_paper_fields():
+    """Paper §IV: epoch number, gradients, model weights, loss value,
+    optimizer state must all ride in the checkpoint."""
+    grads = {"w": np.full((2, 2), 0.5, np.float32)}
+    ck = EdgeCheckpoint(client_id="c", round_idx=1, epoch=2, batch_idx=3,
+                        split_point=1, server_params={"w": np.ones((2, 2),
+                                                                   np.float32)},
+                        optimizer_state={"mu": grads}, last_grads=grads,
+                        loss=0.5)
+    back = EdgeCheckpoint.unpack(ck.pack())
+    assert back.last_grads is not None
+    np.testing.assert_array_equal(back.last_grads["w"], grads["w"])

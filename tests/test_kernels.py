@@ -1,0 +1,134 @@
+"""Pallas kernel sweeps: shapes x dtypes, assert_allclose against the
+pure-jnp oracles (interpret=True executes the kernel bodies on CPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fedavg_agg import fedavg_agg, fedavg_agg_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.int8_codec import (dequantize, dequantize_ref, quantize,
+                                      quantize_ref)
+from repro.kernels.int8_codec.ops import roundtrip
+from repro.kernels.wkv6 import wkv6, wkv6_ref
+
+
+# -- flash attention ---------------------------------------------------------
+
+FLASH_CASES = [
+    # B, H, KV, S, hd, causal, window, softcap, dtype
+    (1, 4, 4, 128, 64, True, 0, 0.0, jnp.float32),
+    (2, 8, 2, 256, 64, True, 0, 0.0, jnp.float32),
+    (1, 4, 4, 128, 64, True, 32, 0.0, jnp.float32),
+    (1, 4, 4, 128, 64, True, 0, 50.0, jnp.float32),
+    (2, 2, 2, 96, 32, True, 0, 0.0, jnp.float32),       # padding path
+    (1, 8, 8, 128, 128, True, 0, 0.0, jnp.bfloat16),
+    (1, 2, 1, 64, 64, True, 16, 30.0, jnp.float32),     # GQA+win+cap
+]
+
+
+@pytest.mark.parametrize(
+    "B,H,KV,S,hd,causal,win,cap,dt", FLASH_CASES,
+    ids=[f"B{c[0]}H{c[1]}KV{c[2]}S{c[3]}hd{c[4]}w{c[6]}c{c[7]}{c[8].__name__}"
+         for c in FLASH_CASES])
+def test_flash_attention_matches_ref(B, H, KV, S, hd, causal, win, cap, dt):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), dt)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), dt)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), dt)
+    out = flash_attention(q, k, v, causal, win, cap, 64, 64, True)
+    ref = attention_ref(q, k, v, causal=causal, window=win, softcap=cap)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_flash_attention_grads_match_ref():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 4, 64, 32))
+    k = jax.random.normal(ks[1], (1, 2, 64, 32))
+    v = jax.random.normal(ks[2], (1, 2, 64, 32))
+    g1 = jax.grad(lambda a: flash_attention(a, k, v, True, 0, 0.0,
+                                            64, 64, True).sum())(q)
+    g2 = jax.grad(lambda a: attention_ref(a, k, v, causal=True).sum())(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)
+
+
+# -- wkv6 --------------------------------------------------------------------
+
+WKV_CASES = [(1, 64, 1, 64, 64), (2, 128, 2, 64, 64), (1, 96, 1, 64, 32),
+             (2, 256, 4, 64, 128)]
+
+
+@pytest.mark.parametrize("B,T,H,K,chunk", WKV_CASES,
+                         ids=[f"B{c[0]}T{c[1]}H{c[2]}ch{c[4]}"
+                              for c in WKV_CASES])
+def test_wkv6_matches_ref(B, T, H, K, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    r = jax.random.normal(ks[0], (B, T, H, K)) * 0.5
+    k = jax.random.normal(ks[1], (B, T, H, K)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, K)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, K))) * 0.5 + 0.4
+    u = jax.random.normal(ks[4], (H, K)) * 0.1
+    y1, s1 = wkv6(r, k, v, w, u, chunk=chunk)
+    y2, s2 = wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-5)
+
+
+def test_wkv6_state_carries_across_chunks():
+    """Final state after T tokens == running the ref in two halves."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    B, T, H, K = 1, 128, 1, 64
+    r = jax.random.normal(ks[0], (B, T, H, K)) * 0.3
+    k = jax.random.normal(ks[1], (B, T, H, K)) * 0.3
+    v = jax.random.normal(ks[2], (B, T, H, K)) * 0.3
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, K))) * 0.4 + 0.5
+    u = jax.random.normal(ks[4], (H, K)) * 0.1
+    _, s_half = wkv6_ref(r[:, :64], k[:, :64], v[:, :64], w[:, :64], u)
+    _, s_full_ref = wkv6_ref(r[:, 64:], k[:, 64:], v[:, 64:], w[:, 64:],
+                             u, state0=s_half)
+    _, s_kernel = wkv6(r, k, v, w, u, chunk=32)
+    np.testing.assert_allclose(np.asarray(s_kernel),
+                               np.asarray(s_full_ref), atol=2e-5)
+
+
+# -- fedavg_agg ---------------------------------------------------------------
+
+@pytest.mark.parametrize("E,n,dt", [(2, 4096, jnp.float32),
+                                    (4, 10000, jnp.float32),
+                                    (8, 4096, jnp.bfloat16),
+                                    (3, 12288, jnp.float32)])
+def test_fedavg_agg_sweep(E, n, dt):
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    x = jax.random.normal(ks[0], (E, n), dt)
+    w = jax.random.uniform(ks[1], (E,), jnp.float32, 0.1, 3.0)
+    a = fedavg_agg(x, w)
+    b = fedavg_agg_ref(x, w)
+    tol = 2e-2 if dt == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=tol)
+
+
+# -- int8 codec ---------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [8192, 10000, 50000])
+def test_int8_quantize_matches_ref(n):
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,)) * 4
+    q1, s1 = quantize(x)
+    q2, s2 = quantize_ref(x)
+    np.testing.assert_array_equal(np.asarray(q1)[:len(np.asarray(q2))],
+                                  np.asarray(q2))
+
+
+@pytest.mark.parametrize("n,dt", [(8192, jnp.float32), (9000, jnp.float32),
+                                  (8192, jnp.bfloat16)])
+def test_int8_roundtrip_error_bound(n, dt):
+    x = (jax.random.normal(jax.random.PRNGKey(1), (n,)) * 3).astype(dt)
+    back = roundtrip(x)
+    bound = float(jnp.max(jnp.abs(x.astype(jnp.float32)))) / 127 * 0.51 \
+        + 2e-2
+    assert float(jnp.max(jnp.abs(back.astype(jnp.float32)
+                                 - x.astype(jnp.float32)))) <= bound

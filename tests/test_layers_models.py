@@ -1,0 +1,346 @@
+"""Layer-level unit tests: blocked vs dense attention, MoE vs dense
+reference, SSM/RWKV cell-vs-scan consistency, norms, RoPE, chunked xent,
+optimizers vs numpy, schedules, data pipeline properties."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.datasets import synthetic_cifar10, synthetic_tokens
+from repro.data.loader import Batcher
+from repro.data.partition import balanced, by_fraction, dirichlet
+from repro.models import layers, moe as moe_lib, ssm as ssm_lib
+from repro.models.registry import get_config, make_reduced
+from repro.optim import optimizers as opt_lib
+from repro.optim import schedules
+
+
+# -- attention ---------------------------------------------------------------
+
+def test_blocked_attention_equals_dense():
+    cfg = make_reduced(get_config("gemma2-9b"))
+    p = layers.attention_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 64
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    for win in (0, 8):
+        ref = layers.attention(p, cfg, x, positions=pos,
+                               window=jnp.int32(win))
+        old_t, old_b = layers.BLOCKED_ATTN_THRESHOLD, layers.BLOCK_KV
+        layers.BLOCKED_ATTN_THRESHOLD, layers.BLOCK_KV = 16, 16
+        try:
+            blk = layers.attention(p, cfg, x, positions=pos,
+                                   window=jnp.int32(win))
+        finally:
+            layers.BLOCKED_ATTN_THRESHOLD, layers.BLOCK_KV = old_t, old_b
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(blk),
+                                   atol=2e-5)
+
+
+def test_decode_attention_matches_full():
+    """Decoding position t with a cache filled from a full forward must
+    equal full attention's row t."""
+    cfg = make_reduced(get_config("yi-6b"))
+    p = layers.attention_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 1, 8
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    full = layers.attention(p, cfg, x, positions=pos, window=jnp.int32(0))
+
+    C = S
+    ck = jnp.zeros((B, C, cfg.num_kv_heads, cfg.head_dim))
+    cv = jnp.zeros_like(ck)
+    cpos = jnp.full((B, C), -1, jnp.int32)
+    out = None
+    for t in range(S):
+        out, ck, cv, cpos = layers.decode_attention(
+            p, cfg, x[:, t:t + 1], pos=jnp.int32(t), cache_k=ck,
+            cache_v=cv, cache_positions=cpos, window=jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(out[:, 0]),
+                               np.asarray(full[:, -1]), atol=1e-4)
+
+
+def test_sliding_window_masks_old_tokens():
+    cfg = make_reduced(get_config("yi-6b"))
+    p = layers.attention_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S, W = 1, 16, 4
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    full = layers.attention(p, cfg, x, positions=pos, window=jnp.int32(W))
+    # perturbing a token outside every query's window must not change
+    # the last query's output
+    x2 = x.at[:, 0].add(100.0)
+    full2 = layers.attention(p, cfg, x2, positions=pos, window=jnp.int32(W))
+    np.testing.assert_allclose(np.asarray(full[:, -1]),
+                               np.asarray(full2[:, -1]), atol=1e-4)
+
+
+# -- MoE ----------------------------------------------------------------------
+
+def test_moe_matches_dense_at_high_capacity():
+    cfg = make_reduced(get_config("grok-1-314b")).replace(capacity_factor=8.0)
+    p = moe_lib.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    y = moe_lib.moe(p, cfg, x)
+    gates = jax.nn.softmax((x @ p["router"]).astype(jnp.float32), -1)
+    topv, topi = jax.lax.top_k(gates, cfg.num_experts_per_tok)
+    topv = topv / topv.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(y)
+    for b in range(2):
+        for s in range(8):
+            acc = jnp.zeros((cfg.d_model,))
+            for kk in range(cfg.num_experts_per_tok):
+                e = int(topi[b, s, kk])
+                h = jax.nn.silu(x[b, s] @ p["wi_gate"][e]) \
+                    * (x[b, s] @ p["wi_up"][e])
+                acc += topv[b, s, kk] * (h @ p["wo"][e])
+            ref = ref.at[b, s].set(acc)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4)
+
+
+def test_moe_capacity_drops_tokens_not_nan():
+    cfg = make_reduced(get_config("grok-1-314b")).replace(
+        capacity_factor=0.1)
+    p = moe_lib.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    y = moe_lib.moe(p, cfg, x)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_load_balance_loss_bounds():
+    cfg = make_reduced(get_config("arctic-480b"))
+    p = moe_lib.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    lb = float(moe_lib.load_balance_loss(p, cfg, x))
+    assert lb >= 1.0 - 1e-3   # E * sum(f_e p_e) >= 1 w/ equality at uniform
+
+
+# -- SSM / RWKV ----------------------------------------------------------------
+
+def test_mamba_cell_matches_scan():
+    cfg = make_reduced(get_config("hymba-1.5b"))
+    p = ssm_lib.mamba_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    ys, hT = ssm_lib.mamba_scan(p, cfg, x)
+    h = jnp.zeros((B, cfg.d_model, cfg.ssm_state))
+    for t in range(S):
+        h, y = ssm_lib.mamba_cell(p, h, x[:, t])
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ys[:, t]),
+                                   atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hT), atol=1e-5)
+
+
+def test_rwkv_cell_matches_scan():
+    cfg = make_reduced(get_config("rwkv6-1.6b"))
+    p = ssm_lib.rwkv_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    ys, (sT, xlast) = ssm_lib.rwkv_scan(p, cfg, x)
+    H = cfg.d_model // ssm_lib.RWKV_HEAD
+    state = jnp.zeros((B, H, ssm_lib.RWKV_HEAD, ssm_lib.RWKV_HEAD))
+    xprev = jnp.zeros((B, cfg.d_model))
+    for t in range(S):
+        state, y = ssm_lib.rwkv_cell(p, cfg, state, x[:, t], xprev)
+        xprev = x[:, t]
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ys[:, t]),
+                                   atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(sT), atol=1e-5)
+
+
+def test_rwkv_decay_in_unit_interval():
+    cfg = make_reduced(get_config("rwkv6-1.6b"))
+    p = ssm_lib.rwkv_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    xw = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.d_model)) * 3
+    w = ssm_lib.rwkv_decay(p, xw)
+    assert bool(((w > 0) & (w < 1)).all())
+
+
+# -- norms / rope / xent --------------------------------------------------------
+
+def test_rmsnorm_unit_scale():
+    p = layers.rmsnorm_init(16, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16)) * 7
+    y = layers.rmsnorm(p, x)
+    rms = jnp.sqrt(jnp.mean(jnp.square(y), -1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, atol=1e-3)
+
+
+def test_rope_preserves_norm_and_relative():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 64))
+    pos = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32), (1, 8))
+    y = layers.rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               atol=1e-4)
+    # relative property: <rope(q,m), rope(k,n)> depends only on m-n
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 64))
+    def dot_at(m, n):
+        qm = layers.rope(q, jnp.full((1, 1), m, jnp.int32), 1e4)
+        kn = layers.rope(k, jnp.full((1, 1), n, jnp.int32), 1e4)
+        return float(jnp.sum(qm * kn))
+    assert dot_at(3, 1) == pytest.approx(dot_at(7, 5), abs=1e-3)
+
+
+def test_chunked_xent_equals_dense(reduced_models):
+    cfg, model, params = reduced_models("qwen3-0.6b")
+    from conftest import batch_for
+    batch = batch_for(cfg, 2, 16)
+    dense = model.loss(params, batch)
+    old_thr, old_c = model.XENT_CHUNK_THRESHOLD, model.XENT_CHUNK
+    type(model).XENT_CHUNK_THRESHOLD, type(model).XENT_CHUNK = 1, 4
+    try:
+        chunked = model.loss(params, batch)
+    finally:
+        type(model).XENT_CHUNK_THRESHOLD = old_thr
+        type(model).XENT_CHUNK = old_c
+    assert abs(float(dense - chunked)) < 2e-6
+
+
+# -- optimizers ------------------------------------------------------------------
+
+def test_sgd_matches_numpy():
+    opt = opt_lib.sgd(momentum=0.9)
+    p = {"w": jnp.asarray([1.0, 2.0])}
+    s = opt.init(p)
+    g = {"w": jnp.asarray([0.1, -0.2])}
+    p1, s1 = opt.update(g, s, p, jnp.float32(0.5))
+    np.testing.assert_allclose(np.asarray(p1["w"]), [0.95, 2.1], atol=1e-6)
+    p2, _ = opt.update(g, s1, p1, jnp.float32(0.5))
+    mu2 = 0.9 * np.array([0.1, -0.2]) + np.array([0.1, -0.2])
+    np.testing.assert_allclose(np.asarray(p2["w"]),
+                               np.asarray(p1["w"]) - 0.5 * mu2, atol=1e-6)
+
+
+def test_adamw_first_step_size():
+    opt = opt_lib.adamw(weight_decay=0.0)
+    p = {"w": jnp.asarray([0.0])}
+    s = opt.init(p)
+    g = {"w": jnp.asarray([1e-3])}
+    p1, _ = opt.update(g, s, p, jnp.float32(1e-2))
+    # bias-corrected first step ≈ -lr * sign(g)
+    assert float(p1["w"][0]) == pytest.approx(-1e-2, rel=1e-3)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0)}
+    clipped, norm = opt_lib.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(6.0)
+    assert float(opt_lib.global_norm(clipped)) == pytest.approx(1.0,
+                                                                rel=1e-5)
+
+
+def test_wsd_schedule_shape():
+    f = schedules.wsd(1.0, 1000)
+    assert float(f(0)) == pytest.approx(0.0, abs=1e-6)
+    assert float(f(500)) == pytest.approx(1.0)
+    assert float(f(999)) < 0.2
+    c = schedules.cosine(1.0, 100, warmup_steps=10)
+    assert float(c(5)) == pytest.approx(0.5)
+    assert float(c(100)) == pytest.approx(0.1, rel=1e-2)
+
+
+# -- data -------------------------------------------------------------------------
+
+def test_partitions_disjoint_and_sized():
+    train, _ = synthetic_cifar10(n_train=1000, n_test=10)
+    parts = by_fraction(train, [0.25, 0.25, 0.25, 0.25])
+    assert [len(p) for p in parts] == [250] * 4
+    parts2 = dirichlet(train, 4, alpha=0.5)
+    assert sum(len(p) for p in parts2) == 1000
+
+
+def test_batcher_resume_determinism():
+    """Load-bearing for migration: batch_at(epoch, i) must be a pure
+    function so the destination edge replays the exact batch stream."""
+    train, _ = synthetic_cifar10(n_train=500, n_test=10)
+    b1 = Batcher(train, 50, seed=3)
+    b2 = Batcher(train, 50, seed=3)
+    x1 = b1.batch_at(2, 3)
+    x2 = b2.batch_at(2, 3)
+    np.testing.assert_array_equal(x1["images"], x2["images"])
+    # different epochs shuffle differently
+    x3 = b1.batch_at(3, 3)
+    assert not np.array_equal(x1["labels"], x3["labels"])
+
+
+def test_synthetic_cifar_learnable():
+    """Linear probe beats chance by a wide margin -> accuracy experiments
+    are meaningful."""
+    train, test = synthetic_cifar10(n_train=2000, n_test=500, seed=1)
+    X = train.images.reshape(len(train), -1)
+    Xt = test.images.reshape(len(test), -1)
+    Y = np.eye(10)[train.labels]
+    W = np.linalg.lstsq(X.T @ X + 1e2 * np.eye(X.shape[1]), X.T @ Y,
+                        rcond=None)[0]
+    acc = (np.argmax(Xt @ W, 1) == test.labels).mean()
+    assert acc > 0.45
+
+
+def test_synthetic_tokens_structured():
+    d = synthetic_tokens(4, 256, 1000, seed=0)
+    follows = (d["tokens"][:, 1:] == (d["tokens"][:, :-1] + 1) % 1000).mean()
+    assert 0.2 < follows < 0.7
+
+
+def test_rwkv_chunked_matches_sequential():
+    """The chunk-parallel closed form (§Perf hillclimb) must match the
+    sequential WKV6 scan exactly, values and gradients."""
+    import jax
+    import jax.numpy as jnp
+    cfg = make_reduced(get_config("rwkv6-1.6b"))
+    p = ssm_lib.rwkv_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 96, cfg.d_model))
+    y1, (s1, _) = ssm_lib.rwkv_scan(p, cfg, x)
+    for chunk in (16, 32, 96):
+        y2, (s2, _) = ssm_lib.rwkv_scan_chunked(p, cfg, x, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   atol=1e-4)
+    g1 = jax.grad(lambda a: ssm_lib.rwkv_scan(p, cfg, a)[0].sum())(x)
+    g2 = jax.grad(lambda a: ssm_lib.rwkv_scan_chunked(p, cfg, a,
+                                                      chunk=32)[0].sum())(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)
+
+
+def test_rwkv_chunked_state_continuation():
+    """Chunked scan with a carried-in state (mid-sequence migration of an
+    SSM arch) must continue exactly."""
+    import jax
+    import jax.numpy as jnp
+    cfg = make_reduced(get_config("rwkv6-1.6b"))
+    p = ssm_lib.rwkv_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, cfg.d_model))
+    y_full, (s_full, _) = ssm_lib.rwkv_scan_chunked(p, cfg, x, chunk=16)
+    _, (s_half, _) = ssm_lib.rwkv_scan_chunked(p, cfg, x[:, :32], chunk=16)
+    y2, (s2, _) = ssm_lib.rwkv_scan_chunked(
+        p, cfg, x[:, 32:], state0=s_half, xprev0=x[:, 31], chunk=16)
+    np.testing.assert_allclose(np.asarray(y_full[:, 32:]), np.asarray(y2),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2),
+                               atol=1e-4)
+
+
+def test_mamba_chunked_matches_sequential():
+    """Chunk-parallel selective scan (§Perf bonus hillclimb) vs the
+    sequential scan: values, final state, gradients."""
+    import jax
+    import jax.numpy as jnp
+    cfg = make_reduced(get_config("hymba-1.5b"))
+    p = ssm_lib.mamba_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    y1, h1 = ssm_lib.mamba_scan(p, cfg, x)
+    for chunk in (16, 32):
+        y2, h2 = ssm_lib.mamba_scan_chunked(p, cfg, x, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                                   atol=1e-4)
+    g1 = jax.grad(lambda a: ssm_lib.mamba_scan(p, cfg, a)[0].sum())(x)
+    g2 = jax.grad(lambda a: ssm_lib.mamba_scan_chunked(
+        p, cfg, a, chunk=16)[0].sum())(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)

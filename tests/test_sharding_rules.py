@@ -1,0 +1,115 @@
+"""Sharding-rule unit tests (launch/sharding.py) against a mock 16x16
+mesh — pure PartitionSpec logic, no devices needed."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey
+
+from repro.launch import sharding as sh
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    devices = np.zeros((16, 16))
+
+
+MESH = FakeMesh()
+
+
+def path(*names):
+    return tuple(DictKey(n) for n in names)
+
+
+def test_column_parallel_first_projection():
+    # wq (L, d, H*hd): model on last dim, data (FSDP) on d
+    assert sh.param_pspec(path("layers", "attn", "wq"), (32, 4096, 4096),
+                          MESH) == P(None, "data", "model")
+
+
+def test_row_parallel_wo():
+    # wo (L, H*hd, d): model on the INPUT dim (Megatron pairing)
+    assert sh.param_pspec(path("layers", "attn", "wo"), (32, 4096, 4096),
+                          MESH) == P(None, "model", "data")
+    assert sh.param_pspec(path("layers", "mlp", "wo"), (32, 11008, 4096),
+                          MESH) == P(None, "model", "data")
+
+
+def test_vocab_tables_model_only():
+    # embed (V, d): vocab over model, NO data axis (xent contraction)
+    assert sh.param_pspec(path("embed"), (64000, 4096), MESH) \
+        == P("model", None)
+    assert sh.param_pspec(path("lm_head"), (4096, 151936), MESH) \
+        == P(None, "model")
+    # odd vocab (minicpm): falls back to model on d
+    assert sh.param_pspec(path("embed"), (122753, 2304), MESH) \
+        == P(None, "model")
+
+
+def test_moe_expert_parallel_over_model():
+    # arctic: 128 experts / 16 -> E over model, widest of (d, f) on data
+    spec = sh.param_pspec(path("layers", "moe", "wi_gate"),
+                          (35, 128, 7168, 4864), MESH)
+    assert spec == P(None, "model", "data", None)
+
+
+def test_moe_nondivisible_expert_tensor_parallel():
+    # grok: 8 experts -> f over model; wo must be ROW-parallel on f
+    gate = sh.param_pspec(path("layers", "moe", "wi_gate"),
+                          (64, 8, 6144, 32768), MESH)
+    wo = sh.param_pspec(path("layers", "moe", "wo"),
+                        (64, 8, 32768, 6144), MESH)
+    assert gate[3] == "model"
+    assert wo == P(None, None, "model", "data")
+
+
+def test_moe_ep_data_flag():
+    spec = sh.param_pspec(path("layers", "moe", "wi_gate"),
+                          (35, 128, 7168, 4864), MESH,
+                          flags=("moe_ep_data",))
+    assert spec == P(None, "data", None, "model")
+
+
+def test_zero1_drops_data_axis():
+    spec = sh.param_pspec(path("layers", "attn", "wq"), (32, 4096, 4096),
+                          MESH, flags=("zero1",))
+    assert spec == P(None, None, "model")
+
+
+def test_fsdp2d_whole_mesh():
+    spec = sh.param_pspec(path("layers", "attn", "wq"), (32, 4096, 4096),
+                          MESH, flags=("fsdp2d",))
+    assert spec == P(None, ("data", "model"), None)
+
+
+def test_tiny_leaves_replicated():
+    assert sh.param_pspec(path("layers", "ln1", "scale"), (32, 256),
+                          MESH) == P(None, None)
+
+
+def test_cache_flash_decode_layout():
+    # k (L, B, C, KV, hd): batch over data, cache seq over model
+    assert sh.cache_pspec(path("k"), (32, 128, 32768, 8, 128), MESH) \
+        == P(None, "data", "model", None, None)
+    # B=1 (long_500k): C over data, hd over model
+    assert sh.cache_pspec(path("k"), (32, 1, 524288, 8, 128), MESH) \
+        == P(None, None, "data", None, "model")
+    # ssm state: B over data, d over model
+    assert sh.cache_pspec(path("ssm_state"), (32, 128, 1600, 16), MESH) \
+        == P(None, "data", "model", None)
+
+
+def test_batch_pspec_microbatched():
+    # (M, B, S): index axis unsharded, rows on data
+    assert sh.batch_pspec((16, 16, 4096), MESH, microbatched=True) \
+        == P(None, "data", None)
+    assert sh.batch_pspec((256, 4096), MESH) == P("data", None)
+    assert sh.batch_pspec((256, 4096), MESH, flags=("fsdp2d",)) \
+        == P(("data", "model"), None)
+
+
+def test_stacked_edge_axis():
+    spec = sh.param_pspec(path("layers", "attn", "wq"), (2, 32, 4096, 4096),
+                          MESH, stacked_edge_axis=True)
+    assert spec == P("pod", None, "data", "model")

@@ -1,0 +1,77 @@
+"""Split-point equivalence (the FedFly substrate invariant): for ANY
+split point, the two-stage split training step computes EXACTLY the same
+loss and gradients as the monolithic step — the chain rule across the
+smashed-data boundary must be the identity transformation of training."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import batch_for
+from repro.core import split as sp
+from repro.models.registry import ARCH_IDS
+from repro.models.vgg import VGG5, SPLIT_POINTS
+
+
+def _max_err(a, b):
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_split_equivalence(arch, reduced_models):
+    cfg, model, params = reduced_models(arch)
+    batch = batch_for(cfg)
+    loss_ref, g_ref = sp.monolithic_value_and_grad(model, params, batch)
+    for spn in (1,):
+        dev, srv = sp.partition_params(model, params, spn)
+        loss_s, g_dev, g_srv = sp.split_value_and_grad(model, dev, srv,
+                                                       batch, spn)
+        merged = sp.merge_grads(model, g_dev, g_srv)
+        assert abs(float(loss_ref - loss_s)) < 1e-6
+        assert _max_err(g_ref, merged) < 1e-5
+
+
+@pytest.mark.parametrize("spname,spn", sorted(SPLIT_POINTS.items()))
+def test_vgg_split_points(spname, spn):
+    model = VGG5()
+    params = model.init(jax.random.PRNGKey(0))
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32, 3))
+    batch = {"images": imgs, "labels": jnp.array([0, 1, 2, 3], jnp.int32)}
+    loss_ref, g_ref = jax.value_and_grad(
+        lambda p: model.loss(p, batch))(params)
+    dev, srv = sp.partition_params(model, params, spn)
+    loss_s, g_dev, g_srv = sp.split_value_and_grad(model, dev, srv, batch,
+                                                   spn)
+    merged = sp.merge_grads(model, g_dev, g_srv)
+    assert abs(float(loss_ref - loss_s)) < 1e-6
+    assert _max_err(g_ref, merged) < 1e-5
+
+
+def test_partition_merge_roundtrip(reduced_models):
+    cfg, model, params = reduced_models("yi-6b")
+    dev, srv = sp.partition_params(model, params, 1)
+    back = sp.merge_params(model, dev, srv)
+    assert _max_err(params, back) == 0.0
+
+
+def test_smashed_bytes_scales_with_batch(reduced_models):
+    cfg, model, params = reduced_models("qwen3-0.6b")
+    dev, _ = sp.partition_params(model, params, 1)
+    b1 = sp.smashed_bytes(model, dev, (2, 16), 1)
+    b2 = sp.smashed_bytes(model, dev, (4, 16), 1)
+    assert b2 == 2 * b1
+    assert b1 == 2 * 16 * cfg.d_model * 4  # fp32 activations
+
+
+def test_vgg_smashed_smaller_at_deeper_split():
+    """Paper Fig 3c: deeper split points shrink the smashed payload for
+    VGG-5 (pooling halves spatial dims)."""
+    model = VGG5()
+    params = model.init(jax.random.PRNGKey(0))
+    sizes = []
+    for spn in (1, 2, 3):
+        dev, _ = sp.partition_params(model, params, spn)
+        sizes.append(sp.smashed_bytes(model, dev, (100, 0), spn))
+    assert sizes[0] > sizes[1] > sizes[2]
