@@ -1,0 +1,74 @@
+"""Fleet-scale simulation benchmark (repro.sim).
+
+Runs the scenario library at a configurable fleet size and reports, as
+JSON: engine throughput (events/sec), per-scenario per-round records
+(round time, staleness, losses), and migration-overhead summaries.
+
+  PYTHONPATH=src python -m benchmarks.bench_fleet                # default
+  PYTHONPATH=src python -m benchmarks.bench_fleet --quick        # CI smoke
+  PYTHONPATH=src python -m benchmarks.bench_fleet --clients 1000 --edges 8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.sim.scenarios import SCENARIOS, run_scenario
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--clients", type=int, default=256)
+    ap.add_argument("--edges", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--max-replicas", type=int, default=4)
+    ap.add_argument("--scenarios", nargs="*", default=sorted(SCENARIOS),
+                    choices=sorted(SCENARIOS))
+    ap.add_argument("--quick", action="store_true",
+                    help="small fleet (CI smoke)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    n_clients = 32 if args.quick else args.clients
+    n_edges = 4 if args.quick else args.edges
+    rounds = 2 if args.quick else args.rounds
+
+    print(f"# fleet simulation benchmark: {n_clients} clients, "
+          f"{n_edges} edges, {rounds} rounds")
+    report = {"config": {"clients": n_clients, "edges": n_edges,
+                         "rounds": rounds,
+                         "max_replicas": args.max_replicas},
+              "scenarios": {}}
+    t0 = time.time()
+    for name in args.scenarios:
+        spec = SCENARIOS[name].replace(
+            num_clients=n_clients, num_edges=n_edges, rounds=rounds,
+            max_replicas=args.max_replicas, seed=args.seed,
+            # skip real checkpoint serialization at benchmark scale so
+            # events/sec measures the engine, not pickle-free packing
+            measure_pack=n_clients <= 128)
+        t1 = time.time()
+        rep = run_scenario(spec)
+        wall = time.time() - t1
+        report["scenarios"][name] = {
+            "wall_s": round(wall, 3),
+            "events_per_sec": round(rep["engine"]["events_per_sec"], 1),
+            "events": rep["engine"]["events_processed"],
+            "sim_time_s": round(rep["engine"]["sim_time_s"], 3),
+            "rounds": rep["rounds"],
+            "migration_overhead": rep["migrations"],
+        }
+        mean_rt = (sum(r["mean_round_time_s"] for r in rep["rounds"])
+                   / max(len(rep["rounds"]), 1))
+        print(f"  {name:>20s}: {wall:6.1f}s wall  "
+              f"{rep['engine']['events_per_sec']:9.0f} ev/s  "
+              f"round {mean_rt:6.2f}s sim  "
+              f"{rep['migrations']['count']:4d} migrations "
+              f"({rep['migrations']['total_overhead_s']:.2f}s overhead)")
+    report["total_wall_s"] = round(time.time() - t0, 1)
+    print(json.dumps(report))
+
+
+if __name__ == "__main__":
+    main()

@@ -21,7 +21,7 @@ def main(argv=None) -> None:
     acc_rounds = 6 if args.quick else (100 if args.full else 20)
     acc_period = 2 if args.quick else (10 if args.full else 5)
 
-    from benchmarks import (bench_accuracy, bench_overhead,
+    from benchmarks import (bench_accuracy, bench_fleet, bench_overhead,
                             bench_split_points, bench_training_time,
                             roofline)
 
@@ -36,6 +36,9 @@ def main(argv=None) -> None:
     bench_accuracy.main(["--n-train", str(n_train),
                          "--rounds", str(acc_rounds),
                          "--period", str(acc_period)])
+    print("\n" + "=" * 72)
+    bench_fleet.main(["--quick"] if not args.full
+                     else ["--clients", "1000", "--edges", "8"])
     print("\n" + "=" * 72)
     roofline.main([])
     print(f"\nall benchmarks done in {time.time()-t0:.0f}s")

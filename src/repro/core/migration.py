@@ -92,9 +92,10 @@ class MigrationExecutor:
         if self.codec != "raw":
             orig = jax.tree.leaves(jax.tree.map(np.asarray, ckpt.server_params))
             rest = jax.tree.leaves(restored.server_params)
-            qerr = max((float(np.max(np.abs(np.asarray(a, np.float32)
-                                            - np.asarray(b, np.float32))))
-                        if a.size else 0.0) for a, b in zip(orig, rest))
+            qerr = max(((float(np.max(np.abs(np.asarray(a, np.float32)
+                                             - np.asarray(b, np.float32))))
+                         if a.size else 0.0) for a, b in zip(orig, rest)),
+                       default=0.0)   # empty server-param pytree → no error
 
         report = MigrationReport(
             client_id=ckpt.client_id, src_edge=src_edge, dst_edge=dst_edge,

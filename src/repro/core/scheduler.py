@@ -143,7 +143,9 @@ class FedFlyScheduler:
         move = trace.move_for(round_idx, client_id) if trace else None
         move_at = None
         if move is not None:
-            move_at = min(int(round(move.fraction * nb)), nb)
+            # clamp inside the epoch: fraction < 1 must still move even
+            # when round(f*nb) lands on nb (e.g. 90% of 4 batches)
+            move_at = min(int(round(move.fraction * nb)), nb - 1)
 
         t_sim = 0.0
         t_wall0 = time.perf_counter()

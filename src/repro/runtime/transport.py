@@ -48,20 +48,34 @@ class InProcTransport:
 _LEN = struct.Struct(">Q")
 
 
-def _read_exact(conn: socket.socket, n: int) -> bytes:
-    buf = bytearray()
-    while len(buf) < n:
-        chunk = conn.recv(min(1 << 20, n - len(buf)))
-        if not chunk:
-            raise ConnectionError("socket closed mid-frame")
-        buf += chunk
-    return bytes(buf)
+class FrameStream:
+    """Client side of a sustained frame stream: one TCP connection carrying
+    many length-prefixed frames (checkpoint after checkpoint during an
+    edge-to-edge migration storm)."""
+
+    def __init__(self, host: str, port: int, timeout: float = 30.0):
+        self._conn = socket.create_connection((host, port), timeout=timeout)
+
+    def send(self, payload: bytes) -> int:
+        self._conn.sendall(_LEN.pack(len(payload)))
+        self._conn.sendall(payload)
+        return len(payload)
+
+    def close(self):
+        self._conn.close()
+
+    def __enter__(self) -> "FrameStream":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
 
 
 class SocketTransport:
     """Length-prefixed TCP frames. One instance per edge server; ``serve``
     spawns a listener thread delivering frames to a callback (or an
-    internal queue)."""
+    internal queue). A connection may carry any number of frames back to
+    back; it ends when the peer closes at a frame boundary."""
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0):
         self.host = host
@@ -73,8 +87,43 @@ class SocketTransport:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
+    def _recv_frames(self, conn: socket.socket,
+                     deliver: Callable[[bytes], None]):
+        """Deliver every frame on one connection until clean EOF."""
+        conn.settimeout(0.2)
+        buf = bytearray()
+        need: Optional[int] = None          # None → reading a header
+        while not self._stop.is_set():
+            try:
+                chunk = conn.recv(1 << 20)
+            except socket.timeout:
+                continue
+            if not chunk:
+                if buf or need is not None:
+                    raise ConnectionError("socket closed mid-frame")
+                return
+            buf += chunk
+            while True:
+                if need is None and len(buf) >= _LEN.size:
+                    need = _LEN.unpack(bytes(buf[:_LEN.size]))[0]
+                    del buf[:_LEN.size]
+                elif need is not None and len(buf) >= need:
+                    deliver(bytes(buf[:need]))
+                    del buf[:need]
+                    need = None
+                else:
+                    break
+
     def serve(self, callback: Optional[Callable[[bytes], None]] = None):
         self._srv.listen(8)
+        deliver = callback or self._inbox.put
+
+        def handle(conn: socket.socket):
+            with conn:
+                try:
+                    self._recv_frames(conn, deliver)
+                except (ConnectionError, OSError):
+                    pass            # peer died mid-frame; drop the partial
 
         def loop():
             self._srv.settimeout(0.2)
@@ -83,10 +132,11 @@ class SocketTransport:
                     conn, _ = self._srv.accept()
                 except socket.timeout:
                     continue
-                with conn:
-                    n = _LEN.unpack(_read_exact(conn, _LEN.size))[0]
-                    payload = _read_exact(conn, n)
-                (callback or self._inbox.put)(payload)
+                # one thread per connection: a long-lived stream must not
+                # starve other senders (frame order is guaranteed within a
+                # connection, not across connections)
+                threading.Thread(target=handle, args=(conn,),
+                                 daemon=True).start()
 
         self._thread = threading.Thread(target=loop, daemon=True)
         self._thread.start()
@@ -97,6 +147,10 @@ class SocketTransport:
             conn.sendall(_LEN.pack(len(payload)))
             conn.sendall(payload)
         return len(payload)
+
+    def connect(self, host: str, port: int) -> FrameStream:
+        """Open a sustained multi-frame stream to another transport."""
+        return FrameStream(host, port)
 
     def recv(self, timeout: Optional[float] = 30.0) -> bytes:
         return self._inbox.get(timeout=timeout)

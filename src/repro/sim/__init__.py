@@ -1,0 +1,21 @@
+"""repro.sim — fleet-scale discrete-event simulation of FedFly protocols.
+
+See README.md in this directory for the event model and fidelity notes.
+"""
+from repro.sim.async_agg import (AsyncAggregator, SyncAggregator,
+                                 constant_staleness, hinge_staleness,
+                                 poly_staleness)
+from repro.sim.edge import BACKHAUL_1GBPS, SimEdge, make_edges
+from repro.sim.engine import Event, EventKind, SimEngine
+from repro.sim.fleet import (ClientSpec, Cohort, Fleet, SimClient,
+                             make_fleet_specs)
+from repro.sim.metrics import FleetMetrics, MigrationRecord
+from repro.sim.simulator import FleetResult, FleetSimulator
+
+__all__ = [
+    "AsyncAggregator", "SyncAggregator", "constant_staleness",
+    "hinge_staleness", "poly_staleness", "BACKHAUL_1GBPS", "SimEdge",
+    "make_edges", "Event", "EventKind", "SimEngine", "ClientSpec", "Cohort",
+    "Fleet", "SimClient", "make_fleet_specs", "FleetMetrics",
+    "MigrationRecord", "FleetResult", "FleetSimulator",
+]

@@ -1,0 +1,297 @@
+"""Cohort-vectorized fleet state: thousands of clients, O(cohorts) JAX.
+
+Scaling trick (the reason 1000 simulated devices cost roughly what 4
+cost in ``core.scheduler``): clients sharing a *cohort signature*
+``(model, split point, batch size, batches per epoch)`` are backed by a
+small stack of ``replicas`` model instances. One ``jax.vmap``-ed,
+``jax.jit``-ed split train step advances every replica of a cohort at
+once, and ``StageCostModel`` (an XLA lowering, the expensive part) runs
+once per cohort instead of once per client.
+
+Fidelity knob: with ``max_replicas >= fleet size`` every client owns a
+private replica and the numerics are exactly per-client split training.
+At fleet scale the default caps replicas per cohort, so clients mapped
+to the same replica share one parameter trajectory for the epoch; the
+*timing* layer (event engine + edge model) still treats every client
+individually. This is the standard fidelity/scale trade of fleet
+simulators and is documented in README.md.
+
+Numerics follow ``core.scheduler`` semantics: each local epoch starts
+from the current global model (re-broadcast), optimizer state persists
+per replica, and the post-epoch merged model is the client's update.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import split as split_lib
+from repro.core.mobility import MoveEvent
+from repro.data.datasets import synthetic_cifar10
+from repro.data.loader import Batcher
+from repro.data.partition import balanced
+from repro.optim.optimizers import Optimizer
+from repro.runtime.cluster import (PI3, PI4, HardwareProfile, StageCostModel)
+
+Params = Any
+
+
+def tree_nbytes(tree: Params) -> int:
+    return sum(int(np.prod(np.shape(x))) * np.asarray(x).dtype.itemsize
+               for x in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# client specs + runtime state
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ClientSpec:
+    client_id: str
+    profile: HardwareProfile
+    edge_id: str                    # initial attachment
+    num_samples: int = 600          # FedAvg weight (dataset size)
+    batch_size: int = 16
+    num_batches: int = 2            # batches per local epoch
+
+    @property
+    def cohort_key(self) -> Tuple[int, int]:
+        return (self.batch_size, self.num_batches)
+
+
+@dataclass
+class SimClient:
+    spec: ClientSpec
+    replica: int
+    edge_id: str                    # current attachment (moves!)
+    epoch: int = 0                  # local epoch currently running
+    batch_idx: int = 0
+    epochs_done: int = 0
+    version_at_start: int = 0       # aggregator version the epoch started from
+    epoch_start_s: float = 0.0
+    pending_move: Optional[MoveEvent] = None
+    move_at: int = -1               # batch index at which the move fires
+    migrating: bool = False
+    done: bool = False
+
+    @property
+    def client_id(self) -> str:
+        return self.spec.client_id
+
+
+def make_fleet_specs(num_clients: int, edge_ids: Sequence[str], *,
+                     batch_size: int = 16, num_batches: int = 2,
+                     samples_per_client: int = 600,
+                     profiles: Sequence[HardwareProfile] = (PI3, PI4),
+                     ) -> List[ClientSpec]:
+    """Uniform fleet, clients dealt round-robin onto edges — the same
+    initial placement rule ``mobility.poisson_moves`` assumes."""
+    return [ClientSpec(client_id=f"dev-{i:04d}",
+                       profile=profiles[i % len(profiles)],
+                       edge_id=edge_ids[i % len(edge_ids)],
+                       num_samples=samples_per_client,
+                       batch_size=batch_size, num_batches=num_batches)
+            for i in range(num_clients)]
+
+
+# ---------------------------------------------------------------------------
+# cohorts
+# ---------------------------------------------------------------------------
+
+class Cohort:
+    """A stack of ``replicas`` split-model instances advanced in lockstep
+    by one vmapped train step."""
+
+    def __init__(self, key: Tuple[int, int], model, optimizer: Optimizer,
+                 sp: int, replicas: int, seed: int):
+        self.key = key
+        self.batch_size, self.num_batches = key
+        self.model = model
+        self.opt = optimizer
+        self.sp = sp
+        self.replicas = replicas
+        # per-replica private data: each replica's epoch is exactly
+        # num_batches batches
+        n = replicas * self.batch_size * self.num_batches
+        train, _ = synthetic_cifar10(n_train=n, n_test=1,
+                                     seed=seed + 7919 * hash(key) % 10007)
+        self.batchers = [Batcher(p, self.batch_size, seed=seed)
+                         for p in balanced(train, replicas, seed=seed)]
+        self._step = jax.jit(jax.vmap(self._one_step,
+                                      in_axes=(0, 0, 0, 0, 0, None)))
+        self._dev = self._srv = None          # stacked stage params
+        self._dev_opt = self._srv_opt = None  # stacked opt state (persists)
+        self.snapshots: Dict[int, List[Params]] = {}  # epoch -> np trees
+        self.losses: Dict[int, np.ndarray] = {}       # epoch -> (R,)
+        self._costs: Optional[Tuple[float, float, int]] = None
+        self._nbytes: Optional[Dict[str, int]] = None
+
+    def _one_step(self, dev, srv, dev_opt, srv_opt, batch, lr):
+        loss, g_dev, g_srv = split_lib.split_value_and_grad(
+            self.model, dev, srv, batch, self.sp)
+        dev, dev_opt = self.opt.update(g_dev, dev_opt, dev, lr)
+        srv, srv_opt = self.opt.update(g_srv, srv_opt, srv, lr)
+        return dev, srv, dev_opt, srv_opt, loss
+
+    def _stacked_batch(self, epoch: int, b: int) -> Dict[str, jnp.ndarray]:
+        per = [bt.batch_at(epoch, b) for bt in self.batchers]
+        return {k: jnp.asarray(np.stack([p[k] for p in per]))
+                for k in per[0]}
+
+    def _broadcast(self, tree: Params) -> Params:
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (self.replicas,) + x.shape),
+            tree)
+
+    # -- the whole-cohort epoch (one vmapped step per batch) -------------
+
+    def ensure_stages(self, global_params: Params):
+        """Materialize the stacked stage/opt state from the global model.
+        Must run before any costs()/nbytes() query — the timing layer asks
+        for payload sizes before the first epoch trains."""
+        if self._dev is not None:
+            return
+        dev1, srv1 = split_lib.partition_params(self.model, global_params,
+                                                self.sp)
+        self._dev, self._srv = self._broadcast(dev1), self._broadcast(srv1)
+        self._dev_opt = self._broadcast(self.opt.init(dev1))
+        self._srv_opt = self._broadcast(self.opt.init(srv1))
+
+    def run_epoch(self, global_params: Params, epoch: int, lr: float):
+        """Advance all replicas through local epoch ``epoch``, starting
+        from the current global model (Step 1/6 re-broadcast)."""
+        if epoch in self.snapshots:
+            return
+        self.ensure_stages(global_params)   # opt state on first call
+        dev1, srv1 = split_lib.partition_params(self.model, global_params,
+                                                self.sp)
+        self._dev, self._srv = self._broadcast(dev1), self._broadcast(srv1)
+        loss = jnp.zeros((self.replicas,))
+        for b in range(self.num_batches):
+            batch = self._stacked_batch(epoch, b)
+            (self._dev, self._srv, self._dev_opt, self._srv_opt,
+             loss) = self._step(self._dev, self._srv, self._dev_opt,
+                                self._srv_opt, batch, jnp.float32(lr))
+        merged = split_lib.merge_params(self.model, self._dev, self._srv)
+        self.snapshots[epoch] = [
+            jax.tree.map(lambda x: np.asarray(x[r]), merged)
+            for r in range(self.replicas)]
+        self.losses[epoch] = np.asarray(loss)
+
+    def prune(self, min_live_epoch: int):
+        """Drop snapshots no straggler can still contribute."""
+        for e in [e for e in self.snapshots if e < min_live_epoch]:
+            del self.snapshots[e]
+            del self.losses[e]
+
+    # -- cost model (one XLA lowering per cohort, not per client) --------
+
+    def costs(self, cost_model: StageCostModel) -> Tuple[float, float, int]:
+        """(device fwd FLOPs, server fwd FLOPs, smashed bytes) for ONE
+        client's batch."""
+        if self._costs is None:
+            dev1 = jax.tree.map(lambda x: x[0], self._dev)
+            srv1 = jax.tree.map(lambda x: x[0], self._srv)
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.batchers[0].batch_at(0, 0).items()}
+            self._costs = cost_model.costs(self.model, dev1, srv1, batch,
+                                           self.sp)
+        return self._costs
+
+    def nbytes(self) -> Dict[str, int]:
+        """Payload sizes used by the timing layer."""
+        if self._nbytes is None:
+            dev1 = jax.tree.map(lambda x: x[0], self._dev)
+            srv1 = jax.tree.map(lambda x: x[0], self._srv)
+            srv_opt1 = jax.tree.map(lambda x: x[0], self._srv_opt)
+            self._nbytes = {
+                "dev": tree_nbytes(dev1),
+                "update": tree_nbytes(dev1) + tree_nbytes(srv1),
+                "ckpt": (tree_nbytes(srv1) + tree_nbytes(srv_opt1)),
+            }
+        return self._nbytes
+
+    def server_state_for(self, replica: int) -> Tuple[Params, Params]:
+        """Current server-stage (params, opt state) of one replica — the
+        payload an ``EdgeCheckpoint`` carries during migration."""
+        srv = jax.tree.map(lambda x: np.asarray(x[replica]), self._srv)
+        opt = jax.tree.map(lambda x: np.asarray(x[replica]), self._srv_opt)
+        return srv, opt
+
+
+# ---------------------------------------------------------------------------
+# the fleet
+# ---------------------------------------------------------------------------
+
+class Fleet:
+    """All simulated clients, grouped into cohorts."""
+
+    def __init__(self, model, optimizer: Optimizer, specs: Sequence[ClientSpec],
+                 *, split_point: int, lr_schedule, max_replicas: int = 8,
+                 seed: int = 0):
+        self.model = model
+        self.sp = split_point
+        self.lr_schedule = lr_schedule
+        self.seed = seed
+        self.global_params: Params = model.init(jax.random.PRNGKey(seed))
+        self.cost_model = StageCostModel()
+
+        by_key: Dict[Tuple[int, int], List[ClientSpec]] = {}
+        for s in specs:
+            by_key.setdefault(s.cohort_key, []).append(s)
+        self.cohorts: Dict[Tuple[int, int], Cohort] = {}
+        self.clients: Dict[str, SimClient] = {}
+        for key, members in by_key.items():
+            R = min(len(members), max_replicas)
+            self.cohorts[key] = Cohort(key, model, optimizer, split_point,
+                                       R, seed)
+            for i, s in enumerate(members):
+                self.clients[s.client_id] = SimClient(
+                    spec=s, replica=i % R, edge_id=s.edge_id)
+
+    # -- numerics --------------------------------------------------------
+
+    def set_global(self, tree: Params):
+        """Install the aggregator's new global model. Kept as-is (numpy
+        ok): device transfer happens once per cohort epoch in run_epoch,
+        not per async update arrival."""
+        self.global_params = tree
+
+    def ensure_epoch(self, client: SimClient, epoch: int):
+        """Materialize the cohort's epoch (no-op if already run)."""
+        cohort = self.cohorts[client.spec.cohort_key]
+        if epoch in cohort.snapshots:
+            return
+        cohort.run_epoch(self.global_params, epoch,
+                         self.lr_schedule(epoch))
+        live = min((c.epoch for c in self.clients.values()
+                    if c.spec.cohort_key == client.spec.cohort_key
+                    and not c.done), default=epoch)
+        cohort.prune(live)
+
+    def contribution(self, client: SimClient, epoch: int
+                     ) -> Tuple[Params, float]:
+        """(merged update tree, final loss) for one client's epoch."""
+        cohort = self.cohorts[client.spec.cohort_key]
+        return (cohort.snapshots[epoch][client.replica],
+                float(cohort.losses[epoch][client.replica]))
+
+    # -- timing inputs ---------------------------------------------------
+
+    def batch_costs(self, client: SimClient) -> Tuple[float, float, int]:
+        cohort = self.cohorts[client.spec.cohort_key]
+        cohort.ensure_stages(self.global_params)
+        return cohort.costs(self.cost_model)
+
+    def payload_nbytes(self, client: SimClient) -> Dict[str, int]:
+        cohort = self.cohorts[client.spec.cohort_key]
+        cohort.ensure_stages(self.global_params)
+        return cohort.nbytes()
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.clients)

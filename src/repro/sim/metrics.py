@@ -1,0 +1,126 @@
+"""Metrics collection for fleet simulations.
+
+The simulator streams two raw record types here — one per client-epoch
+contribution, one per migration — and ``build_rounds()`` folds them into
+per-round JSON records shaped like the existing ``benchmarks/`` output
+(plain dicts, json.dumps-able, one record per round).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class MigrationRecord:
+    client_id: str
+    src_edge: str
+    dst_edge: str
+    round_idx: int                 # the client epoch interrupted by the move
+    start_s: float                 # sim time the device disconnected
+    end_s: float                   # sim time training resumed at dst
+    nbytes: int
+    pack_s: float
+    queue_s: float                 # backhaul FIFO wait (backpressure)
+    transfer_s: float
+
+    @property
+    def overhead_s(self) -> float:
+        """Simulated end-to-end handoff cost (the paper's <=2 s number,
+        now including queueing)."""
+        return self.end_s - self.start_s
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"client_id": self.client_id, "src_edge": self.src_edge,
+                "dst_edge": self.dst_edge, "round_idx": self.round_idx,
+                "start_s": self.start_s, "end_s": self.end_s,
+                "nbytes": self.nbytes, "pack_s": self.pack_s,
+                "queue_s": self.queue_s, "transfer_s": self.transfer_s,
+                "overhead_s": self.overhead_s}
+
+
+@dataclass
+class Contribution:
+    client_id: str
+    round_idx: int                 # epoch index (== round in sync mode)
+    arrival_s: float               # sim time the update reached aggregation
+    duration_s: float              # epoch start -> update applied
+    staleness: int
+    loss: float
+    mix_weight: float = 0.0        # async: effective alpha; sync: 0
+
+
+class FleetMetrics:
+    """Accumulates raw events; renders per-round JSON records."""
+
+    def __init__(self):
+        self.contributions: List[Contribution] = []
+        self.migrations: List[MigrationRecord] = []
+        self.barrier_times: Dict[int, float] = {}   # sync round -> commit time
+
+    # -- recording -------------------------------------------------------
+
+    def record_contribution(self, **kw):
+        self.contributions.append(Contribution(**kw))
+
+    def record_migration(self, rec: MigrationRecord):
+        self.migrations.append(rec)
+
+    def record_barrier(self, round_idx: int, sim_time: float):
+        self.barrier_times[round_idx] = sim_time
+
+    # -- aggregation -----------------------------------------------------
+
+    def build_rounds(self) -> List[Dict[str, Any]]:
+        """One JSON record per round (sync: barrier rounds; async: epoch
+        buckets)."""
+        by_round: Dict[int, List[Contribution]] = {}
+        for c in self.contributions:
+            by_round.setdefault(c.round_idx, []).append(c)
+        migs_by_round: Dict[int, List[MigrationRecord]] = {}
+        for m in self.migrations:
+            migs_by_round.setdefault(m.round_idx, []).append(m)
+
+        records = []
+        for r in sorted(by_round):
+            cs = by_round[r]
+            migs = migs_by_round.get(r, [])
+            durations = np.array([c.duration_s for c in cs])
+            rec = {
+                "round_idx": r,
+                "n_updates": len(cs),
+                "n_stale": int(sum(c.staleness > 0 for c in cs)),
+                "mean_staleness": float(np.mean([c.staleness for c in cs])),
+                "max_staleness": int(max(c.staleness for c in cs)),
+                "mean_loss": float(np.mean([c.loss for c in cs])),
+                "mean_round_time_s": float(durations.mean()),
+                "p95_round_time_s": float(np.percentile(durations, 95)),
+                "max_round_time_s": float(durations.max()),
+                "sim_end_s": float(max(c.arrival_s for c in cs)),
+                "n_migrations": len(migs),
+                "migration_overhead_s": float(
+                    sum(m.overhead_s for m in migs)),
+                "migration_queue_s": float(sum(m.queue_s for m in migs)),
+            }
+            if r in self.barrier_times:
+                rec["barrier_s"] = self.barrier_times[r]
+            records.append(rec)
+        return records
+
+    def migration_summary(self) -> Dict[str, Any]:
+        if not self.migrations:
+            return {"count": 0, "total_overhead_s": 0.0,
+                    "mean_overhead_s": 0.0, "max_overhead_s": 0.0,
+                    "total_queue_s": 0.0, "total_bytes": 0}
+        ov = np.array([m.overhead_s for m in self.migrations])
+        return {
+            "count": len(self.migrations),
+            "total_overhead_s": float(ov.sum()),
+            "mean_overhead_s": float(ov.mean()),
+            "p95_overhead_s": float(np.percentile(ov, 95)),
+            "max_overhead_s": float(ov.max()),
+            "total_queue_s": float(sum(m.queue_s for m in self.migrations)),
+            "total_bytes": int(sum(m.nbytes for m in self.migrations)),
+        }

@@ -1,0 +1,164 @@
+"""Scenario library: the fleet-scale phenomena the paper's 4-device
+testbed cannot express.
+
+  poisson              steady-state random mobility (baseline)
+  handoff_storm        a large slice of the fleet moves at once (stadium
+                       emptying) — checkpoint transfers queue on the
+                       source edges' backhaul FIFOs
+  flash_crowd          moves all target one edge — its compute slots
+                       oversubscribe and server-stage time stretches
+  device_churn         clients drop offline mid-training and rejoin
+                       later; their updates arrive stale (async mode)
+  heterogeneous_links  10x spread in per-edge backhaul bandwidth
+
+``run_scenario`` returns a plain-dict report (per-round JSON records in
+the same spirit as ``benchmarks/``): config, rounds, migration summary,
+engine throughput, per-edge stats.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.mobility import MobilityTrace, MoveEvent, poisson_moves
+from repro.models.vgg import VGG5
+from repro.optim.optimizers import sgd
+from repro.optim.schedules import constant
+from repro.runtime.transport import LinkModel
+from repro.sim.edge import BACKHAUL_1GBPS, SimEdge, make_edges
+from repro.sim.fleet import Fleet, make_fleet_specs
+from repro.sim.simulator import FleetResult, FleetSimulator
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    name: str
+    kind: str = "poisson"
+    num_clients: int = 64
+    num_edges: int = 4
+    rounds: int = 3
+    mode: str = "async"          # async shows the interesting dynamics
+    batch_size: int = 16
+    num_batches: int = 2
+    max_replicas: int = 4
+    slots: int = 8
+    lr: float = 0.01
+    seed: int = 0
+    # scenario-specific knobs
+    poisson_rate: float = 0.05
+    storm_round: int = 1
+    storm_fraction: float = 0.5
+    crowd_edge: int = 0
+    churn_fraction: float = 0.25
+    churn_epoch: int = 1
+    churn_offline_s: float = 30.0
+    link_spread: float = 10.0
+    measure_pack: bool = True
+
+    def replace(self, **kw) -> "ScenarioSpec":
+        return dataclasses.replace(self, **kw)
+
+
+def _client_ids(spec: ScenarioSpec) -> List[str]:
+    return [f"dev-{i:04d}" for i in range(spec.num_clients)]
+
+
+def _edge_ids(spec: ScenarioSpec) -> List[str]:
+    return [f"edge-{i}" for i in range(spec.num_edges)]
+
+
+def _build_trace(spec: ScenarioSpec) -> Optional[MobilityTrace]:
+    cids, eids = _client_ids(spec), _edge_ids(spec)
+    if spec.kind in ("poisson", "heterogeneous_links"):
+        return MobilityTrace(poisson_moves(cids, eids, spec.rounds,
+                                           spec.poisson_rate,
+                                           seed=spec.seed))
+    if spec.kind == "handoff_storm":
+        # every k-th client leaves its home edge simultaneously mid-epoch
+        stride = max(int(round(1.0 / max(spec.storm_fraction, 1e-6))), 1)
+        events = []
+        for i in range(0, spec.num_clients, stride):
+            src = eids[i % len(eids)]
+            dst = eids[(i + 1) % len(eids)]
+            events.append(MoveEvent(spec.storm_round, cids[i], src, dst, 0.5))
+        return MobilityTrace(events)
+    if spec.kind == "flash_crowd":
+        # moves converge on one edge; its slots oversubscribe
+        target = eids[spec.crowd_edge % len(eids)]
+        eligible = [i for i in range(spec.num_clients)
+                    if eids[i % len(eids)] != target]
+        stride = max(int(round(1.0 / max(spec.storm_fraction, 1e-6))), 1)
+        events = [MoveEvent(spec.storm_round, cids[i], eids[i % len(eids)],
+                            target, 0.5)
+                  for i in eligible[::stride]]
+        return MobilityTrace(events)
+    if spec.kind == "device_churn":
+        return MobilityTrace(poisson_moves(cids, eids, spec.rounds,
+                                           spec.poisson_rate / 2,
+                                           seed=spec.seed))
+    raise ValueError(f"unknown scenario kind {spec.kind!r}")
+
+
+def _build_edges(spec: ScenarioSpec) -> List[SimEdge]:
+    if spec.kind == "heterogeneous_links":
+        # geometric bandwidth spread across edges, slowest = base/spread
+        base = BACKHAUL_1GBPS.bandwidth_bps
+        n = spec.num_edges
+        backhauls = [LinkModel(bandwidth_bps=base * spec.link_spread **
+                               (-i / max(n - 1, 1)), latency_s=0.002)
+                     for i in range(n)]
+        return make_edges(n, slots=spec.slots, backhauls=backhauls)
+    return make_edges(spec.num_edges, slots=spec.slots)
+
+
+def _build_dropouts(spec: ScenarioSpec) -> Optional[Dict[str, Tuple[int, float]]]:
+    if spec.kind != "device_churn":
+        return None
+    stride = max(int(round(1.0 / max(spec.churn_fraction, 1e-6))), 1)
+    return {cid: (spec.churn_epoch, spec.churn_offline_s)
+            for i, cid in enumerate(_client_ids(spec)) if i % stride == 0}
+
+
+def build_scenario(spec: ScenarioSpec) -> FleetSimulator:
+    edges = _build_edges(spec)
+    specs = make_fleet_specs(spec.num_clients, [e.edge_id for e in edges],
+                             batch_size=spec.batch_size,
+                             num_batches=spec.num_batches)
+    fleet = Fleet(VGG5(), sgd(momentum=0.9), specs, split_point=2,
+                  lr_schedule=constant(spec.lr),
+                  max_replicas=spec.max_replicas, seed=spec.seed)
+    return FleetSimulator(fleet, edges, trace=_build_trace(spec),
+                          mode=spec.mode, dropouts=_build_dropouts(spec),
+                          measure_pack=spec.measure_pack)
+
+
+def run_scenario(spec: ScenarioSpec) -> Dict[str, Any]:
+    """Build, run, and report one scenario as JSON-ready dicts."""
+    sim = build_scenario(spec)
+    result = sim.run(spec.rounds)
+    return {
+        "scenario": spec.name,
+        "kind": spec.kind,
+        "config": {"num_clients": spec.num_clients,
+                   "num_edges": spec.num_edges, "rounds": spec.rounds,
+                   "mode": spec.mode, "max_replicas": spec.max_replicas,
+                   "slots": spec.slots, "seed": spec.seed},
+        "rounds": result.rounds,
+        "migrations": result.migration_summary,
+        "engine": result.engine_stats,
+        "edges": result.edge_stats,
+        "summary": result.summary(),
+    }
+
+
+# default registry, sized for CI; scale with .replace(num_clients=...)
+SCENARIOS: Dict[str, ScenarioSpec] = {
+    "poisson": ScenarioSpec("poisson", kind="poisson"),
+    "handoff_storm": ScenarioSpec("handoff_storm", kind="handoff_storm"),
+    "flash_crowd": ScenarioSpec("flash_crowd", kind="flash_crowd",
+                                slots=4),
+    "device_churn": ScenarioSpec("device_churn", kind="device_churn"),
+    "heterogeneous_links": ScenarioSpec("heterogeneous_links",
+                                        kind="heterogeneous_links"),
+}

@@ -1,0 +1,345 @@
+"""The fleet simulator: FedFly protocol dynamics at thousand-device scale.
+
+Wires together the pieces of ``repro.sim``:
+
+  engine     — heap-based event queue + simulated clock
+  fleet      — cohort-vectorized client numerics (vmap over replicas)
+  edge       — per-edge compute slots + backhaul FIFO (backpressure)
+  async_agg  — sync FedAvg barrier or FedAsync staleness-weighted mixing
+  metrics    — per-round JSON records
+
+and plugs into the existing runtime: ``MigrationExecutor`` packs/unpacks
+real ``EdgeCheckpoint`` payloads for every simulated handoff (so
+migration byte counts, pack times and codec quantization error are
+measured, not guessed), ``MobilityTrace`` supplies the moves, and
+``LinkModel`` times every byte.
+
+Event flow for one client epoch (sync mode; async differs only in the
+aggregation step and in that clients immediately start their next epoch):
+
+  epoch start ──batch_time──▶ BATCH_DONE ×num_batches
+      │                            │ (trace says move at this batch)
+      │                            ▼
+      │                          MOVE ──pack_s──▶ CHECKPOINT_PACKED
+      │                                               │ backhaul FIFO
+      │                                               ▼
+      │                  resume at dst ◀── TRANSFER_DONE(migration)
+      ▼
+  last batch ── edge backhaul FIFO ──▶ TRANSFER_DONE(update)
+      │ sync: all clients arrived → ROUND_BARRIER → FedAvg commit
+      │ async: AsyncAggregator.submit(staleness-weighted) immediately
+      ▼
+  next epoch (sync: after barrier; async: after downlink)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.checkpoint import EdgeCheckpoint
+from repro.core.migration import MigrationExecutor
+from repro.core.mobility import MobilityTrace
+from repro.sim.async_agg import (AsyncAggregator, StalenessFn, SyncAggregator,
+                                 poly_staleness)
+from repro.sim.edge import SimEdge
+from repro.sim.engine import EventKind, SimEngine
+from repro.sim.fleet import Fleet, SimClient
+from repro.sim.metrics import FleetMetrics, MigrationRecord
+
+Params = Any
+
+
+@dataclass
+class FleetResult:
+    mode: str
+    rounds: List[Dict[str, Any]]
+    migration_summary: Dict[str, Any]
+    engine_stats: Dict[str, Any]
+    edge_stats: List[Dict[str, Any]]
+    final_params: Params
+    metrics: FleetMetrics
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "mode": self.mode,
+            "num_rounds": len(self.rounds),
+            "sim_time_s": self.engine_stats["sim_time_s"],
+            "events_per_sec": self.engine_stats["events_per_sec"],
+            "events_processed": self.engine_stats["events_processed"],
+            "final_mean_loss": (self.rounds[-1]["mean_loss"]
+                                if self.rounds else None),
+            "mean_round_time_s": float(np.mean(
+                [r["mean_round_time_s"] for r in self.rounds]))
+            if self.rounds else None,
+            "migrations": self.migration_summary,
+        }
+
+
+class FleetSimulator:
+    """Discrete-event FedFly simulation over a ``Fleet`` and ``SimEdge``s."""
+
+    def __init__(self, fleet: Fleet, edges: Sequence[SimEdge], *,
+                 trace: Optional[MobilityTrace] = None,
+                 mode: str = "sync",
+                 alpha: float = 0.6,
+                 staleness_fn: Optional[StalenessFn] = None,
+                 dropouts: Optional[Dict[str, Tuple[int, float]]] = None,
+                 migration_codec: str = "raw",
+                 measure_pack: bool = True):
+        if mode not in ("sync", "async"):
+            raise ValueError(f"mode must be sync|async, got {mode!r}")
+        if dropouts and mode == "sync":
+            raise ValueError("device churn (dropouts) requires mode='async'; "
+                             "a sync barrier would deadlock on offline "
+                             "clients")
+        self.fleet = fleet
+        self.edges: Dict[str, SimEdge] = {e.edge_id: e for e in edges}
+        for c in fleet.clients.values():
+            if c.edge_id not in self.edges:
+                raise ValueError(f"client {c.client_id} starts on unknown "
+                                 f"edge {c.edge_id}")
+            self.edges[c.edge_id].attach()
+        self.trace = trace
+        self.mode = mode
+        self.dropouts = dropouts or {}
+        self.measure_pack = measure_pack
+        self.migrator = MigrationExecutor(codec=migration_codec)
+
+        self.engine = SimEngine()
+        self.engine.register(EventKind.BATCH_DONE, self._on_batch_done)
+        self.engine.register(EventKind.MOVE, self._on_move)
+        self.engine.register(EventKind.CHECKPOINT_PACKED, self._on_packed)
+        self.engine.register(EventKind.TRANSFER_DONE, self._on_transfer_done)
+        self.engine.register(EventKind.ROUND_BARRIER, self._on_barrier)
+        self.engine.register(EventKind.REJOIN, self._on_rejoin)
+
+        self.metrics = FleetMetrics()
+        if mode == "sync":
+            self.agg = SyncAggregator(fleet.global_params)
+        else:
+            self.agg = AsyncAggregator(fleet.global_params, alpha=alpha,
+                                       staleness_fn=staleness_fn)
+        self.num_rounds = 0
+        self._arrived = 0
+        self._expected = 0
+        self._round_start_s = 0.0
+        self._inflight: Dict[str, Dict[str, Any]] = {}   # migrations
+        # sync-mode contribution dedupe: (cohort_key, replica) -> weight
+        self._round_weights: Dict[Tuple, float] = {}
+
+    # -- timing ----------------------------------------------------------
+
+    def _batch_time(self, c: SimClient) -> float:
+        """One split batch at the client's current edge, including the
+        edge's processor-sharing congestion."""
+        dflops, sflops, sbytes = self.fleet.batch_costs(c)
+        e = self.edges[c.edge_id]
+        t_dev = 3.0 * dflops / c.spec.profile.flops_per_s
+        t_srv = 3.0 * sflops / e.profile.flops_per_s * e.congestion()
+        t_link = e.wireless.transfer_time(sbytes) * 2   # smashed up, grad down
+        return t_dev + t_srv + t_link
+
+    def _downlink_time(self, c: SimClient) -> float:
+        """Fetch the new device stage at epoch start."""
+        nb = self.fleet.payload_nbytes(c)
+        return self.edges[c.edge_id].wireless.transfer_time(nb["dev"])
+
+    # -- epoch lifecycle -------------------------------------------------
+
+    def _start_epoch(self, c: SimClient, epoch: int, start_s: float):
+        c.epoch = epoch
+        c.batch_idx = 0
+        c.version_at_start = self.agg.version
+        c.epoch_start_s = start_s
+        self.fleet.ensure_epoch(c, epoch)
+        move = self.trace.move_for(epoch, c.client_id) if self.trace else None
+        c.pending_move = move
+        nb = c.spec.num_batches
+        # clamp inside the epoch (fraction < 1 moves before the epoch
+        # ends) — same rule as core/scheduler.py
+        c.move_at = (min(int(round(move.fraction * nb)), nb - 1)
+                     if move is not None else -1)
+        self.edges[c.edge_id].train_resume()
+        if c.move_at == 0:
+            self.engine.schedule_at(start_s, EventKind.MOVE,
+                                    client=c.client_id)
+        else:
+            self.engine.schedule_at(start_s + self._batch_time(c),
+                                    EventKind.BATCH_DONE, client=c.client_id)
+
+    def _on_batch_done(self, ev):
+        c = self.fleet.clients[ev.payload["client"]]
+        c.batch_idx += 1
+        if c.pending_move is not None and c.batch_idx == c.move_at:
+            self.engine.schedule(0.0, EventKind.MOVE, client=c.client_id)
+            return
+        if c.batch_idx < c.spec.num_batches:
+            self.engine.schedule(self._batch_time(c), EventKind.BATCH_DONE,
+                                 client=c.client_id)
+        else:
+            self._epoch_computed(c)
+
+    def _epoch_computed(self, c: SimClient):
+        """All batches done — upload the merged update over the edge
+        backhaul (FIFO: shares the link with migration traffic). A
+        churned device goes dark instead and uploads when it rejoins
+        (the backhaul is NOT reserved while it is away)."""
+        self.edges[c.edge_id].train_pause()
+        if c.client_id in self.dropouts and \
+                self.dropouts[c.client_id][0] == c.epoch:
+            self.engine.schedule(self.dropouts[c.client_id][1],
+                                 EventKind.REJOIN, client=c.client_id)
+            return
+        self._upload_update(c)
+
+    def _upload_update(self, c: SimClient):
+        nbytes = self.fleet.payload_nbytes(c)["update"]
+        _, done, _ = self.edges[c.edge_id].reserve_backhaul(self.engine.now,
+                                                            nbytes)
+        self.engine.schedule_at(done, EventKind.TRANSFER_DONE,
+                                client=c.client_id, what="update")
+
+    def _on_rejoin(self, ev):
+        self._upload_update(self.fleet.clients[ev.payload["client"]])
+
+    # -- migration (FedFly steps 6-9, with backpressure) -----------------
+
+    def _on_move(self, ev):
+        c = self.fleet.clients[ev.payload["client"]]
+        move = c.pending_move
+        c.pending_move = None
+        c.migrating = True
+        src = self.edges[c.edge_id]
+        src.train_pause()
+        src.detach()
+        src.migrations_out += 1
+        if self.measure_pack:
+            cohort = self.fleet.cohorts[c.spec.cohort_key]
+            srv, opt = cohort.server_state_for(c.replica)
+            ckpt = EdgeCheckpoint(
+                client_id=c.client_id, round_idx=c.epoch, epoch=c.epoch,
+                batch_idx=c.batch_idx, split_point=self.fleet.sp,
+                server_params=srv, optimizer_state=opt, loss=0.0,
+                rng_seed=self.fleet.seed)
+            _, report = self.migrator.migrate(ckpt, c.edge_id, move.dst_edge)
+            nbytes, pack_s, unpack_s = (report.nbytes, report.pack_s,
+                                        report.unpack_s)
+        else:       # mega-scale: skip real serialization, use cached sizes
+            nbytes = self.fleet.payload_nbytes(c)["ckpt"]
+            pack_s = unpack_s = 0.0
+        self._inflight[c.client_id] = {
+            "dst": move.dst_edge, "nbytes": nbytes, "pack_s": pack_s,
+            "unpack_s": unpack_s, "start_s": self.engine.now,
+            "src": c.edge_id}
+        self.engine.schedule(pack_s, EventKind.CHECKPOINT_PACKED,
+                             client=c.client_id)
+
+    def _on_packed(self, ev):
+        c = self.fleet.clients[ev.payload["client"]]
+        mig = self._inflight[c.client_id]
+        src = self.edges[mig["src"]]
+        _, done, wait = src.reserve_backhaul(self.engine.now, mig["nbytes"])
+        mig["queue_s"] = wait
+        self.engine.schedule_at(done, EventKind.TRANSFER_DONE,
+                                client=c.client_id, what="migration")
+
+    def _resume_after_migration(self, c: SimClient):
+        mig = self._inflight.pop(c.client_id)
+        dst = self.edges[mig["dst"]]
+        dst.attach()
+        dst.train_resume()
+        dst.migrations_in += 1
+        c.edge_id = mig["dst"]
+        c.migrating = False
+        end = self.engine.now + mig["unpack_s"]
+        self.metrics.record_migration(MigrationRecord(
+            client_id=c.client_id, src_edge=mig["src"], dst_edge=mig["dst"],
+            round_idx=c.epoch, start_s=mig["start_s"], end_s=end,
+            nbytes=mig["nbytes"], pack_s=mig["pack_s"],
+            queue_s=mig.get("queue_s", 0.0),
+            transfer_s=self.engine.now - mig["start_s"] - mig["pack_s"]
+            - mig.get("queue_s", 0.0)))
+        # FedFly: resume the interrupted epoch, never restart (move_at is
+        # clamped below num_batches, so batches always remain)
+        assert c.batch_idx < c.spec.num_batches
+        self.engine.schedule_at(end + self._batch_time(c),
+                                EventKind.BATCH_DONE, client=c.client_id)
+
+    # -- update arrival / aggregation ------------------------------------
+
+    def _on_transfer_done(self, ev):
+        c = self.fleet.clients[ev.payload["client"]]
+        if ev.payload["what"] == "migration":
+            self._resume_after_migration(c)
+            return
+        # model update reached the aggregation point
+        tree, loss = self.fleet.contribution(c, c.epoch)
+        staleness = self.agg.version - c.version_at_start
+        now = self.engine.now
+        mix = 0.0
+        if self.mode == "sync":
+            key = (c.spec.cohort_key, c.replica)
+            self._round_weights[key] = (self._round_weights.get(key, 0.0)
+                                        + c.spec.num_samples)
+            self._arrived += 1
+        else:
+            mix = self.agg.submit(tree, weight=c.spec.num_samples,
+                                  staleness=staleness)
+            self.fleet.set_global(self.agg.params)
+        self.metrics.record_contribution(
+            client_id=c.client_id, round_idx=c.epoch, arrival_s=now,
+            duration_s=now - c.epoch_start_s, staleness=staleness,
+            loss=loss, mix_weight=mix)
+        c.epochs_done += 1
+        if self.mode == "sync":
+            if self._arrived == self._expected:
+                self.engine.schedule(0.0, EventKind.ROUND_BARRIER,
+                                     round_idx=c.epoch)
+        else:
+            if c.epochs_done < self.num_rounds:
+                self._start_epoch(c, c.epoch + 1,
+                                  now + self._downlink_time(c))
+            else:
+                c.done = True
+
+    def _on_barrier(self, ev):
+        """Sync FedAvg commit: average this round's updates (deduped by
+        cohort replica — clients sharing a replica share a tree)."""
+        r = ev.payload["round_idx"]
+        for (cohort_key, replica), weight in sorted(
+                self._round_weights.items()):
+            tree = self.fleet.cohorts[cohort_key].snapshots[r][replica]
+            self.agg.submit(tree, weight)
+        self._round_weights.clear()
+        self.fleet.set_global(self.agg.commit())
+        self.metrics.record_barrier(r, self.engine.now)
+        if r + 1 < self.num_rounds:
+            self._start_round(r + 1)
+
+    def _start_round(self, r: int):
+        self._arrived = 0
+        self._expected = self.fleet.num_clients
+        self._round_start_s = self.engine.now
+        for c in self.fleet.clients.values():
+            self._start_epoch(c, r, self.engine.now + self._downlink_time(c))
+
+    # -- entry point -----------------------------------------------------
+
+    def run(self, rounds: int) -> FleetResult:
+        self.num_rounds = rounds
+        if self.mode == "sync":
+            self._start_round(0)
+        else:
+            for c in self.fleet.clients.values():
+                self._start_epoch(c, 0, self._downlink_time(c))
+        self.engine.run()
+        return FleetResult(
+            mode=self.mode,
+            rounds=self.metrics.build_rounds(),
+            migration_summary=self.metrics.migration_summary(),
+            engine_stats=self.engine.stats(),
+            edge_stats=[e.stats() for e in self.edges.values()],
+            final_params=self.agg.params,
+            metrics=self.metrics)

@@ -1,0 +1,207 @@
+"""repro.sim end-to-end: cohort-vectorized fleets, sync/async aggregation,
+migration with backpressure, edge congestion, scenarios."""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.mobility import MobilityTrace, MoveEvent
+from repro.models.vgg import VGG5
+from repro.optim.optimizers import sgd
+from repro.optim.schedules import constant
+from repro.sim.async_agg import (AsyncAggregator, hinge_staleness,
+                                 poly_staleness)
+from repro.sim.edge import make_edges
+from repro.sim.fleet import Fleet, make_fleet_specs
+from repro.sim.scenarios import SCENARIOS, run_scenario
+from repro.sim.simulator import FleetSimulator
+
+
+def make_sim(num_clients=8, num_edges=2, mode="sync", trace=None,
+             max_replicas=None, slots=8, num_batches=3, seed=0, **kw):
+    edges = make_edges(num_edges, slots=slots)
+    specs = make_fleet_specs(num_clients, [e.edge_id for e in edges],
+                             batch_size=8, num_batches=num_batches)
+    fleet = Fleet(VGG5(), sgd(momentum=0.9), specs, split_point=2,
+                  lr_schedule=constant(0.01),
+                  max_replicas=max_replicas or num_clients, seed=seed)
+    return FleetSimulator(fleet, edges, trace=trace, mode=mode, **kw)
+
+
+# -- basic protocol ---------------------------------------------------------
+
+def test_sync_round_records_and_loss_decreases():
+    res = make_sim(mode="sync").run(4)
+    assert len(res.rounds) == 4
+    assert all(r["n_updates"] == 8 for r in res.rounds)
+    assert res.rounds[-1]["mean_loss"] < res.rounds[0]["mean_loss"]
+    # sync mode: nothing is ever stale
+    assert all(r["n_stale"] == 0 for r in res.rounds)
+
+
+def test_determinism_same_seed():
+    a = make_sim(mode="sync", seed=3).run(2)
+    b = make_sim(mode="sync", seed=3).run(2)
+    assert a.rounds == b.rounds
+    for x, y in zip(np.asarray(a.final_params[0]["w"]).ravel(),
+                    np.asarray(b.final_params[0]["w"]).ravel()):
+        assert x == y
+
+
+def test_cohort_sharing_replicas_still_counts_every_client():
+    """1000-device trick: many clients per replica, per-client timing."""
+    res = make_sim(num_clients=12, max_replicas=3, mode="sync").run(2)
+    assert all(r["n_updates"] == 12 for r in res.rounds)
+    fleet_replicas = {c.replica for c in
+                      make_sim(num_clients=12, max_replicas=3)
+                      .fleet.clients.values()}
+    assert fleet_replicas == {0, 1, 2}
+
+
+# -- migration --------------------------------------------------------------
+
+def test_migration_emits_record_and_round_completes():
+    trace = MobilityTrace([MoveEvent(1, "dev-0000", "edge-0", "edge-1", 0.5)])
+    res = make_sim(mode="sync", trace=trace).run(3)
+    assert res.migration_summary["count"] == 1
+    m = res.metrics.migrations[0]
+    assert m.client_id == "dev-0000" and m.round_idx == 1
+    assert m.overhead_s > 0 and m.nbytes > 1000
+    # the moved client still contributed every round (resume, not restart)
+    assert all(r["n_updates"] == 8 for r in res.rounds)
+
+
+def test_migration_delays_the_moving_client():
+    trace = MobilityTrace([MoveEvent(1, "dev-0000", "edge-0", "edge-1", 0.5)])
+    base = make_sim(mode="sync").run(3)
+    moved = make_sim(mode="sync", trace=trace).run(3)
+
+    def dur(res, r):
+        return next(c.duration_s for c in res.metrics.contributions
+                    if c.client_id == "dev-0000" and c.round_idx == r)
+
+    overhead = moved.metrics.migrations[0].overhead_s
+    assert overhead > 0
+    # the moved client pays (at least) the migration overhead in round 1
+    assert dur(moved, 1) >= dur(base, 1) + 0.5 * overhead
+    # round 0 (before the move) is untouched
+    assert dur(moved, 0) == pytest.approx(dur(base, 0), rel=1e-6)
+
+
+def test_handoff_storm_queues_on_backhaul():
+    """Simultaneous checkpoints serialize FIFO on the source backhaul."""
+    events = [MoveEvent(0, f"dev-{i:04d}", "edge-0", "edge-1", 0.5)
+              for i in range(0, 8, 2)]    # 4 clients leave edge-0 at once
+    res = make_sim(mode="sync", trace=MobilityTrace(events)).run(1)
+    assert res.migration_summary["count"] == 4
+    assert res.migration_summary["total_queue_s"] > 0
+    waits = sorted(m.queue_s for m in res.metrics.migrations)
+    assert waits[0] == pytest.approx(0.0, abs=1e-9)   # first in line
+    assert waits[-1] > waits[1] or waits[-1] > 0      # later ones queued
+
+
+# -- edge capacity ----------------------------------------------------------
+
+def test_oversubscribed_edge_stretches_rounds():
+    """With a weak edge, 8 clients on 1 slot share the processor and the
+    round stretches; 64 slots leave everyone unqueued."""
+    from repro.runtime.cluster import HardwareProfile
+    from repro.sim.fleet import Fleet
+    from repro.sim.simulator import FleetSimulator
+
+    def sim(slots):
+        edges = make_edges(1, slots=slots,
+                           profiles=(HardwareProfile("edge-tiny", 1.5e9),))
+        specs = make_fleet_specs(8, [e.edge_id for e in edges],
+                                 batch_size=8, num_batches=3)
+        fleet = Fleet(VGG5(), sgd(momentum=0.9), specs, split_point=2,
+                      lr_schedule=constant(0.01), max_replicas=8, seed=0)
+        return FleetSimulator(fleet, edges, mode="sync").run(2)
+
+    slow, fast = sim(1), sim(64)
+    assert slow.rounds[0]["mean_round_time_s"] > \
+        1.5 * fast.rounds[0]["mean_round_time_s"]
+    assert any(e["peak_active"] > 1 for e in slow.edge_stats)
+
+
+# -- async aggregation -------------------------------------------------------
+
+def test_async_updates_are_stale_and_weighted():
+    res = make_sim(mode="async").run(3)
+    assert len(res.rounds) == 3
+    assert sum(r["n_stale"] for r in res.rounds) > 0
+    assert res.rounds[-1]["mean_loss"] < res.rounds[0]["mean_loss"]
+
+
+def test_staleness_functions_monotone():
+    for fn in (poly_staleness(0.5), hinge_staleness(4.0, 2.0)):
+        vals = [fn(t) for t in range(10)]
+        assert vals[0] == pytest.approx(1.0)
+        assert all(a >= b for a, b in zip(vals, vals[1:]))
+        assert vals[-1] < 1.0
+
+
+def test_payload_sizes_known_before_first_epoch():
+    """Regression: the timing layer asks for payload sizes at round
+    start, before any cohort has trained — they must not cache as 0."""
+    sim = make_sim()
+    c = next(iter(sim.fleet.clients.values()))
+    nb = sim.fleet.payload_nbytes(c)
+    assert nb["dev"] > 1000 and nb["update"] > nb["dev"]
+    assert nb["ckpt"] > 1000
+
+
+def test_async_aggregator_weight_scales_mixing():
+    """A client with more data moves the global more (relative to the
+    running mean weight); uniform weights reduce to plain FedAsync."""
+    init = {"w": np.zeros((4,), np.float32)}
+    update = {"w": np.ones((4,), np.float32)}
+    agg = AsyncAggregator(init, alpha=0.1)
+    a_first = agg.submit(update, weight=100.0)
+    a_light = agg.submit(update, weight=10.0)
+    assert a_first == pytest.approx(0.1)      # first sets the reference
+    assert a_light < a_first / 2              # 10x less data → mixes less
+
+
+def test_async_aggregator_staleness_discounts_mixing():
+    init = {"w": np.zeros((4,), np.float32)}
+    update = {"w": np.ones((4,), np.float32)}
+    agg_fresh = AsyncAggregator(init, alpha=0.5)
+    agg_stale = AsyncAggregator(init, alpha=0.5)
+    a0 = agg_fresh.submit(update, staleness=0)
+    a9 = agg_stale.submit(update, staleness=9)
+    assert a0 > a9
+    assert agg_fresh.params["w"][0] > agg_stale.params["w"][0] > 0.0
+    assert agg_fresh.version == agg_stale.version == 1
+
+
+def test_churn_requires_async():
+    with pytest.raises(ValueError):
+        make_sim(mode="sync", dropouts={"dev-0000": (0, 10.0)})
+
+
+def test_churned_client_contributes_late_and_stale():
+    res = make_sim(mode="async",
+                   dropouts={"dev-0000": (1, 50.0)}).run(3)
+    mine = [c for c in res.metrics.contributions
+            if c.client_id == "dev-0000" and c.round_idx == 1]
+    others = [c for c in res.metrics.contributions
+              if c.client_id != "dev-0000" and c.round_idx == 1]
+    assert mine[0].duration_s > 50.0
+    assert mine[0].staleness >= max(o.staleness for o in others)
+
+
+# -- scenarios ---------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenarios_run_and_are_json(name):
+    spec = SCENARIOS[name].replace(num_clients=8, num_edges=2, rounds=2,
+                                   max_replicas=2)
+    rep = run_scenario(spec)
+    blob = json.dumps(rep)       # must be JSON-ready for benchmarks/
+    assert rep["rounds"] and rep["summary"]["events_per_sec"] > 0
+    assert all(r["n_updates"] == 8 for r in rep["rounds"])
+    if name in ("handoff_storm", "flash_crowd"):
+        assert rep["migrations"]["count"] > 0

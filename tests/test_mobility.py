@@ -1,0 +1,80 @@
+"""Mobility generators: ping-pong chain invariant, Poisson location
+consistency, and determinism under a fixed seed."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.mobility import (MobilityTrace, move_at_fraction,
+                                 periodic_moves, poisson_moves)
+
+
+def test_periodic_ping_pong_chain():
+    """Consecutive periodic events must chain: each move's src is the
+    previous move's dst (the device ping-pongs between edges)."""
+    events = periodic_moves("c", ("edge-A", "edge-B"), total_rounds=100,
+                            period=10, fraction=0.25)
+    assert [e.round_idx for e in events] == list(range(10, 100, 10))
+    assert events[0].src_edge == "edge-A"
+    for prev, nxt in zip(events, events[1:]):
+        assert nxt.src_edge == prev.dst_edge
+    for e in events:
+        assert e.src_edge != e.dst_edge
+        assert e.fraction == 0.25
+
+
+def test_periodic_three_edges_cycles():
+    events = periodic_moves("c", ("e0", "e1", "e2"), 9, 1)
+    dsts = [e.dst_edge for e in events]
+    assert dsts[:3] == ["e1", "e2", "e0"]
+    for prev, nxt in zip(events, events[1:]):
+        assert nxt.src_edge == prev.dst_edge
+
+
+def test_poisson_location_consistency():
+    """Each client's src must match its previous dst (no teleporting)."""
+    clients = [f"c{i}" for i in range(6)]
+    edges = ["e0", "e1", "e2", "e3"]
+    events = poisson_moves(clients, edges, total_rounds=60,
+                           rate_per_round=0.3, seed=7)
+    assert events, "rate 0.3 over 60 rounds must move someone"
+    loc = {c: edges[i % len(edges)] for i, c in enumerate(clients)}
+    for e in sorted(events, key=lambda e: (e.round_idx, e.client_id)):
+        assert e.src_edge == loc[e.client_id]
+        assert e.dst_edge != e.src_edge
+        assert 0.0 <= e.fraction < 1.0
+        loc[e.client_id] = e.dst_edge
+
+
+def test_poisson_deterministic_under_seed():
+    kw = dict(client_ids=["a", "b", "c"], edges=["e0", "e1"],
+              total_rounds=40, rate_per_round=0.25)
+    assert poisson_moves(**kw, seed=5) == poisson_moves(**kw, seed=5)
+    assert poisson_moves(**kw, seed=5) != poisson_moves(**kw, seed=6)
+
+
+def test_poisson_rate_scales_volume():
+    kw = dict(client_ids=[f"c{i}" for i in range(20)], edges=["e0", "e1"],
+              total_rounds=50)
+    lo = poisson_moves(**kw, rate_per_round=0.02, seed=0)
+    hi = poisson_moves(**kw, rate_per_round=0.5, seed=0)
+    assert len(hi) > 3 * len(lo)
+
+
+def test_trace_indexing():
+    events = poisson_moves(["a", "b"], ["e0", "e1"], 30, 0.4, seed=2)
+    trace = MobilityTrace(events)
+    flat = [e for r in range(30) for e in trace.moves_in_round(r)]
+    assert sorted(flat, key=lambda e: (e.round_idx, e.client_id)) == \
+        sorted(events, key=lambda e: (e.round_idx, e.client_id))
+    e0 = events[0]
+    assert trace.move_for(e0.round_idx, e0.client_id) == e0
+    assert trace.move_for(10_000, "a") is None
+
+
+def test_move_at_fraction_bounds():
+    (e,) = move_at_fraction("c", "A", "B", total_rounds=100,
+                            training_fraction=0.9)
+    assert e.round_idx == 90
+    (e,) = move_at_fraction("c", "A", "B", total_rounds=10,
+                            training_fraction=1.0)
+    assert e.round_idx == 9     # clamped to the last round

@@ -1,0 +1,94 @@
+"""repro.sim.engine: event ordering, determinism, handler dispatch."""
+from __future__ import annotations
+
+import pytest
+
+from repro.sim.engine import Event, EventKind, SimEngine
+
+
+def collect(engine, kinds=EventKind):
+    seen = []
+    for k in kinds:
+        engine.register(k, lambda ev: seen.append(ev))
+    return seen
+
+
+def test_time_ordering():
+    eng = SimEngine()
+    seen = collect(eng)
+    eng.schedule(3.0, EventKind.MOVE, tag="c")
+    eng.schedule(1.0, EventKind.BATCH_DONE, tag="a")
+    eng.schedule(2.0, EventKind.TRANSFER_DONE, tag="b")
+    eng.run()
+    assert [e.payload["tag"] for e in seen] == ["a", "b", "c"]
+    assert eng.now == 3.0
+    assert eng.events_processed == 3
+
+
+def test_tie_break_is_insertion_order():
+    eng = SimEngine()
+    seen = collect(eng)
+    for i in range(10):
+        eng.schedule(1.0, EventKind.BATCH_DONE, i=i)
+    eng.run()
+    assert [e.payload["i"] for e in seen] == list(range(10))
+
+
+def test_handlers_can_schedule():
+    eng = SimEngine()
+    fired = []
+
+    def on_batch(ev):
+        fired.append(("batch", eng.now))
+        if ev.payload["n"] < 3:
+            eng.schedule(1.0, EventKind.BATCH_DONE, n=ev.payload["n"] + 1)
+
+    eng.register(EventKind.BATCH_DONE, on_batch)
+    eng.schedule(1.0, EventKind.BATCH_DONE, n=0)
+    eng.run()
+    assert [t for _, t in fired] == [1.0, 2.0, 3.0, 4.0]
+
+
+def test_negative_delay_and_past_rejected():
+    eng = SimEngine()
+    eng.register(EventKind.MOVE, lambda ev: None)
+    eng.schedule(1.0, EventKind.MOVE)
+    eng.run()
+    with pytest.raises(ValueError):
+        eng.schedule(-0.5, EventKind.MOVE)
+    with pytest.raises(ValueError):
+        eng.schedule_at(0.5, EventKind.MOVE)    # now is 1.0
+
+
+def test_missing_handler_raises():
+    eng = SimEngine()
+    eng.schedule(0.0, EventKind.ROUND_BARRIER)
+    with pytest.raises(KeyError):
+        eng.run()
+
+
+def test_until_and_max_events_bounds():
+    eng = SimEngine()
+    collect(eng)
+    for i in range(5):
+        eng.schedule(float(i), EventKind.BATCH_DONE)
+    eng.run(until=2.5)
+    assert eng.events_processed == 3 and eng.pending == 2
+    eng.run(max_events=1)
+    assert eng.events_processed == 4
+    eng.run()
+    assert eng.pending == 0
+
+
+def test_stats_shape():
+    eng = SimEngine()
+    collect(eng)
+    eng.schedule(1.0, EventKind.MOVE)
+    eng.schedule(2.0, EventKind.MOVE)
+    eng.schedule(1.5, EventKind.BATCH_DONE)
+    eng.run()
+    s = eng.stats()
+    assert s["events_processed"] == 3
+    assert s["by_kind"] == {"batch_done": 1, "move": 2}
+    assert s["sim_time_s"] == 2.0
+    assert s["events_per_sec"] > 0
