@@ -4,25 +4,122 @@ Runs the scenario library at a configurable fleet size and reports, as
 JSON: engine throughput (events/sec), per-scenario per-round records
 (round time, staleness, losses), and migration-overhead summaries.
 
+Sharded execution: ``--shards K`` splits the event queue by edge into K
+shard engines under the conservative-lookahead window protocol;
+``--workers N`` runs them in N parallel processes (defaults to K when
+--shards > 1). ``--shard-sweep 1 2 4`` runs the first selected scenario
+once per shard count, verifies the per-round metrics are bit-identical
+across counts, and writes a per-shard-count events/sec artifact
+(``--artifact``, default bench_fleet_shards.json). Parallel speedup is
+bounded by the machine: event processing shards across workers but the
+cohort JAX numerics stay on the coordinator, so expect the ≥2x point
+at 10k devices to need ≥4 cores (more devices → more events per window
+→ better scaling; the artifact records os.cpu_count for context).
+
   PYTHONPATH=src python -m benchmarks.bench_fleet                # default
   PYTHONPATH=src python -m benchmarks.bench_fleet --quick        # CI smoke
-  PYTHONPATH=src python -m benchmarks.bench_fleet --clients 1000 --edges 8
+  PYTHONPATH=src python -m benchmarks.bench_fleet --devices 10000 \
+      --edges 32 --shards 4
+  PYTHONPATH=src python -m benchmarks.bench_fleet --devices 10000 \
+      --edges 32 --shard-sweep 1 4 --scenarios poisson
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 from repro.sim.scenarios import SCENARIOS, run_scenario
 
 
+def _scenario_spec(name: str, args, n_clients: int, n_edges: int,
+                   rounds: int, shards: int, workers):
+    return SCENARIOS[name].replace(
+        num_clients=n_clients, num_edges=n_edges, rounds=rounds,
+        max_replicas=args.max_replicas, seed=args.seed,
+        shards=shards, workers=workers,
+        # skip real checkpoint serialization at benchmark scale so
+        # events/sec measures the engine, not pickle-free packing
+        # (required anyway for worker processes, which are JAX-free)
+        measure_pack=(n_clients <= 128 and workers is None))
+
+
+def _run_one(name: str, spec) -> dict:
+    t1 = time.time()
+    rep = run_scenario(spec)
+    wall = time.time() - t1
+    return {
+        "wall_s": round(wall, 3),
+        "events_per_sec": round(rep["engine"]["events_per_sec"], 1),
+        "events": rep["engine"]["events_processed"],
+        "windows": rep["engine"].get("windows", 1),
+        "sim_time_s": round(rep["engine"]["sim_time_s"], 3),
+        "rounds": rep["rounds"],
+        "migration_overhead": rep["migrations"],
+    }
+
+
+def _shard_sweep(args, name: str, n_clients: int, n_edges: int,
+                 rounds: int) -> dict:
+    """One scenario per shard count; asserts bit-identical per-round
+    metrics and emits the events/sec artifact."""
+    sweep = {"scenario": name, "devices": n_clients, "edges": n_edges,
+             "rounds": rounds, "cpu_count": os.cpu_count(),
+             "per_shards": {}}
+    baseline_rounds = None
+    for k in args.shard_sweep:
+        workers = (k if k > 1 else None) if args.workers is None \
+            else (args.workers if k > 1 else None)
+        # pin measure_pack across the sweep: worker runs can't serialize
+        # real checkpoints, and mixing real/ cached pack timings between
+        # shard counts would trip the bit-identity check spuriously
+        spec = _scenario_spec(name, args, n_clients, n_edges, rounds,
+                              k, workers).replace(measure_pack=False)
+        res = _run_one(name, spec)
+        sweep["per_shards"][str(k)] = {
+            "workers": workers, "events_per_sec": res["events_per_sec"],
+            "wall_s": res["wall_s"], "windows": res["windows"],
+            "events": res["events"]}
+        if baseline_rounds is None:
+            baseline_rounds = res["rounds"]
+            sweep["rounds"] = res["rounds"]
+        else:
+            identical = res["rounds"] == baseline_rounds
+            sweep["per_shards"][str(k)]["rounds_bit_identical"] = identical
+            if not identical:
+                raise AssertionError(
+                    f"per-round metrics differ between shard counts "
+                    f"{args.shard_sweep[0]} and {k} — determinism bug")
+        print(f"  shards={k:2d} workers={workers}: "
+              f"{res['events_per_sec']:9.0f} ev/s  "
+              f"{res['wall_s']:6.1f}s wall  {res['windows']:5d} windows")
+    base = sweep["per_shards"][str(args.shard_sweep[0])]["events_per_sec"]
+    for k in args.shard_sweep[1:]:
+        speedup = sweep["per_shards"][str(k)]["events_per_sec"] / base
+        sweep["per_shards"][str(k)]["speedup_vs_first"] = round(speedup, 2)
+        print(f"  shards={k} speedup vs shards={args.shard_sweep[0]}: "
+              f"{speedup:.2f}x (cpu_count={os.cpu_count()})")
+    return sweep
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--clients", type=int, default=256)
+    ap.add_argument("--clients", "--devices", dest="clients", type=int,
+                    default=256, help="fleet size (alias: --devices)")
     ap.add_argument("--edges", type=int, default=8)
     ap.add_argument("--rounds", type=int, default=3)
     ap.add_argument("--max-replicas", type=int, default=4)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="edge-partitioned shard engines")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="parallel shard worker processes "
+                         "(default: = shards when shards > 1)")
+    ap.add_argument("--shard-sweep", type=int, nargs="*", default=None,
+                    help="run the first scenario once per shard count, "
+                         "verify bit-identity, emit the artifact")
+    ap.add_argument("--artifact", default="bench_fleet_shards.json",
+                    help="where --shard-sweep writes its JSON artifact")
     ap.add_argument("--scenarios", nargs="*", default=sorted(SCENARIOS),
                     choices=sorted(SCENARIOS))
     ap.add_argument("--quick", action="store_true",
@@ -34,38 +131,42 @@ def main(argv=None) -> None:
     n_edges = 4 if args.quick else args.edges
     rounds = 2 if args.quick else args.rounds
 
+    if args.shard_sweep:
+        name = args.scenarios[0]
+        print(f"# shard sweep: {name}, {n_clients} devices, {n_edges} "
+              f"edges, {rounds} rounds, shard counts {args.shard_sweep}")
+        sweep = _shard_sweep(args, name, n_clients, n_edges, rounds)
+        with open(args.artifact, "w") as f:
+            json.dump(sweep, f)
+        print(f"# artifact: {args.artifact}")
+        print(json.dumps(sweep["per_shards"]))
+        return
+
+    workers = args.workers if args.workers is not None else \
+        (args.shards if args.shards > 1 else None)
     print(f"# fleet simulation benchmark: {n_clients} clients, "
-          f"{n_edges} edges, {rounds} rounds")
+          f"{n_edges} edges, {rounds} rounds, {args.shards} shards"
+          + (f", {workers} workers" if workers else ""))
     report = {"config": {"clients": n_clients, "edges": n_edges,
                          "rounds": rounds,
-                         "max_replicas": args.max_replicas},
+                         "max_replicas": args.max_replicas,
+                         "shards": args.shards, "workers": workers},
               "scenarios": {}}
     t0 = time.time()
     for name in args.scenarios:
-        spec = SCENARIOS[name].replace(
-            num_clients=n_clients, num_edges=n_edges, rounds=rounds,
-            max_replicas=args.max_replicas, seed=args.seed,
-            # skip real checkpoint serialization at benchmark scale so
-            # events/sec measures the engine, not pickle-free packing
-            measure_pack=n_clients <= 128)
-        t1 = time.time()
-        rep = run_scenario(spec)
-        wall = time.time() - t1
-        report["scenarios"][name] = {
-            "wall_s": round(wall, 3),
-            "events_per_sec": round(rep["engine"]["events_per_sec"], 1),
-            "events": rep["engine"]["events_processed"],
-            "sim_time_s": round(rep["engine"]["sim_time_s"], 3),
-            "rounds": rep["rounds"],
-            "migration_overhead": rep["migrations"],
-        }
-        mean_rt = (sum(r["mean_round_time_s"] for r in rep["rounds"])
-                   / max(len(rep["rounds"]), 1))
-        print(f"  {name:>20s}: {wall:6.1f}s wall  "
-              f"{rep['engine']['events_per_sec']:9.0f} ev/s  "
+        spec = _scenario_spec(name, args, n_clients, n_edges, rounds,
+                              args.shards, workers)
+        res = _run_one(name, spec)
+        report["scenarios"][name] = res
+        mean_rt = (sum(r.get("mean_round_time_s", 0.0)
+                       for r in res["rounds"])
+                   / max(len(res["rounds"]), 1))
+        print(f"  {name:>20s}: {res['wall_s']:6.1f}s wall  "
+              f"{res['events_per_sec']:9.0f} ev/s  "
               f"round {mean_rt:6.2f}s sim  "
-              f"{rep['migrations']['count']:4d} migrations "
-              f"({rep['migrations']['total_overhead_s']:.2f}s overhead)")
+              f"{res['migration_overhead']['count']:4d} migrations "
+              f"({res['migration_overhead']['total_overhead_s']:.2f}s "
+              f"overhead)")
     report["total_wall_s"] = round(time.time() - t0, 1)
     print(json.dumps(report))
 

@@ -1,3 +1,8 @@
-from repro.kernels.fedavg_agg.fedavg_agg import fedavg_agg  # noqa: F401
-from repro.kernels.fedavg_agg.ops import fedavg_tree  # noqa: F401
-from repro.kernels.fedavg_agg.ref import fedavg_agg_ref  # noqa: F401
+from repro.kernels.fedavg_agg.fedavg_agg import (fedavg_agg,  # noqa: F401
+                                                 fedavg_agg_mix,
+                                                 has_compiled_pallas,
+                                                 resolve_interpret)
+from repro.kernels.fedavg_agg.ops import (fedavg_mix_tree,  # noqa: F401
+                                          fedavg_tree)
+from repro.kernels.fedavg_agg.ref import (fedavg_agg_mix_ref,  # noqa: F401
+                                          fedavg_agg_ref)

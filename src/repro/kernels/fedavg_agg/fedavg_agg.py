@@ -1,17 +1,32 @@
-"""Pallas TPU kernel: streaming weighted parameter aggregation (FedAvg).
+"""Pallas TPU kernels: streaming weighted parameter aggregation (FedAvg).
 
 The central server averages E client models (paper Step 5). For
-multi-GB parameter vectors the aggregation is bandwidth-bound; this
-kernel streams (E, BLOCK) tiles HBM->VMEM, reduces in fp32 on the VPU,
-and writes one BLOCK tile back — one pass over the data, no (E, N)
+multi-GB parameter vectors the aggregation is bandwidth-bound; these
+kernels stream (E, BLOCK) tiles HBM->VMEM, reduce in fp32 on the VPU,
+and write one BLOCK tile back — one pass over the data, no (E, N)
 fp32 temporary like the naive jnp path materializes.
 
-Grid: (N / BLOCK,). Weights are pre-normalized scalars in SMEM-like
-(1, E) VMEM; the block reduce is a (E, BLOCK) x (E,) contraction.
+Two ops share the layout:
+
+  ``fedavg_agg``      — weighted average: normalize(w) @ stacked
+                        (the sync round barrier, Step 5).
+  ``fedavg_agg_mix``  — asynchronous batched mix:
+                        (1 - sum(w)) * global + w @ stacked
+                        — folds a whole flush window of FedAsync
+                        updates into the global vector in one pass,
+                        replacing thousands of per-update mixes.
+
+Grid: (N / BLOCK,). Weights are scalars in SMEM-like (1, E) VMEM; the
+block reduce is a (E, BLOCK) x (E,) contraction.
+
+``interpret=None`` auto-detects: compiled Pallas on TPU/GPU, the
+interpreter elsewhere (CPU), so call sites never silently pay the
+python-loop interpreter on hardware that can compile the kernel.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,21 +35,45 @@ from jax.experimental import pallas as pl
 BLOCK = 4096
 
 
+@functools.lru_cache(maxsize=1)
+def has_compiled_pallas() -> bool:
+    """True when the default backend can compile Pallas kernels (TPU via
+    Mosaic, GPU via Triton); False means interpreter-only (CPU)."""
+    return jax.default_backend() in ("tpu", "gpu")
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None -> auto: interpret only when no compiled-Pallas platform."""
+    return not has_compiled_pallas() if interpret is None else interpret
+
+
 def _agg_kernel(w_ref, x_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)          # (E, BLOCK)
     w = w_ref[...].astype(jnp.float32)          # (1, E)
     o_ref[...] = (w @ x)[0].astype(o_ref.dtype)  # (BLOCK,)
 
 
+def _mix_kernel(w_ref, g_ref, x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (E, BLOCK)
+    w = w_ref[...].astype(jnp.float32)          # (1, E)
+    g = g_ref[...].astype(jnp.float32)          # (BLOCK,)
+    keep = 1.0 - jnp.sum(w)
+    o_ref[...] = (keep * g + (w @ x)[0]).astype(o_ref.dtype)
+
+
+def _pad_cols(x: jax.Array, pad: int) -> jax.Array:
+    return jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+
+
 def fedavg_agg(stacked: jax.Array, weights: jax.Array, *,
-               block: int = BLOCK, interpret: bool = True) -> jax.Array:
+               block: int = BLOCK,
+               interpret: Optional[bool] = None) -> jax.Array:
     """stacked: (E, N); weights: (E,) unnormalized -> (N,)."""
     E, N = stacked.shape
     w = weights.astype(jnp.float32)
     w = (w / jnp.maximum(w.sum(), 1e-12)).reshape(1, E)
     pad = (-N) % block
-    if pad:
-        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+    stacked = _pad_cols(stacked, pad)
     Np = N + pad
     out = pl.pallas_call(
         _agg_kernel,
@@ -45,6 +84,36 @@ def fedavg_agg(stacked: jax.Array, weights: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((Np,), stacked.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(w, stacked)
+    return out[:N]
+
+
+def fedavg_agg_mix(global_flat: jax.Array, stacked: jax.Array,
+                   weights: jax.Array, *, block: int = BLOCK,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """(1 - sum(w)) * global_flat + w @ stacked, one streaming pass.
+
+    global_flat: (N,); stacked: (E, N); weights: (E,) *effective* mixing
+    coefficients (NOT normalized — their sum is the total mass moved off
+    the old global this flush). Returns (N,) in global_flat's dtype.
+    """
+    E, N = stacked.shape
+    w = weights.astype(jnp.float32).reshape(1, E)
+    pad = (-N) % block
+    stacked = _pad_cols(stacked, pad)
+    g = jnp.pad(global_flat, (0, pad)) if pad else global_flat
+    Np = N + pad
+    out = pl.pallas_call(
+        _mix_kernel,
+        grid=(Np // block,),
+        in_specs=[
+            pl.BlockSpec((1, E), lambda i: (0, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((E, block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Np,), global_flat.dtype),
+        interpret=resolve_interpret(interpret),
+    )(w, g, stacked)
     return out[:N]

@@ -1,22 +1,91 @@
-"""Jit'd FedAvg aggregation over whole pytrees (kernel per flat block)."""
+"""Jit'd FedAvg aggregation over whole pytrees (kernel per flat block).
+
+Backend selection: ``use_pallas``/``interpret`` default to ``None`` =
+auto-detect. On a compiled-Pallas platform (TPU/GPU) the streaming
+kernel runs compiled; on CPU the pure-numpy/einsum reference path is
+used instead of silently paying the Pallas interpreter's python grid
+loop (which is orders of magnitude slower than einsum for the same
+math). Pass explicit flags to force a path (tests exercise both).
+"""
 from __future__ import annotations
 
+from typing import Any, List, Optional, Sequence
+
 import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.fedavg_agg.fedavg_agg import fedavg_agg
-from repro.kernels.fedavg_agg.ref import fedavg_agg_ref
+from repro.kernels.fedavg_agg.fedavg_agg import (fedavg_agg, fedavg_agg_mix,
+                                                 has_compiled_pallas)
+from repro.kernels.fedavg_agg.ref import fedavg_agg_mix_ref, fedavg_agg_ref
+
+Params = Any
+
+# below this many elements per leaf the kernel launch overhead dominates
+PALLAS_MIN_LEAF = 1024
 
 
-def fedavg_tree(stacked_tree, weights, *, use_pallas: bool = True,
-                interpret: bool = True):
+def _resolve_use_pallas(use_pallas: Optional[bool]) -> bool:
+    return has_compiled_pallas() if use_pallas is None else use_pallas
+
+
+def fedavg_tree(stacked_tree, weights, *, use_pallas: Optional[bool] = None,
+                interpret: Optional[bool] = None):
     """Every leaf has leading axis E; returns the weighted-average tree."""
+    pallas = _resolve_use_pallas(use_pallas)
+
     def agg(leaf):
         E = leaf.shape[0]
         flat = leaf.reshape(E, -1)
-        if use_pallas and flat.shape[1] >= 1024:
+        if pallas and flat.shape[1] >= PALLAS_MIN_LEAF:
             out = fedavg_agg(flat, weights, interpret=interpret)
         else:
             out = fedavg_agg_ref(flat, weights)
         return out.reshape(leaf.shape[1:])
     return jax.tree.map(agg, stacked_tree)
+
+
+def fedavg_mix_tree(global_tree: Params, update_trees: Sequence[Params],
+                    coeffs: Sequence[float], *,
+                    use_pallas: Optional[bool] = None,
+                    interpret: Optional[bool] = None) -> Params:
+    """Batched FedAsync mix: one kernel dispatch per leaf instead of one
+    tree-map per update.
+
+    Folds E updates into the global model as
+
+        new = (1 - sum(c)) * global + sum_i c_i * update_i
+
+    where ``coeffs`` are *effective* mixing coefficients (already
+    staleness-scaled and sequential-equivalent, see
+    ``AsyncAggregator.flush_batch``). Non-floating leaves pass through
+    unchanged. Leaves are stacked along a new leading axis per leaf; on
+    CPU a pure-numpy einsum runs (no device dispatch on the hot path),
+    on TPU/GPU the streaming ``fedavg_agg_mix`` Pallas kernel.
+    """
+    if not update_trees:
+        return global_tree
+    pallas = _resolve_use_pallas(use_pallas)
+    w = np.asarray(coeffs, np.float32)
+
+    leaves_g, treedef = jax.tree.flatten(global_tree)
+    leaves_u = [jax.tree.flatten(u)[0] for u in update_trees]
+
+    out_leaves: List[Any] = []
+    for i, g in enumerate(leaves_g):
+        g_np = np.asarray(g)
+        if not np.issubdtype(g_np.dtype, np.floating):
+            out_leaves.append(g)
+            continue
+        flat_g = g_np.reshape(-1)
+        stacked = np.stack([np.asarray(u[i], np.float32).reshape(-1)
+                            for u in leaves_u])
+        if pallas and flat_g.size >= PALLAS_MIN_LEAF:
+            mixed = np.asarray(fedavg_agg_mix(flat_g, stacked, w,
+                                              interpret=interpret))
+        else:
+            # numpy fast path: identical math to fedavg_agg_mix_ref
+            keep = np.float32(1.0) - w.sum(dtype=np.float32)
+            mixed = (keep * flat_g.astype(np.float32)
+                     + w @ stacked).astype(g_np.dtype)
+        out_leaves.append(mixed.reshape(g_np.shape))
+    return jax.tree.unflatten(treedef, out_leaves)

@@ -10,3 +10,14 @@ def fedavg_agg_ref(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
     w = w / jnp.maximum(w.sum(), 1e-12)
     return jnp.einsum("e,en->n", w,
                       stacked.astype(jnp.float32)).astype(stacked.dtype)
+
+
+def fedavg_agg_mix_ref(global_flat: jnp.ndarray, stacked: jnp.ndarray,
+                       weights: jnp.ndarray) -> jnp.ndarray:
+    """(1 - sum(w)) * global + w @ stacked; w are effective mixing
+    coefficients (unnormalized on purpose — see fedavg_agg_mix)."""
+    w = weights.astype(jnp.float32)
+    keep = 1.0 - jnp.sum(w)
+    mixed = keep * global_flat.astype(jnp.float32) + \
+        jnp.einsum("e,en->n", w, stacked.astype(jnp.float32))
+    return mixed.astype(global_flat.dtype)

@@ -2,20 +2,26 @@
 
 See README.md in this directory for the event model and fidelity notes.
 """
+import repro.core  # noqa: F401  — prime the core package first: entering
+# repro.runtime.cluster before repro.core trips their import cycle
 from repro.sim.async_agg import (AsyncAggregator, SyncAggregator,
                                  constant_staleness, hinge_staleness,
                                  poly_staleness)
 from repro.sim.edge import BACKHAUL_1GBPS, SimEdge, make_edges
-from repro.sim.engine import Event, EventKind, SimEngine
+from repro.sim.engine import (Event, EventKind, Mail, ProcessExecutor,
+                              SerialExecutor, ShardedEngine, SimEngine)
 from repro.sim.fleet import (ClientSpec, Cohort, Fleet, SimClient,
                              make_fleet_specs)
 from repro.sim.metrics import FleetMetrics, MigrationRecord
+from repro.sim.shard import EdgeShard, InflightBatch, ShardClient, ShardEdge
 from repro.sim.simulator import FleetResult, FleetSimulator
 
 __all__ = [
     "AsyncAggregator", "SyncAggregator", "constant_staleness",
     "hinge_staleness", "poly_staleness", "BACKHAUL_1GBPS", "SimEdge",
-    "make_edges", "Event", "EventKind", "SimEngine", "ClientSpec", "Cohort",
+    "make_edges", "Event", "EventKind", "Mail", "ProcessExecutor",
+    "SerialExecutor", "ShardedEngine", "SimEngine", "ClientSpec", "Cohort",
     "Fleet", "SimClient", "make_fleet_specs", "FleetMetrics",
-    "MigrationRecord", "FleetResult", "FleetSimulator",
+    "MigrationRecord", "EdgeShard", "InflightBatch", "ShardClient",
+    "ShardEdge", "FleetResult", "FleetSimulator",
 ]

@@ -18,17 +18,23 @@
                       of stalling a round barrier — the property the
                       thousand-device scenarios exercise.
 
-Both keep the global model as a numpy pytree so thousands of per-update
-mixes cost microseconds each (no device dispatch on the hot path).
+Both keep the global model as a numpy pytree, and both batch whole
+rounds/flush-windows of updates into ONE ``repro.kernels.fedavg_agg``
+dispatch (``fedavg_tree`` / ``fedavg_mix_tree``) instead of a tree-map
+per update: a thousand-update flush is one stacked (E, N) contraction
+per leaf. ``AsyncAggregator.submit`` keeps the sequential per-update
+path — ``flush_batch`` is algebraically equivalent to a sequence of
+submits (see the effective-coefficient folding there) and the sharded
+simulator uses it exclusively.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, List, Optional, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
-from repro.core import fedavg as fedavg_lib
+from repro.kernels.fedavg_agg import fedavg_mix_tree, fedavg_tree
 
 Params = Any
 StalenessFn = Callable[[int], float]
@@ -70,16 +76,38 @@ class SyncAggregator:
     def __init__(self, initial: Params):
         self.params = _np_tree(initial)
         self.version = 0
+        self.skipped_rounds = 0
         self._pending: List[Tuple[Params, float]] = []
 
     def submit(self, tree: Params, weight: float, staleness: int = 0):
         self._pending.append((tree, weight))
 
     def commit(self) -> Params:
-        """The round barrier: weighted average of this round's updates."""
-        trees = [t for t, _ in self._pending]
-        weights = [w for _, w in self._pending]
-        self.params = _np_tree(fedavg_lib.fedavg(trees, weights))
+        """The round barrier: weighted average of this round's updates.
+
+        An *empty* round (every client mid-migration or offline) used to
+        crash on ``fedavg``'s non-empty assertion; it now carries the
+        previous global forward, still bumps the version (the round
+        happened, it just moved nothing), and counts a skipped round.
+        """
+        if not self._pending:
+            self.skipped_rounds += 1
+            self.version += 1
+            return self.params
+        # one stacked-kernel dispatch per leaf instead of a list fold;
+        # non-float leaves (step counters etc.) pass through and float
+        # leaves keep their original dtype (bf16 stays bf16)
+        weights = np.asarray([w for _, w in self._pending], np.float32)
+
+        def avg(*leaves):
+            first = np.asarray(leaves[0])
+            if not np.issubdtype(first.dtype, np.floating):
+                return first
+            stacked = np.stack([np.asarray(l, np.float32) for l in leaves])
+            return np.asarray(fedavg_tree(stacked, weights)).astype(
+                first.dtype)
+
+        self.params = jax.tree.map(avg, *[t for t, _ in self._pending])
         self._pending = []
         self.version += 1
         return self.params
@@ -98,6 +126,18 @@ class AsyncAggregator:
         self.total_weight_applied = 0.0
         self._weight_ema: Optional[float] = None
 
+    def _alpha_for(self, weight: float, staleness: int) -> float:
+        """Sequential mixing weight for one update (advances the running
+        weight EMA — order matters, callers feed updates in arrival
+        order)."""
+        if self._weight_ema is None:
+            self._weight_ema = float(weight)
+        else:
+            self._weight_ema += 0.05 * (float(weight) - self._weight_ema)
+        w_rel = float(weight) / max(self._weight_ema, 1e-12)
+        a = self.alpha * self.staleness_fn(staleness) * w_rel
+        return min(max(a, 0.0), 1.0)
+
     def submit(self, tree: Params, weight: float = 1.0,
                staleness: int = 0) -> float:
         """Mix one update in; returns the effective mixing weight.
@@ -105,13 +145,7 @@ class AsyncAggregator:
         mean of weights seen — a uniform fleet reduces to plain FedAsync,
         a client with twice the data moves the global roughly twice as
         much."""
-        if self._weight_ema is None:
-            self._weight_ema = float(weight)
-        else:
-            self._weight_ema += 0.05 * (float(weight) - self._weight_ema)
-        w_rel = float(weight) / max(self._weight_ema, 1e-12)
-        a = self.alpha * self.staleness_fn(staleness) * w_rel
-        a = min(max(a, 0.0), 1.0)
+        a = self._alpha_for(weight, staleness)
 
         def mix(g, u):
             if np.issubdtype(g.dtype, np.floating):
@@ -122,6 +156,51 @@ class AsyncAggregator:
         self.version += 1
         self.total_weight_applied += a
         return a
+
+    def flush_batch(self, updates: Sequence[Tuple[Params, float, int]]
+                    ) -> List[float]:
+        """Fold a whole flush window of updates in ONE kernel dispatch.
+
+        ``updates`` is an *arrival-ordered* list of (tree, weight,
+        staleness). Sequential mixing
+
+            g <- (1-a_1) g + a_1 u_1;  g <- (1-a_2) g + a_2 u_2;  ...
+
+        telescopes to the closed form
+
+            g <- (1 - sum(b)) g + sum_i b_i u_i,
+            b_i = a_i * prod_{j>i} (1 - a_j)
+
+        so folding the effective coefficients b into one
+        ``fedavg_mix_tree`` call is algebraically identical to E
+        sequential submits (fp-accumulation order aside). Updates that
+        share a tree object (cohort replicas shared by many clients) are
+        grouped, so the stacked axis is the number of *distinct* trees,
+        not the number of clients — E stays small even for
+        thousand-update flushes. Returns the per-update sequential
+        alphas (for metrics)."""
+        if not updates:
+            return []
+        alphas = [self._alpha_for(w, s) for _, w, s in updates]
+        coeffs = [0.0] * len(alphas)
+        tail = 1.0
+        for i in range(len(alphas) - 1, -1, -1):
+            coeffs[i] = alphas[i] * tail
+            tail *= 1.0 - alphas[i]
+        index_of: dict = {}
+        trees: List[Params] = []
+        tree_w: List[float] = []
+        for (tree, _, _), b in zip(updates, coeffs):
+            k = id(tree)
+            if k not in index_of:
+                index_of[k] = len(trees)
+                trees.append(_np_tree(tree))
+                tree_w.append(0.0)
+            tree_w[index_of[k]] += b
+        self.params = fedavg_mix_tree(self.params, trees, tree_w)
+        self.version += len(updates)
+        self.total_weight_applied += sum(alphas)
+        return alphas
 
     def commit(self) -> Params:      # API symmetry with SyncAggregator
         return self.params

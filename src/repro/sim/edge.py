@@ -5,18 +5,25 @@ Each simulated edge server has
     clients' server-side stages,
   * ``slots`` concurrent client-compute slots — when more clients train
     than there are slots, server-stage time stretches by the congestion
-    factor ``active / slots`` (processor sharing, applied at the moment a
-    batch is scheduled),
+    factor ``active / slots`` (processor sharing; in-flight batches are
+    *re-priced* whenever the population changes — see
+    ``repro.sim.shard.InflightBatch``, which fixed the old
+    priced-once-at-schedule-time model),
   * a wireless access link (device <-> edge, smashed activations), and
   * a shared backhaul link (edge <-> edge / edge <-> central) that
     serializes checkpoint migrations and model-update uploads FIFO —
     this is the migration backpressure: a handoff storm queues on
     ``busy_until`` and every later transfer waits.
+
+``SimEdge`` is the *configuration* type users construct (``make_edges``)
+and hand to ``FleetSimulator``; the runtime state lives in the JAX-free
+``repro.sim.shard.ShardEdge`` so shard engines can run in worker
+processes without importing JAX.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Tuple
+from dataclasses import dataclass
+from typing import List, Sequence
 
 from repro.runtime.cluster import (EDGE_I5, EDGE_I7, HardwareProfile,
                                    WIFI_75MBPS)
@@ -27,69 +34,17 @@ from repro.runtime.transport import LinkModel
 BACKHAUL_1GBPS = LinkModel(bandwidth_bps=1e9, latency_s=0.002)
 
 
-@dataclass
+@dataclass(frozen=True)
 class SimEdge:
-    """Runtime state of one edge server inside the simulator."""
+    """Configuration of one edge server: compute profile, concurrent
+    client slots, access + backhaul links. Runtime counters (active
+    population, backhaul FIFO frontier, migration stats) live in
+    ``repro.sim.shard.ShardEdge``."""
     edge_id: str
     profile: HardwareProfile
     slots: int = 8
     wireless: LinkModel = WIFI_75MBPS
     backhaul: LinkModel = BACKHAUL_1GBPS
-
-    active: int = 0                 # clients currently mid-epoch here
-    attached: int = 0               # clients currently homed here
-    busy_until: float = 0.0         # backhaul FIFO frontier
-    # stats
-    peak_active: int = 0
-    backhaul_busy_s: float = 0.0
-    backhaul_wait_s: float = 0.0
-    migrations_out: int = 0
-    migrations_in: int = 0
-
-    # -- compute ---------------------------------------------------------
-
-    def congestion(self) -> float:
-        """Server-stage slowdown under load (>= 1)."""
-        return max(1.0, self.active / max(self.slots, 1))
-
-    def train_pause(self):
-        """Client stops computing here (epoch done or migrating away)."""
-        self.active = max(self.active - 1, 0)
-
-    def train_resume(self):
-        self.active += 1
-        self.peak_active = max(self.peak_active, self.active)
-
-    def detach(self):
-        self.attached = max(self.attached - 1, 0)
-
-    def attach(self):
-        self.attached += 1
-
-    # -- backhaul FIFO ---------------------------------------------------
-
-    def reserve_backhaul(self, now: float, nbytes: int
-                         ) -> Tuple[float, float, float]:
-        """Claim the shared backhaul for one transfer starting no earlier
-        than ``now``. Returns (start, done, queue_wait)."""
-        duration = self.backhaul.transfer_time(nbytes)
-        start = max(now, self.busy_until)
-        done = start + duration
-        self.busy_until = done
-        self.backhaul_busy_s += duration
-        self.backhaul_wait_s += start - now
-        return start, done, start - now
-
-    def stats(self) -> Dict[str, float]:
-        return {
-            "edge_id": self.edge_id,
-            "slots": self.slots,
-            "peak_active": self.peak_active,
-            "backhaul_busy_s": self.backhaul_busy_s,
-            "backhaul_wait_s": self.backhaul_wait_s,
-            "migrations_in": self.migrations_in,
-            "migrations_out": self.migrations_out,
-        }
 
 
 def make_edges(n: int, *, slots: int = 8,

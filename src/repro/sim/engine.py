@@ -1,35 +1,51 @@
-"""Heap-based discrete-event engine driving the fleet simulator's clock.
+"""Discrete-event engines driving the fleet simulator's clock.
 
-The engine is deliberately tiny and generic: a priority queue of
-``Event``s ordered by (simulated time, insertion sequence) and a handler
-table keyed by ``EventKind``. Everything FedFly-specific (cohort
-stepping, edge capacity, aggregation) lives in the handlers registered
-by ``repro.sim.simulator``.
+``SimEngine`` is deliberately tiny and generic: a priority queue of
+``Event``s ordered by (simulated time, tie-break key, insertion
+sequence) and a handler table keyed by ``EventKind``. Everything
+FedFly-specific (cohort stepping, edge capacity, aggregation) lives in
+the handlers registered by ``repro.sim.shard`` / ``repro.sim.simulator``.
 
-Determinism: ties in simulated time are broken by insertion order, and
+``ShardedEngine`` coordinates K ``SimEngine``-backed shards under a
+conservative lookahead window: every iteration it advances global time
+to the earliest pending event T, lets every shard process its own
+events in [T, T + lookahead), then exchanges cross-shard ``Mail``
+(transfer-done messages) at the window barrier. Correctness rests on
+the FedFly structure — shards only interact through backhaul transfers,
+whose latency lower-bounds the lookahead — so no event a shard
+processes inside a window can be invalidated by a message it has not
+yet received. Shards run serially in-process (``SerialExecutor``) or in
+parallel worker processes (``ProcessExecutor``).
+
+Determinism: ties in simulated time are broken by an explicit stable
+key (the simulator passes the client id) and then insertion order, and
 no handler may consult wall clocks or unseeded RNGs, so a simulation is
-a pure function of its inputs. Wall time is only *measured* (for the
-events/sec throughput metric), never used to order events.
+a pure function of its inputs *independently of the shard count*. Wall
+time is only *measured* (for the events/sec throughput metric), never
+used to order events.
 """
 from __future__ import annotations
 
 import heapq
+import multiprocessing as mp
 import time
 from collections import Counter
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 
 class EventKind(Enum):
     """The FedFly protocol events (batch-done, move, checkpoint-packed,
-    transfer-done, round-barrier) plus churn rejoin."""
+    transfer-done, round-barrier) plus churn rejoin and the sharded
+    round restart."""
     BATCH_DONE = "batch_done"              # one split-training batch finished
     MOVE = "move"                          # device disconnects from src edge
     CHECKPOINT_PACKED = "checkpoint_packed"  # src edge packed the checkpoint
     TRANSFER_DONE = "transfer_done"        # bytes arrived (migration/update)
     ROUND_BARRIER = "round_barrier"        # sync aggregation point
     REJOIN = "rejoin"                      # churned device back in coverage
+    ROUND_START = "round_start"            # sync: coordinator opens round r
 
 
 @dataclass(frozen=True)
@@ -38,6 +54,7 @@ class Event:
     seq: int
     kind: EventKind
     payload: Dict[str, Any] = field(default_factory=dict)
+    key: str = ""                          # stable tie-break (client id)
 
 
 Handler = Callable[[Event], None]
@@ -56,8 +73,9 @@ class SimEngine:
 
     def __init__(self):
         self.now = 0.0
-        self._heap: List[Tuple[float, int, Event]] = []
+        self._heap: List[Tuple[float, str, int, Event]] = []
         self._seq = 0
+        self._cancelled: set = set()
         self._handlers: Dict[EventKind, Handler] = {}
         self.events_processed = 0
         self.counts: Counter = Counter()
@@ -70,35 +88,56 @@ class SimEngine:
 
     # -- scheduling ------------------------------------------------------
 
-    def schedule(self, delay: float, kind: EventKind, **payload) -> Event:
+    def schedule(self, delay: float, kind: EventKind, key: str = "",
+                 **payload) -> Event:
         """Schedule ``kind`` at ``now + delay`` (delay must be >= 0)."""
         if delay < 0:
             raise ValueError(f"negative delay {delay} for {kind}")
-        return self.schedule_at(self.now + delay, kind, **payload)
+        return self.schedule_at(self.now + delay, kind, key=key, **payload)
 
-    def schedule_at(self, t: float, kind: EventKind, **payload) -> Event:
+    def schedule_at(self, t: float, kind: EventKind, key: str = "",
+                    **payload) -> Event:
         if t < self.now:
             raise ValueError(f"cannot schedule {kind} in the past "
                              f"({t} < {self.now})")
-        ev = Event(time=t, seq=self._seq, kind=kind, payload=payload)
+        ev = Event(time=t, seq=self._seq, kind=kind, payload=payload, key=key)
         self._seq += 1
-        heapq.heappush(self._heap, (ev.time, ev.seq, ev))
+        heapq.heappush(self._heap, (ev.time, ev.key, ev.seq, ev))
         return ev
+
+    def cancel(self, ev: Event) -> None:
+        """Invalidate a scheduled event (congestion re-pricing replaces
+        in-flight BATCH_DONEs). Cancelled events never run, never touch
+        the clock, and never count."""
+        self._cancelled.add(ev.seq)
+
+    def _drop_cancelled_head(self) -> None:
+        while self._heap and self._heap[0][2] in self._cancelled:
+            self._cancelled.discard(heapq.heappop(self._heap)[2])
 
     # -- the loop --------------------------------------------------------
 
     def run(self, until: Optional[float] = None,
-            max_events: Optional[int] = None) -> "SimEngine":
+            max_events: Optional[int] = None,
+            before: Optional[float] = None) -> "SimEngine":
         """Pop-and-dispatch until the queue drains (or a bound is hit).
-        Handlers may schedule further events."""
+        Handlers may schedule further events. ``until`` is inclusive,
+        ``before`` strict (events at exactly ``before`` stay queued —
+        the sharded window boundary)."""
         wall0 = time.perf_counter()
         n = 0
-        while self._heap:
+        while True:
+            self._drop_cancelled_head()
+            if not self._heap:
+                break
             if max_events is not None and n >= max_events:
                 break
-            if until is not None and self._heap[0][0] > until:
+            t_next = self._heap[0][0]
+            if until is not None and t_next > until:
                 break
-            _, _, ev = heapq.heappop(self._heap)
+            if before is not None and t_next >= before:
+                break
+            _, _, _, ev = heapq.heappop(self._heap)
             self.now = ev.time
             handler = self._handlers.get(ev.kind)
             if handler is None:
@@ -112,7 +151,13 @@ class SimEngine:
 
     @property
     def pending(self) -> int:
-        return len(self._heap)
+        return len(self._heap) - len(self._cancelled)
+
+    def peek_time(self) -> Optional[float]:
+        """Simulated time of the next live queued event (None if
+        drained)."""
+        self._drop_cancelled_head()
+        return self._heap[0][0] if self._heap else None
 
     @property
     def events_per_sec(self) -> float:
@@ -127,3 +172,524 @@ class SimEngine:
             "by_kind": {k.value: v for k, v in sorted(
                 self.counts.items(), key=lambda kv: kv[0].value)},
         }
+
+
+# ---------------------------------------------------------------------------
+# sharded execution: conservative lookahead windows + mailboxes
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Mail:
+    """A cross-shard message delivered at a window barrier: an event to
+    inject into ``dst_shard``'s queue at simulated time ``time``."""
+    dst_shard: int
+    time: float
+    kind: EventKind
+    key: str
+    payload: Dict[str, Any]
+
+
+@dataclass
+class WindowResult:
+    """What one shard hands back at a window barrier."""
+    next_time: Optional[float]            # its earliest remaining event
+    mail: List[Mail]                      # outgoing cross-shard messages
+    records: Dict[str, list]              # simulator records (contribs, ...)
+    processed: int                        # events handled this window
+
+
+def _check_mail_within_lookahead(m: Mail, bound: float) -> None:
+    """A message delivered inside the window that created it would break
+    conservative synchronization — the lookahead must lower-bound every
+    cross-shard transfer time."""
+    if m.time < bound - 1e-9:
+        raise RuntimeError(
+            f"conservative window violated: mail for shard {m.dst_shard} "
+            f"at t={m.time} inside window ending {bound}; lookahead too "
+            f"large")
+
+
+def _merge_shard_stats(per_shard: Dict[int, Dict[str, Any]], *,
+                       wall_s: float, windows: int,
+                       num_shards: int) -> Dict[str, Any]:
+    """Fold per-shard final stats ({'engine': ..., 'edges': [...]}) into
+    one engine_stats dict (shared by both sharded executors)."""
+    counts: Counter = Counter()
+    edges: List[Dict[str, Any]] = []
+    sim_time = 0.0
+    total = 0
+    for sid in sorted(per_shard):
+        eng = per_shard[sid]["engine"]
+        counts.update(eng["by_kind"])
+        sim_time = max(sim_time, eng["sim_time_s"])
+        total += eng["events_processed"]
+        edges.extend(per_shard[sid].get("edges", []))
+    return {
+        "events_processed": total,
+        "events_per_sec": total / wall_s if wall_s > 0 else 0.0,
+        "sim_time_s": sim_time,
+        "wall_s": wall_s,
+        "windows": windows,
+        "num_shards": num_shards,
+        "by_kind": dict(sorted(counts.items())),
+        "edges": edges,
+    }
+
+
+class SerialExecutor:
+    """Runs every shard's window in the coordinator process."""
+
+    def __init__(self, shards: Sequence[Any]):
+        self.shards = {s.shard_id: s for s in shards}
+
+    def run_windows(self, work: Dict[int, Tuple[Optional[float], List[Mail]]]
+                    ) -> Dict[int, WindowResult]:
+        return {sid: self.shards[sid].run_window(bound, mail)
+                for sid, (bound, mail) in work.items()}
+
+    def peek(self) -> Dict[int, Optional[float]]:
+        return {sid: s.peek() for sid, s in self.shards.items()}
+
+    def final_stats(self) -> Dict[int, Dict[str, Any]]:
+        return {sid: s.final_stats() for sid, s in self.shards.items()}
+
+    def close(self) -> None:
+        pass
+
+
+class ProcessExecutor:
+    """One persistent worker process per shard (or per group of shards
+    when ``workers`` < shard count), talking over pipes. Windows for
+    different workers run in parallel; the coordinator only does the
+    barrier bookkeeping.
+
+    Shards must be picklable and free of JAX state — the fleet's
+    numerics stay in the coordinator, workers simulate timing only."""
+
+    def __init__(self, shards: Sequence[Any], workers: int):
+        ctx = mp.get_context("spawn")
+        workers = max(1, min(workers, len(shards)))
+        self._conn_of_shard: Dict[int, Any] = {}
+        self._procs = []
+        self._conns = []
+        groups: List[List[Any]] = [[] for _ in range(workers)]
+        for i, s in enumerate(sorted(shards, key=lambda s: s.shard_id)):
+            groups[i % workers].append(s)
+        for group in groups:
+            if not group:
+                continue
+            parent, child = ctx.Pipe()
+            proc = ctx.Process(target=_group_worker_main, args=(child,),
+                               daemon=True)
+            proc.start()
+            parent.send(group)
+            for s in group:
+                self._conn_of_shard[s.shard_id] = parent
+            self._procs.append(proc)
+            self._conns.append(parent)
+
+    @staticmethod
+    def _recv(conn) -> Any:
+        """Receive one worker reply; surface worker-side failures with
+        their traceback instead of a bare EOFError."""
+        try:
+            resp = conn.recv()
+        except EOFError:
+            raise RuntimeError("shard worker process died") from None
+        if resp[0] == "err":
+            raise RuntimeError(f"shard worker failed:\n{resp[1]}")
+        return resp[1]
+
+    def run_windows(self, work: Dict[int, Tuple[Optional[float], List[Mail]]]
+                    ) -> Dict[int, WindowResult]:
+        by_conn: Dict[Any, Dict[int, Tuple[Optional[float], List[Mail]]]] = {}
+        for sid, job in work.items():
+            by_conn.setdefault(self._conn_of_shard[sid], {})[sid] = job
+        for conn, jobs in by_conn.items():          # fan out ...
+            conn.send(("window", jobs))
+        out: Dict[int, WindowResult] = {}
+        for conn in by_conn:                        # ... then gather
+            out.update(self._recv(conn))
+        return out
+
+    def _broadcast(self, cmd: str) -> Dict[int, Any]:
+        for conn in self._conns:
+            conn.send((cmd,))
+        out: Dict[int, Any] = {}
+        for conn in self._conns:
+            out.update(self._recv(conn))
+        return out
+
+    def peek(self) -> Dict[int, Optional[float]]:
+        return self._broadcast("peek")
+
+    def final_stats(self) -> Dict[int, Dict[str, Any]]:
+        return self._broadcast("stats")
+
+    def close(self) -> None:
+        for conn in self._conns:
+            try:
+                conn.send(("close",))
+                conn.close()
+            except (BrokenPipeError, OSError):
+                pass
+        for proc in self._procs:
+            proc.join(timeout=5)
+            if proc.is_alive():
+                proc.terminate()
+
+
+def _group_worker_main(conn) -> None:
+    """Worker loop owning several shards (workers < shards). Replies are
+    ("ok", payload) or ("err", traceback) so handler failures reach the
+    coordinator with their traceback instead of a bare EOFError."""
+    import traceback
+    shards = {s.shard_id: s for s in conn.recv()}
+    while True:
+        msg = conn.recv()
+        cmd = msg[0]
+        try:
+            if cmd == "window":
+                jobs = msg[1]
+                out: Any = {sid: shards[sid].run_window(bound, mail)
+                            for sid, (bound, mail) in jobs.items()}
+            elif cmd == "peek":
+                out = {sid: s.peek() for sid, s in shards.items()}
+            elif cmd == "stats":
+                out = {sid: s.final_stats() for sid, s in shards.items()}
+            elif cmd == "close":
+                conn.close()
+                return
+            conn.send(("ok", out))
+        except BaseException:
+            conn.send(("err", traceback.format_exc()))
+            conn.close()
+            return
+
+
+# a window callback may inject new mail (e.g. the sync round restart)
+WindowCallback = Callable[[float, Dict[int, Dict[str, list]]], List[Mail]]
+
+
+# ---------------------------------------------------------------------------
+# peer-driven sharded execution (async mode): the coordinator is NOT in
+# the per-window loop. Workers synchronize among themselves — a shared
+# barrier + a shared next-event-time array replace the parent roundtrip,
+# and cross-shard mail flows over direct peer pipes — while the parent
+# trails behind, replaying record shipments below the fleet-wide safe
+# frontier. One window costs two semaphore barriers instead of two pipe
+# roundtrips through a busy parent.
+# ---------------------------------------------------------------------------
+
+_PEER_BARRIER_TIMEOUT_S = 600.0
+_SHIP_EVERY_WINDOWS = 8
+
+
+def _peer_worker_main(conn, peers, lookahead) -> None:
+    """One shard per worker; the all-to-all exchange IS the barrier —
+    no shared-memory primitives (sandboxes without named semaphores run
+    this fine). Per window every worker:
+
+      1. sends (advertised_time, mail) to every peer, where
+         advertised_time = min(own next event, own *undelivered*
+         outgoing mail) — so the global minimum over all advertised
+         times covers every pending message in the system;
+      2. receives the same from every peer; everyone now computes the
+         SAME T = min(all advertised); exit together when T = +inf;
+      3. delivers incoming mail, runs its own events in [T, T+lookahead).
+
+    Records accumulate locally and ship to the parent every few windows
+    tagged with the covered bound, so the parent replays everything
+    strictly below min(worker frontiers) while the mesh runs ahead."""
+    import traceback
+    try:
+        _peer_worker_loop(conn, peers, lookahead)
+    except BaseException:
+        try:
+            conn.send(("err", traceback.format_exc()))
+        except (BrokenPipeError, OSError):
+            pass
+        conn.close()
+
+
+def _peer_worker_loop(conn, peers, lookahead) -> None:
+    shard = conn.recv()
+    inf = float("inf")
+    windows = 0
+    acc: Dict[str, list] = {"contribs": [], "epoch_starts": [],
+                            "migrations": []}
+
+    def ship(bound: float) -> None:
+        if any(acc.values()):
+            conn.send(("records", bound, dict(acc)))
+            for k in acc:
+                acc[k] = []
+        else:
+            conn.send(("frontier", bound))
+
+    outbox: Dict[int, List[Mail]] = {p: [] for p in peers}
+    t = shard.peek()
+    my_t = inf if t is None else t
+    while True:
+        for p, c in peers.items():            # send to all ...
+            c.send((my_t, outbox[p]))
+        outbox = {p: [] for p in peers}
+        times = [my_t]
+        incoming: List[Mail] = []
+        for c in peers.values():              # ... then drain all
+            pt, mail = c.recv()
+            times.append(pt)
+            incoming.extend(mail)
+        T = min(times)
+        if T == inf:
+            break
+        if incoming:
+            shard.deliver(incoming)
+        bound = T + lookahead
+        res = shard.run_window(bound, [])
+        for k, v in res.records.items():
+            acc[k].extend(v)
+        mail_min = inf
+        for m in res.mail:
+            _check_mail_within_lookahead(m, bound)
+            outbox[m.dst_shard].append(m)
+            mail_min = min(mail_min, m.time)
+        t = shard.peek()
+        my_t = min(inf if t is None else t, mail_min)
+        windows += 1
+        if windows % _SHIP_EVERY_WINDOWS == 0:
+            ship(bound)
+    ship(inf)
+    final = shard.final_stats()
+    final["engine"]["windows"] = windows
+    conn.send(("done", final))
+    conn.close()
+
+
+class PeerShardedEngine:
+    """Async-mode peer executor: one process per shard, self-synchronized
+    windows, parent replays records below the global safe frontier.
+
+    ``on_chunk(frontier, {shard_id: records})`` is called every time the
+    minimum worker frontier advances; all record items strictly below
+    the frontier are guaranteed present (the simulator buffers and
+    filters). Bit-identical to the serial path: same arithmetic, same
+    mail times, same replay order."""
+
+    def __init__(self, shards: Sequence[Any], *, lookahead: float):
+        if lookahead is None or lookahead <= 0:
+            raise ValueError("peer sharded execution needs a positive "
+                             "lookahead")
+        ctx = mp.get_context("spawn")
+        self.shard_ids = sorted(s.shard_id for s in shards)
+        # peer mesh: one duplex pipe per pair, passed at Process creation
+        # (fds must be inherited, not sent later)
+        mesh: Dict[Tuple[int, int], Any] = {}
+        for i in self.shard_ids:
+            for j in self.shard_ids:
+                if i < j:
+                    mesh[(i, j)] = ctx.Pipe()
+        self._conns = {}
+        self._procs = []
+        for s in sorted(shards, key=lambda s: s.shard_id):
+            sid = s.shard_id
+            parent, child = ctx.Pipe()
+            peers = {}
+            for (i, j), (a, b) in mesh.items():
+                if i == sid:
+                    peers[j] = a
+                elif j == sid:
+                    peers[i] = b
+            proc = ctx.Process(
+                target=_peer_worker_main,
+                args=(child, peers, lookahead), daemon=True)
+            proc.start()
+            parent.send(s)
+            self._conns[sid] = parent
+            self._procs.append(proc)
+        for (a, b) in mesh.values():          # parent keeps no mesh ends
+            a.close()
+            b.close()
+        self._final: Dict[int, Dict[str, Any]] = {}
+        self.wall_s = 0.0
+        self.windows = 0
+
+    def run(self, on_chunk: Callable[[Optional[float],
+                                      Dict[int, Dict[str, list]]], None]
+            ) -> "PeerShardedEngine":
+        """Drain record shipments; call ``on_chunk(None, {sid: records})``
+        for each arriving batch and ``on_chunk(frontier, {})`` whenever
+        the global safe frontier advances.
+
+        Draining runs in its own thread so a slow replay can never fill
+        the worker pipes — pipe backpressure on one worker would stall
+        the whole mesh (every window is an all-to-all exchange)."""
+        import queue as queue_mod
+        import threading
+        from multiprocessing.connection import wait as conn_wait
+        wall0 = time.perf_counter()
+        sid_of = {conn: sid for sid, conn in self._conns.items()}
+        q: "queue_mod.Queue" = queue_mod.Queue()
+        drain_errs: List[BaseException] = []
+
+        def drain():
+            live = dict(self._conns)
+            try:
+                while live:
+                    ready = conn_wait(list(live.values()),
+                                      timeout=_PEER_BARRIER_TIMEOUT_S)
+                    if not ready:
+                        raise RuntimeError(
+                            f"peer shard mesh made no progress for "
+                            f"{_PEER_BARRIER_TIMEOUT_S}s (worker stalled?)")
+                    for conn in ready:
+                        sid = sid_of[conn]
+                        try:
+                            msg = conn.recv()
+                        except EOFError:
+                            raise RuntimeError(
+                                f"shard worker {sid} died") from None
+                        if msg[0] == "err":
+                            raise RuntimeError(
+                                f"shard worker {sid} failed:\n{msg[1]}")
+                        if msg[0] == "done":
+                            del live[sid]
+                        q.put((msg[0], sid, msg))
+            except BaseException as e:     # re-raised by the main loop
+                drain_errs.append(e)
+            finally:
+                q.put(None)
+
+        th = threading.Thread(target=drain, daemon=True)
+        th.start()
+        frontiers = {sid: 0.0 for sid in self.shard_ids}
+        replay_frontier = 0.0
+        while True:
+            item = q.get()
+            if item is None:
+                break
+            kind, sid, msg = item
+            if kind == "records":
+                frontiers[sid] = msg[1]
+                on_chunk(None, {sid: msg[2]})
+            elif kind == "frontier":
+                frontiers[sid] = msg[1]
+            elif kind == "done":
+                self._final[sid] = msg[1]
+                frontiers[sid] = float("inf")
+            new_frontier = min(frontiers.values())
+            if new_frontier > replay_frontier:
+                replay_frontier = new_frontier
+                on_chunk(replay_frontier, {})
+        th.join()
+        if drain_errs:
+            raise drain_errs[0]
+        on_chunk(float("inf"), {})
+        self.windows = max((f["engine"].get("windows", 0)
+                            for f in self._final.values()), default=0)
+        self.wall_s = time.perf_counter() - wall0
+        return self
+
+    def stats(self) -> Dict[str, Any]:
+        return _merge_shard_stats(self._final, wall_s=self.wall_s,
+                                  windows=self.windows,
+                                  num_shards=len(self.shard_ids))
+
+    def close(self) -> None:
+        for conn in self._conns.values():
+            try:
+                conn.close()
+            except (BrokenPipeError, OSError):
+                pass
+        for proc in self._procs:
+            proc.join(timeout=5)
+            if proc.is_alive():
+                proc.terminate()
+
+
+class ShardedEngine:
+    """Conservative-window coordinator over K shard engines.
+
+    Each iteration:
+      1. T = earliest pending simulated time across shards and undelivered
+         mail; the window is [T, T + lookahead).
+      2. Every shard with events (or deliverable mail) runs its window —
+         in parallel under ``ProcessExecutor``.
+      3. Outgoing mail is routed; the ``on_window`` callback sees every
+         shard's records (the coordinator applies aggregation numerics
+         there) and may inject control mail (round restarts).
+
+    ``lookahead=None`` (single shard) runs unbounded windows — the
+    degenerate case is exactly the old single-heap engine, which is what
+    makes per-round metrics bit-identical across shard counts.
+    """
+
+    def __init__(self, shards: Sequence[Any], *,
+                 lookahead: Optional[float] = None,
+                 executor: Optional[Any] = None):
+        if len(shards) > 1 and (lookahead is None or lookahead <= 0):
+            raise ValueError("multi-shard runs need a positive lookahead "
+                             "(the min cross-edge backhaul transfer time)")
+        self.shard_ids = [s.shard_id for s in shards]
+        self.lookahead = lookahead
+        self.executor = executor or SerialExecutor(shards)
+        self._pending_mail: Dict[int, List[Mail]] = {sid: []
+                                                     for sid in self.shard_ids}
+        self._next_times: Dict[int, Optional[float]] = {sid: 0.0
+                                                        for sid in
+                                                        self.shard_ids}
+        self.windows = 0
+        self.events_processed = 0
+        self.wall_s = 0.0
+
+    def post(self, mail: Mail) -> None:
+        """Inject a control message (e.g. the sync round-0 start) before
+        or between windows."""
+        self._pending_mail[mail.dst_shard].append(mail)
+
+    def _earliest(self) -> Optional[float]:
+        times = [t for t in self._next_times.values() if t is not None]
+        times += [m.time for box in self._pending_mail.values() for m in box]
+        return min(times) if times else None
+
+    def run(self, on_window: WindowCallback) -> "ShardedEngine":
+        wall0 = time.perf_counter()
+        self._next_times.update(self.executor.peek())
+        while True:
+            T = self._earliest()
+            if T is None:
+                break
+            bound = (T + self.lookahead) if self.lookahead is not None \
+                else float("inf")
+            work: Dict[int, Tuple[Optional[float], List[Mail]]] = {}
+            for sid in self.shard_ids:
+                mail = [m for m in self._pending_mail[sid] if m.time < bound]
+                if mail:
+                    self._pending_mail[sid] = [
+                        m for m in self._pending_mail[sid]
+                        if m.time >= bound]
+                nt = self._next_times[sid]
+                if mail or (nt is not None and nt < bound):
+                    work[sid] = (bound, mail)
+            results = self.executor.run_windows(work)
+            all_records: Dict[int, Dict[str, list]] = {}
+            for sid, res in results.items():
+                self._next_times[sid] = res.next_time
+                self.events_processed += res.processed
+                all_records[sid] = res.records
+                for m in res.mail:
+                    _check_mail_within_lookahead(m, bound)
+                    self._pending_mail[m.dst_shard].append(m)
+            self.windows += 1
+            for m in on_window(bound, all_records):
+                self._pending_mail[m.dst_shard].append(m)
+        self.wall_s = time.perf_counter() - wall0
+        return self
+
+    def stats(self) -> Dict[str, Any]:
+        return _merge_shard_stats(self.executor.final_stats(),
+                                  wall_s=self.wall_s, windows=self.windows,
+                                  num_shards=len(self.shard_ids))
+
+    def close(self) -> None:
+        self.executor.close()

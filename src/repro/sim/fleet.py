@@ -177,8 +177,11 @@ class Cohort:
              loss) = self._step(self._dev, self._srv, self._dev_opt,
                                 self._srv_opt, batch, jnp.float32(lr))
         merged = split_lib.merge_params(self.model, self._dev, self._srv)
+        # one device->host copy per stacked leaf, then numpy views per
+        # replica (a per-replica tree.map costs R× the dispatches)
+        merged_np = jax.tree.map(np.asarray, merged)
         self.snapshots[epoch] = [
-            jax.tree.map(lambda x: np.asarray(x[r]), merged)
+            jax.tree.map(lambda x: x[r], merged_np)
             for r in range(self.replicas)]
         self.losses[epoch] = np.asarray(loss)
 
@@ -286,6 +289,26 @@ class Fleet:
         cohort = self.cohorts[client.spec.cohort_key]
         cohort.ensure_stages(self.global_params)
         return cohort.costs(self.cost_model)
+
+    def cohort_tables(self) -> Dict[Tuple[int, int], Dict[str, float]]:
+        """Static per-cohort timing table (FLOPs + payload bytes) — the
+        only numerics the JAX-free shard engines ever see. One XLA cost
+        analysis per cohort, shipped to shards as plain floats."""
+        out: Dict[Tuple[int, int], Dict[str, float]] = {}
+        for key, cohort in self.cohorts.items():
+            cohort.ensure_stages(self.global_params)
+            dflops, sflops, sbytes = cohort.costs(self.cost_model)
+            out[key] = {"dflops": float(dflops), "sflops": float(sflops),
+                        "sbytes": float(sbytes),
+                        **{k: float(v) for k, v in cohort.nbytes().items()}}
+        return out
+
+    def cohort_sizes(self) -> Dict[Tuple[int, int], int]:
+        """Clients per cohort (for snapshot-pruning bookkeeping)."""
+        sizes: Dict[Tuple[int, int], int] = {}
+        for c in self.clients.values():
+            sizes[c.spec.cohort_key] = sizes.get(c.spec.cohort_key, 0) + 1
+        return sizes
 
     def payload_nbytes(self, client: SimClient) -> Dict[str, int]:
         cohort = self.cohorts[client.spec.cohort_key]

@@ -59,11 +59,14 @@ class FleetMetrics:
         self.contributions: List[Contribution] = []
         self.migrations: List[MigrationRecord] = []
         self.barrier_times: Dict[int, float] = {}   # sync round -> commit time
+        self.skipped_rounds: Dict[int, float] = {}  # round -> barrier time
 
     # -- recording -------------------------------------------------------
 
-    def record_contribution(self, **kw):
-        self.contributions.append(Contribution(**kw))
+    def record_contribution(self, **kw) -> Contribution:
+        c = Contribution(**kw)
+        self.contributions.append(c)
+        return c
 
     def record_migration(self, rec: MigrationRecord):
         self.migrations.append(rec)
@@ -71,20 +74,37 @@ class FleetMetrics:
     def record_barrier(self, round_idx: int, sim_time: float):
         self.barrier_times[round_idx] = sim_time
 
+    def record_skipped_round(self, round_idx: int, sim_time: float):
+        """A sync round barrier that committed nothing (every client was
+        mid-migration or offline): the global was carried forward."""
+        self.skipped_rounds[round_idx] = sim_time
+        self.barrier_times[round_idx] = sim_time
+
     # -- aggregation -----------------------------------------------------
 
     def build_rounds(self) -> List[Dict[str, Any]]:
         """One JSON record per round (sync: barrier rounds; async: epoch
-        buckets)."""
+        buckets). Records are folded in (arrival, client) order so the
+        floating-point accumulations — and therefore the per-round JSON —
+        are bit-identical for any shard count."""
         by_round: Dict[int, List[Contribution]] = {}
-        for c in self.contributions:
+        for c in sorted(self.contributions,
+                        key=lambda c: (c.round_idx, c.arrival_s, c.client_id)):
             by_round.setdefault(c.round_idx, []).append(c)
         migs_by_round: Dict[int, List[MigrationRecord]] = {}
-        for m in self.migrations:
+        for m in sorted(self.migrations,
+                        key=lambda m: (m.round_idx, m.start_s, m.client_id)):
             migs_by_round.setdefault(m.round_idx, []).append(m)
 
         records = []
-        for r in sorted(by_round):
+        for r in sorted(set(by_round) | set(self.skipped_rounds)):
+            if r in self.skipped_rounds and r not in by_round:
+                records.append({
+                    "round_idx": r, "n_updates": 0, "skipped_round": True,
+                    "barrier_s": self.skipped_rounds[r],
+                    "n_migrations": len(migs_by_round.get(r, [])),
+                })
+                continue
             cs = by_round[r]
             migs = migs_by_round.get(r, [])
             durations = np.array([c.duration_s for c in cs])
@@ -114,13 +134,15 @@ class FleetMetrics:
             return {"count": 0, "total_overhead_s": 0.0,
                     "mean_overhead_s": 0.0, "max_overhead_s": 0.0,
                     "total_queue_s": 0.0, "total_bytes": 0}
-        ov = np.array([m.overhead_s for m in self.migrations])
+        migs = sorted(self.migrations,
+                      key=lambda m: (m.start_s, m.client_id))
+        ov = np.array([m.overhead_s for m in migs])
         return {
-            "count": len(self.migrations),
+            "count": len(migs),
             "total_overhead_s": float(ov.sum()),
             "mean_overhead_s": float(ov.mean()),
             "p95_overhead_s": float(np.percentile(ov, 95)),
             "max_overhead_s": float(ov.max()),
-            "total_queue_s": float(sum(m.queue_s for m in self.migrations)),
-            "total_bytes": int(sum(m.nbytes for m in self.migrations)),
+            "total_queue_s": float(sum(m.queue_s for m in migs)),
+            "total_bytes": int(sum(m.nbytes for m in migs)),
         }

@@ -55,6 +55,10 @@ class ScenarioSpec:
     churn_offline_s: float = 30.0
     link_spread: float = 10.0
     measure_pack: bool = True
+    # sharded execution (engine README: shard/mailbox model)
+    shards: int = 1
+    workers: Optional[int] = None     # process-parallel shard engines
+    flush_interval_s: Optional[float] = None  # async batched-flush grid
 
     def replace(self, **kw) -> "ScenarioSpec":
         return dataclasses.replace(self, **kw)
@@ -130,7 +134,9 @@ def build_scenario(spec: ScenarioSpec) -> FleetSimulator:
                   max_replicas=spec.max_replicas, seed=spec.seed)
     return FleetSimulator(fleet, edges, trace=_build_trace(spec),
                           mode=spec.mode, dropouts=_build_dropouts(spec),
-                          measure_pack=spec.measure_pack)
+                          measure_pack=spec.measure_pack,
+                          shards=spec.shards, workers=spec.workers,
+                          flush_interval_s=spec.flush_interval_s)
 
 
 def run_scenario(spec: ScenarioSpec) -> Dict[str, Any]:
@@ -143,7 +149,8 @@ def run_scenario(spec: ScenarioSpec) -> Dict[str, Any]:
         "config": {"num_clients": spec.num_clients,
                    "num_edges": spec.num_edges, "rounds": spec.rounds,
                    "mode": spec.mode, "max_replicas": spec.max_replicas,
-                   "slots": spec.slots, "seed": spec.seed},
+                   "slots": spec.slots, "seed": spec.seed,
+                   "shards": spec.shards, "workers": spec.workers},
         "rounds": result.rounds,
         "migrations": result.migration_summary,
         "engine": result.engine_stats,

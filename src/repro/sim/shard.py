@@ -1,0 +1,494 @@
+"""Per-edge shard engines: FedFly *timing* dynamics, JAX-free.
+
+An ``EdgeShard`` owns a subset of the edges (and whichever clients are
+currently homed on them) and simulates the full FedFly event flow —
+batch compute with congestion, mid-epoch moves, checkpoint packing,
+backhaul FIFO queueing, update uploads, churn — on its own ``SimEngine``
+heap. Edges only interact through backhaul transfers, so the only
+cross-shard traffic is a migration whose destination edge lives on
+another shard: the client's timing state rides along as ``Mail`` and is
+delivered at the next conservative-window barrier (repro.sim.engine).
+
+Shards are deliberately free of JAX (and of ``repro.runtime.cluster``,
+which imports it): everything a handler touches is a float, a dict, or
+a ``LinkModel``. That keeps them picklable and makes worker processes
+start without paying a JAX import. All numerics — cohort training,
+aggregation, metrics — happen in the coordinating ``FleetSimulator``,
+which replays the records shards emit (`contribs`, `epoch_starts`,
+`migrations`) in global time order. Timing never depends on numerics,
+which is why the replay is exact and per-round metrics are bit-identical
+across shard counts.
+
+Congestion re-pricing (the "stale congestion pricing" fix): an edge's
+processor-sharing factor used to be sampled once when a batch was
+scheduled, so a batch priced on an idle edge kept its fast finish time
+even when 50 migrating clients landed mid-batch. Each in-flight batch
+now carries its remaining *base-seconds* of work (``InflightBatch``);
+whenever the edge's ``active`` population changes, every in-flight
+batch's progress is advanced under the old congestion factor and its
+BATCH_DONE event is rescheduled under the new one (stale events are
+invalidated by a per-client token). With a constant population this
+reduces exactly to the old ``fixed + server·congestion`` pricing.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.runtime.transport import LinkModel
+from repro.sim.engine import EventKind, Mail, SimEngine, WindowResult
+
+
+# ---------------------------------------------------------------------------
+# shard-local edge state
+# ---------------------------------------------------------------------------
+
+@dataclass
+class InflightBatch:
+    """One client's batch in progress at an edge, re-priceable.
+
+    Duration model: a batch is ``fixed_s`` (device compute + wireless
+    link, unaffected by edge load) plus ``srv_s`` seconds of server-stage
+    work stretched by the congestion factor g. We track progress in
+    *base seconds*: total work W = fixed_s + srv_s, consumed at rate
+    r(g) = W / (fixed_s + srv_s * g). Constant g ⇒ the original
+    ``fixed + srv·g`` duration exactly."""
+    client_id: str
+    fixed_s: float
+    srv_s: float
+    remaining: float                  # base-seconds of work left
+    last_t: float                     # sim time of the last repricing
+    cong: float                       # congestion factor in force since
+
+    def rate(self, cong: float) -> float:
+        total = self.fixed_s + self.srv_s
+        return total / (self.fixed_s + self.srv_s * cong)
+
+    def reprice(self, t: float, new_cong: float) -> float:
+        """Advance progress to ``t`` under the old factor, switch to the
+        new one; returns the new finish time."""
+        if t > self.last_t:
+            self.remaining -= (t - self.last_t) * self.rate(self.cong)
+            self.remaining = max(self.remaining, 0.0)
+            self.last_t = t
+        self.cong = new_cong
+        return self.last_t + self.remaining / self.rate(new_cong)
+
+
+@dataclass
+class ShardEdge:
+    """Runtime state of one edge inside a shard (same capacity model as
+    ``repro.sim.edge.SimEdge``, minus the JAX-importing profile type)."""
+    edge_id: str
+    flops_per_s: float
+    slots: int
+    wireless: LinkModel
+    backhaul: LinkModel
+
+    active: int = 0                 # clients currently mid-epoch here
+    attached: int = 0               # clients currently homed here
+    busy_until: float = 0.0         # backhaul FIFO frontier
+    priced_cong: float = -1.0       # congestion the in-flight batches carry
+    peak_active: int = 0
+    backhaul_busy_s: float = 0.0
+    backhaul_wait_s: float = 0.0
+    migrations_out: int = 0
+    migrations_in: int = 0
+    inflight: Dict[str, InflightBatch] = field(default_factory=dict)
+
+    @classmethod
+    def from_sim_edge(cls, e) -> "ShardEdge":
+        return cls(edge_id=e.edge_id, flops_per_s=e.profile.flops_per_s,
+                   slots=e.slots, wireless=e.wireless, backhaul=e.backhaul)
+
+    def congestion(self) -> float:
+        """Server-stage slowdown under load (>= 1)."""
+        return max(1.0, self.active / max(self.slots, 1))
+
+    def reserve_backhaul(self, now: float, nbytes: int
+                         ) -> Tuple[float, float, float]:
+        """Claim the shared backhaul for one transfer starting no earlier
+        than ``now``. Returns (start, done, queue_wait)."""
+        duration = self.backhaul.transfer_time(nbytes)
+        start = max(now, self.busy_until)
+        done = start + duration
+        self.busy_until = done
+        self.backhaul_busy_s += duration
+        self.backhaul_wait_s += start - now
+        return start, done, start - now
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "edge_id": self.edge_id,
+            "slots": self.slots,
+            "peak_active": self.peak_active,
+            "backhaul_busy_s": self.backhaul_busy_s,
+            "backhaul_wait_s": self.backhaul_wait_s,
+            "migrations_in": self.migrations_in,
+            "migrations_out": self.migrations_out,
+        }
+
+
+# ---------------------------------------------------------------------------
+# shard-local client state
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ShardClient:
+    """Timing-only view of one device; travels between shards inside the
+    migration Mail when its destination edge is remote."""
+    client_id: str
+    cohort_key: Tuple[int, int]
+    replica: int
+    edge_id: str
+    num_samples: int
+    num_batches: int
+    dev_flops_per_s: float
+    moves: Dict[int, Tuple[str, float]]       # epoch -> (dst_edge, fraction)
+    dropout: Optional[Tuple[int, float]] = None   # (epoch, offline_s)
+    epoch: int = 0
+    batch_idx: int = 0
+    epochs_done: int = 0
+    epoch_start_s: float = 0.0
+    pulled_s: float = 0.0             # when the model download began
+    pending_move: Optional[Tuple[str, float]] = None
+    move_at: int = -1
+    batch_event: Optional[Any] = None  # live BATCH_DONE (re-pricing cancels)
+    done: bool = False
+
+
+# cohort static table entry: everything the timing layer needs per cohort
+# (one XLA cost-analysis per cohort, computed by the coordinator)
+#   dflops, sflops : device/server fwd FLOPs per batch
+#   sbytes         : smashed activation bytes per batch
+#   dev, update, ckpt : payload sizes (downlink / upload / migration)
+CohortTable = Dict[str, float]
+
+
+def batch_parts(table: CohortTable, dev_flops_per_s: float,
+                edge_flops_per_s: float,
+                wireless: LinkModel) -> Tuple[float, float]:
+    """(fixed_s, srv_s) for one batch: device compute + wireless link vs
+    server-stage work (the part stretched by congestion). THE batch-time
+    formula — the coordinator's default flush interval derives from it
+    too, so there is exactly one copy."""
+    fixed = 3.0 * table["dflops"] / dev_flops_per_s \
+        + 2.0 * wireless.transfer_time(int(table["sbytes"]))
+    srv = 3.0 * table["sflops"] / edge_flops_per_s
+    return fixed, srv
+
+
+class EdgeShard:
+    """One shard of the fleet: its edges, its clients, its event heap."""
+
+    def __init__(self, shard_id: int, edges: List[ShardEdge],
+                 clients: List[ShardClient],
+                 cohort_tables: Dict[Tuple[int, int], CohortTable],
+                 shard_of_edge: Dict[str, int], *,
+                 mode: str, num_rounds: int,
+                 pack_fn: Optional[Any] = None,
+                 reprice_tol: float = 0.05):
+        self.shard_id = shard_id
+        self.edges = {e.edge_id: e for e in edges}
+        self.clients = {c.client_id: c for c in clients}
+        self.tables = cohort_tables
+        self.shard_of_edge = shard_of_edge
+        self.mode = mode
+        self.num_rounds = num_rounds
+        self.pack_fn = pack_fn        # set only for in-process shards
+        self.reprice_tol = reprice_tol
+
+        self.engine = SimEngine()
+        self.engine.register(EventKind.BATCH_DONE, self._on_batch_done)
+        self.engine.register(EventKind.MOVE, self._on_move)
+        self.engine.register(EventKind.CHECKPOINT_PACKED, self._on_packed)
+        self.engine.register(EventKind.TRANSFER_DONE, self._on_transfer_done)
+        self.engine.register(EventKind.REJOIN, self._on_rejoin)
+        self.engine.register(EventKind.ROUND_START, self._on_round_start)
+
+        self._inflight_mig: Dict[str, Dict[str, Any]] = {}
+        # per-(cohort, epoch) first-start de-dup for epoch_start records
+        self._epoch_reported: set = set()
+        self._reset_outbox()
+
+    # -- window protocol -------------------------------------------------
+
+    def _reset_outbox(self):
+        self.out_mail: List[Mail] = []
+        self.out_contribs: List[tuple] = []
+        self.out_epoch_starts: List[tuple] = []
+        self.out_migrations: List[tuple] = []
+
+    def peek(self) -> Optional[float]:
+        return self.engine.peek_time()
+
+    def deliver(self, mail: List[Mail]) -> None:
+        """Inject cross-shard messages (installing any migrating client's
+        timing state first)."""
+        for m in sorted(mail, key=lambda m: (m.time, m.key)):
+            if "client_state" in m.payload:
+                self.clients[m.payload["client_state"].client_id] = \
+                    m.payload["client_state"]
+            self.engine.schedule_at(m.time, m.kind, key=m.key, **m.payload)
+
+    def run_window(self, bound: float, mail: List[Mail]) -> WindowResult:
+        before = self.engine.events_processed
+        self.deliver(mail)
+        self.engine.run(before=bound)
+        result = WindowResult(
+            next_time=self.engine.peek_time(),
+            mail=self.out_mail,
+            records={"contribs": self.out_contribs,
+                     "epoch_starts": self.out_epoch_starts,
+                     "migrations": self.out_migrations},
+            processed=self.engine.events_processed - before)
+        self._reset_outbox()      # records produced outside a window (the
+        return result             # async bootstrap) ride the next one
+
+    def final_stats(self) -> Dict[str, Any]:
+        return {"engine": self.engine.stats(),
+                "edges": [self.edges[eid].stats()
+                          for eid in sorted(self.edges)]}
+
+    # -- timing ----------------------------------------------------------
+
+    def _batch_parts(self, c: ShardClient) -> Tuple[float, float]:
+        e = self.edges[c.edge_id]
+        return batch_parts(self.tables[c.cohort_key], c.dev_flops_per_s,
+                           e.flops_per_s, e.wireless)
+
+    def _downlink_time(self, c: ShardClient) -> float:
+        return self.edges[c.edge_id].wireless.transfer_time(
+            int(self.tables[c.cohort_key]["dev"]))
+
+    # -- congestion re-pricing -------------------------------------------
+
+    def _active_changed(self, edge: ShardEdge):
+        """The edge's population changed: re-price every in-flight batch
+        under the new congestion factor and reschedule its BATCH_DONE.
+
+        ``reprice_tol`` bounds the cost: a ±1 population change on a
+        300-client edge moves the congestion factor by ~0.3%, so exact
+        repricing would be O(active²) per epoch wave. Re-pricing fires
+        only when the factor drifts more than the (relative) tolerance
+        from the one the in-flight batches were priced at; every batch's
+        pricing error stays within that band. ``reprice_tol=0`` is the
+        exact model."""
+        g = edge.congestion()
+        ref = edge.priced_cong
+        if ref > 0 and abs(g - ref) <= self.reprice_tol * ref:
+            return
+        edge.priced_cong = g
+        now = self.engine.now
+        for cid, fb in edge.inflight.items():
+            if fb.cong == g:
+                continue
+            finish = fb.reprice(now, g)
+            c = self.clients[cid]
+            self.engine.cancel(c.batch_event)
+            c.batch_event = self.engine.schedule_at(
+                finish, EventKind.BATCH_DONE, key=cid, client=cid)
+
+    def _train_resume(self, edge: ShardEdge):
+        edge.active += 1
+        edge.peak_active = max(edge.peak_active, edge.active)
+        self._active_changed(edge)
+
+    def _train_pause(self, edge: ShardEdge):
+        edge.active = max(edge.active - 1, 0)
+        self._active_changed(edge)
+
+    def _begin_batch(self, c: ShardClient, start_s: float):
+        """Register the in-flight batch and schedule its completion under
+        the congestion factor in force right now."""
+        e = self.edges[c.edge_id]
+        fixed, srv = self._batch_parts(c)
+        g = e.congestion()
+        fb = InflightBatch(client_id=c.client_id, fixed_s=fixed, srv_s=srv,
+                           remaining=fixed + srv, last_t=start_s, cong=g)
+        e.inflight[c.client_id] = fb
+        finish = start_s + fixed + srv * g
+        c.batch_event = self.engine.schedule_at(
+            finish, EventKind.BATCH_DONE, key=c.client_id,
+            client=c.client_id)
+
+    # -- epoch lifecycle -------------------------------------------------
+
+    def start_epoch(self, c: ShardClient, epoch: int, start_s: float,
+                    resume: bool = True):
+        """``resume=False`` means the caller already bumped the edge's
+        ``active`` (the mass round-start path — bumping everyone before
+        pricing anyone avoids an O(active²) re-pricing cascade)."""
+        c.epoch = epoch
+        c.batch_idx = 0
+        c.epoch_start_s = start_s
+        c.pulled_s = self.engine.now
+        # cohort training is triggered now (model download begins), from
+        # the coordinator's current global — record the *call* time
+        rec_key = (c.cohort_key, epoch)
+        if rec_key not in self._epoch_reported:
+            self._epoch_reported.add(rec_key)
+            self.out_epoch_starts.append(
+                (self.engine.now, c.cohort_key, epoch))
+        move = c.moves.get(epoch)
+        c.pending_move = move
+        nb = c.num_batches
+        # clamp inside the epoch (fraction < 1 moves before the epoch
+        # ends) — same rule as core/scheduler.py
+        c.move_at = (min(int(round(move[1] * nb)), nb - 1)
+                     if move is not None else -1)
+        if resume:
+            self._train_resume(self.edges[c.edge_id])
+        if c.move_at == 0:
+            self.engine.schedule_at(start_s, EventKind.MOVE, key=c.client_id,
+                                    client=c.client_id)
+        else:
+            self._begin_batch(c, start_s)
+
+    def _mass_start(self, epoch: int, base: float):
+        """Start an epoch for every (non-done) client at once: count the
+        whole wave into ``active`` first, re-price each edge once, then
+        schedule everyone's batches at the settled congestion — instead
+        of an O(active²) cascade of per-client re-pricings."""
+        cs = [self.clients[cid] for cid in sorted(self.clients)
+              if not self.clients[cid].done]
+        for c in cs:
+            e = self.edges[c.edge_id]
+            e.active += 1
+            e.peak_active = max(e.peak_active, e.active)
+        for eid in sorted({c.edge_id for c in cs}):
+            self._active_changed(self.edges[eid])
+        for c in cs:
+            self.start_epoch(c, epoch, base + self._downlink_time(c),
+                             resume=False)
+
+    def bootstrap_async(self):
+        """Async mode: every client starts epoch 0 after its downlink."""
+        self._mass_start(0, 0.0)
+
+    def _on_round_start(self, ev):
+        """Sync mode: the coordinator committed round r-1; every client
+        starts its next epoch after re-downloading the model."""
+        self._mass_start(ev.payload["round_idx"], ev.time)
+
+    def _on_batch_done(self, ev):
+        c = self.clients[ev.payload["client"]]
+        c.batch_event = None
+        self.edges[c.edge_id].inflight.pop(c.client_id, None)
+        c.batch_idx += 1
+        if c.pending_move is not None and c.batch_idx == c.move_at:
+            self.engine.schedule(0.0, EventKind.MOVE, key=c.client_id,
+                                 client=c.client_id)
+            return
+        if c.batch_idx < c.num_batches:
+            self._begin_batch(c, self.engine.now)
+        else:
+            self._epoch_computed(c)
+
+    def _epoch_computed(self, c: ShardClient):
+        """All batches done — upload the merged update over the edge
+        backhaul (FIFO: shares the link with migration traffic). A
+        churned device goes dark instead and uploads when it rejoins
+        (the backhaul is NOT reserved while it is away)."""
+        self._train_pause(self.edges[c.edge_id])
+        if c.dropout is not None and c.dropout[0] == c.epoch:
+            self.engine.schedule(c.dropout[1], EventKind.REJOIN,
+                                 key=c.client_id, client=c.client_id)
+            return
+        self._upload_update(c)
+
+    def _upload_update(self, c: ShardClient):
+        nbytes = int(self.tables[c.cohort_key]["update"])
+        _, done, _ = self.edges[c.edge_id].reserve_backhaul(self.engine.now,
+                                                            nbytes)
+        self.engine.schedule_at(done, EventKind.TRANSFER_DONE,
+                                key=c.client_id, client=c.client_id,
+                                what="update")
+
+    def _on_rejoin(self, ev):
+        self._upload_update(self.clients[ev.payload["client"]])
+
+    # -- migration (FedFly steps 6-9, with backpressure) -----------------
+
+    def _on_move(self, ev):
+        c = self.clients[ev.payload["client"]]
+        dst_edge, _ = c.pending_move
+        c.pending_move = None
+        src = self.edges[c.edge_id]
+        self._train_pause(src)
+        src.attached = max(src.attached - 1, 0)
+        src.migrations_out += 1
+        if self.pack_fn is not None:
+            nbytes, pack_s, unpack_s = self.pack_fn(
+                c.client_id, c.cohort_key, c.replica, c.epoch, c.batch_idx,
+                c.edge_id, dst_edge)
+        else:       # mega-scale: skip real serialization, use cached sizes
+            nbytes = int(self.tables[c.cohort_key]["ckpt"])
+            pack_s = unpack_s = 0.0
+        self._inflight_mig[c.client_id] = {
+            "dst": dst_edge, "nbytes": nbytes, "pack_s": pack_s,
+            "unpack_s": unpack_s, "start_s": self.engine.now,
+            "src": c.edge_id}
+        self.engine.schedule(pack_s, EventKind.CHECKPOINT_PACKED,
+                             key=c.client_id, client=c.client_id)
+
+    def _on_packed(self, ev):
+        c = self.clients[ev.payload["client"]]
+        mig = self._inflight_mig.pop(c.client_id)
+        src = self.edges[mig["src"]]
+        _, done, wait = src.reserve_backhaul(self.engine.now, mig["nbytes"])
+        mig["queue_s"] = wait
+        dst_shard = self.shard_of_edge[mig["dst"]]
+        if dst_shard == self.shard_id:
+            self._inflight_mig[c.client_id] = mig
+            self.engine.schedule_at(done, EventKind.TRANSFER_DONE,
+                                    key=c.client_id, client=c.client_id,
+                                    what="migration")
+        else:
+            # the client leaves this shard; its timing state rides along
+            del self.clients[c.client_id]
+            self.out_mail.append(Mail(
+                dst_shard=dst_shard, time=done, kind=EventKind.TRANSFER_DONE,
+                key=c.client_id,
+                payload={"client": c.client_id, "what": "migration",
+                         "client_state": c, "mig": mig}))
+
+    def _resume_after_migration(self, c: ShardClient,
+                                mig: Dict[str, Any]):
+        dst = self.edges[mig["dst"]]
+        dst.attached += 1
+        dst.migrations_in += 1
+        c.edge_id = mig["dst"]
+        self._train_resume(dst)
+        end = self.engine.now + mig["unpack_s"]
+        self.out_migrations.append((
+            c.client_id, mig["src"], mig["dst"], c.epoch, mig["start_s"],
+            end, mig["nbytes"], mig["pack_s"], mig.get("queue_s", 0.0),
+            self.engine.now - mig["start_s"] - mig["pack_s"]
+            - mig.get("queue_s", 0.0)))
+        # FedFly: resume the interrupted epoch, never restart (move_at is
+        # clamped below num_batches, so batches always remain)
+        assert c.batch_idx < c.num_batches
+        self._begin_batch(c, end)
+
+    # -- update arrival --------------------------------------------------
+
+    def _on_transfer_done(self, ev):
+        c = self.clients[ev.payload["client"]]
+        if ev.payload["what"] == "migration":
+            mig = ev.payload.get("mig") or self._inflight_mig.pop(c.client_id)
+            self._resume_after_migration(c, mig)
+            return
+        # model update reached the aggregation point: hand the arrival to
+        # the coordinator (it owns trees, losses, staleness, mixing)
+        now = self.engine.now
+        self.out_contribs.append((now, c.client_id, c.cohort_key, c.replica,
+                                  c.epoch, c.epoch_start_s, c.pulled_s,
+                                  c.num_samples))
+        c.epochs_done += 1
+        if self.mode == "async":
+            if c.epochs_done < self.num_rounds:
+                self.start_epoch(c, c.epoch + 1,
+                                 now + self._downlink_time(c))
+            else:
+                c.done = True

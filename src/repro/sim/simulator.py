@@ -1,39 +1,47 @@
-"""The fleet simulator: FedFly protocol dynamics at thousand-device scale.
+"""The fleet simulator: FedFly protocol dynamics at 10^4-device scale.
 
-Wires together the pieces of ``repro.sim``:
+Architecture (this is the sharded rewrite — see README.md):
 
-  engine     — heap-based event queue + simulated clock
+  engine     — ``SimEngine`` heaps + ``ShardedEngine`` conservative-
+               window coordinator (+ serial / multiprocessing executors)
+  shard      — JAX-free per-edge ``EdgeShard`` timing engines: batch
+               compute with *re-priced* congestion, moves, checkpoint
+               packing, backhaul FIFOs, churn
   fleet      — cohort-vectorized client numerics (vmap over replicas)
-  edge       — per-edge compute slots + backhaul FIFO (backpressure)
-  async_agg  — sync FedAvg barrier or FedAsync staleness-weighted mixing
+  async_agg  — sync FedAvg barrier or FedAsync *batched* staleness-
+               weighted mixing (one fedavg_agg kernel dispatch per flush)
   metrics    — per-round JSON records
 
-and plugs into the existing runtime: ``MigrationExecutor`` packs/unpacks
-real ``EdgeCheckpoint`` payloads for every simulated handoff (so
-migration byte counts, pack times and codec quantization error are
-measured, not guessed), ``MobilityTrace`` supplies the moves, and
-``LinkModel`` times every byte.
+``FleetSimulator`` is the coordinator: it partitions the edges over
+``shards`` shard engines (edges only interact through backhaul
+transfers, so cross-shard traffic is exactly the migrations whose
+destination edge lives elsewhere), precomputes the static per-cohort
+timing tables the shards need, and then *replays* the records shards
+emit — epoch starts, update arrivals, migrations — in global simulated-
+time order, running cohort training and aggregation at the recorded
+times. Timing never depends on numerics, so the replay is exact and
+per-round metrics are bit-identical for any shard count (and for any
+worker count: shard arithmetic is per-edge and tie-breaks use client
+ids, not heap insertion order).
 
-Event flow for one client epoch (sync mode; async differs only in the
-aggregation step and in that clients immediately start their next epoch):
-
-  epoch start ──batch_time──▶ BATCH_DONE ×num_batches
-      │                            │ (trace says move at this batch)
-      │                            ▼
-      │                          MOVE ──pack_s──▶ CHECKPOINT_PACKED
-      │                                               │ backhaul FIFO
-      │                                               ▼
-      │                  resume at dst ◀── TRANSFER_DONE(migration)
-      ▼
-  last batch ── edge backhaul FIFO ──▶ TRANSFER_DONE(update)
-      │ sync: all clients arrived → ROUND_BARRIER → FedAvg commit
-      │ async: AsyncAggregator.submit(staleness-weighted) immediately
-      ▼
-  next epoch (sync: after barrier; async: after downlink)
+Aggregation: in async mode arriving updates are *buffered* and flushed
+on a fixed simulated-time grid (``flush_interval_s``, default = the
+fleet's fastest uncongested batch time): each flush folds the whole
+window into the global model with one ``fedavg_mix_tree`` kernel
+dispatch, sequential-equivalent effective coefficients, and staleness
+counted against the flush timeline. In sync mode the round barrier
+commits a dataset-size-weighted average (one stacked ``fedavg_tree``
+dispatch); an empty round carries the global forward and is recorded as
+skipped instead of crashing.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import bisect
+import math
+import queue
+import threading
+import time
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -44,9 +52,11 @@ from repro.core.mobility import MobilityTrace
 from repro.sim.async_agg import (AsyncAggregator, StalenessFn, SyncAggregator,
                                  poly_staleness)
 from repro.sim.edge import SimEdge
-from repro.sim.engine import EventKind, SimEngine
-from repro.sim.fleet import Fleet, SimClient
+from repro.sim.engine import (EventKind, Mail, PeerShardedEngine,
+                              ProcessExecutor, SerialExecutor, ShardedEngine)
+from repro.sim.fleet import Fleet
 from repro.sim.metrics import FleetMetrics, MigrationRecord
+from repro.sim.shard import EdgeShard, ShardClient, ShardEdge, batch_parts
 
 Params = Any
 
@@ -62,23 +72,26 @@ class FleetResult:
     metrics: FleetMetrics
 
     def summary(self) -> Dict[str, Any]:
+        timed = [r for r in self.rounds if "mean_round_time_s" in r]
         return {
             "mode": self.mode,
             "num_rounds": len(self.rounds),
             "sim_time_s": self.engine_stats["sim_time_s"],
             "events_per_sec": self.engine_stats["events_per_sec"],
             "events_processed": self.engine_stats["events_processed"],
-            "final_mean_loss": (self.rounds[-1]["mean_loss"]
-                                if self.rounds else None),
+            "num_shards": self.engine_stats.get("num_shards", 1),
+            "final_mean_loss": (timed[-1]["mean_loss"] if timed else None),
             "mean_round_time_s": float(np.mean(
-                [r["mean_round_time_s"] for r in self.rounds]))
-            if self.rounds else None,
+                [r["mean_round_time_s"] for r in timed])) if timed else None,
             "migrations": self.migration_summary,
         }
 
 
 class FleetSimulator:
-    """Discrete-event FedFly simulation over a ``Fleet`` and ``SimEdge``s."""
+    """Sharded discrete-event FedFly simulation over a ``Fleet`` and
+    ``SimEdge``s. ``shards=1`` (default) is the degenerate single-heap
+    case; ``workers=N`` runs the shard engines in N parallel processes
+    (requires ``measure_pack=False`` — workers are JAX-free)."""
 
     def __init__(self, fleet: Fleet, edges: Sequence[SimEdge], *,
                  trace: Optional[MobilityTrace] = None,
@@ -87,259 +100,418 @@ class FleetSimulator:
                  staleness_fn: Optional[StalenessFn] = None,
                  dropouts: Optional[Dict[str, Tuple[int, float]]] = None,
                  migration_codec: str = "raw",
-                 measure_pack: bool = True):
+                 measure_pack: bool = True,
+                 shards: int = 1,
+                 workers: Optional[int] = None,
+                 flush_interval_s: Optional[float] = None,
+                 reprice_tol: float = 0.05):
         if mode not in ("sync", "async"):
             raise ValueError(f"mode must be sync|async, got {mode!r}")
         if dropouts and mode == "sync":
             raise ValueError("device churn (dropouts) requires mode='async'; "
                              "a sync barrier would deadlock on offline "
                              "clients")
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if workers is not None and measure_pack:
+            raise ValueError("workers (multiprocessing shards) require "
+                             "measure_pack=False: shard processes are "
+                             "JAX-free and cannot serialize checkpoints")
         self.fleet = fleet
+        self.edge_order = [e.edge_id for e in edges]
         self.edges: Dict[str, SimEdge] = {e.edge_id: e for e in edges}
         for c in fleet.clients.values():
             if c.edge_id not in self.edges:
                 raise ValueError(f"client {c.client_id} starts on unknown "
                                  f"edge {c.edge_id}")
-            self.edges[c.edge_id].attach()
         self.trace = trace
         self.mode = mode
         self.dropouts = dropouts or {}
         self.measure_pack = measure_pack
         self.migrator = MigrationExecutor(codec=migration_codec)
-
-        self.engine = SimEngine()
-        self.engine.register(EventKind.BATCH_DONE, self._on_batch_done)
-        self.engine.register(EventKind.MOVE, self._on_move)
-        self.engine.register(EventKind.CHECKPOINT_PACKED, self._on_packed)
-        self.engine.register(EventKind.TRANSFER_DONE, self._on_transfer_done)
-        self.engine.register(EventKind.ROUND_BARRIER, self._on_barrier)
-        self.engine.register(EventKind.REJOIN, self._on_rejoin)
+        self.num_shards = min(shards, len(self.edge_order))
+        self.workers = workers
+        self.flush_interval_s = flush_interval_s
+        self.reprice_tol = reprice_tol
 
         self.metrics = FleetMetrics()
         if mode == "sync":
-            self.agg = SyncAggregator(fleet.global_params)
+            self.agg: Any = SyncAggregator(fleet.global_params)
         else:
             self.agg = AsyncAggregator(fleet.global_params, alpha=alpha,
                                        staleness_fn=staleness_fn)
         self.num_rounds = 0
-        self._arrived = 0
-        self._expected = 0
-        self._round_start_s = 0.0
-        self._inflight: Dict[str, Dict[str, Any]] = {}   # migrations
-        # sync-mode contribution dedupe: (cohort_key, replica) -> weight
+        # replay state
+        self._tables = fleet.cohort_tables()
+        self._cohort_sizes = fleet.cohort_sizes()
+        self._buffer: List[tuple] = []          # async: (tree, w, item)
+        self._flush_times: List[float] = []     # flush timeline (times)
+        self._flush_versions: List[int] = []    # cumulative version after
+        self._grid_k = 0                        # last fired flush grid index
         self._round_weights: Dict[Tuple, float] = {}
-
-    # -- timing ----------------------------------------------------------
-
-    def _batch_time(self, c: SimClient) -> float:
-        """One split batch at the client's current edge, including the
-        edge's processor-sharing congestion."""
-        dflops, sflops, sbytes = self.fleet.batch_costs(c)
-        e = self.edges[c.edge_id]
-        t_dev = 3.0 * dflops / c.spec.profile.flops_per_s
-        t_srv = 3.0 * sflops / e.profile.flops_per_s * e.congestion()
-        t_link = e.wireless.transfer_time(sbytes) * 2   # smashed up, grad down
-        return t_dev + t_srv + t_link
-
-    def _downlink_time(self, c: SimClient) -> float:
-        """Fetch the new device stage at epoch start."""
-        nb = self.fleet.payload_nbytes(c)
-        return self.edges[c.edge_id].wireless.transfer_time(nb["dev"])
-
-    # -- epoch lifecycle -------------------------------------------------
-
-    def _start_epoch(self, c: SimClient, epoch: int, start_s: float):
-        c.epoch = epoch
-        c.batch_idx = 0
-        c.version_at_start = self.agg.version
-        c.epoch_start_s = start_s
-        self.fleet.ensure_epoch(c, epoch)
-        move = self.trace.move_for(epoch, c.client_id) if self.trace else None
-        c.pending_move = move
-        nb = c.spec.num_batches
-        # clamp inside the epoch (fraction < 1 moves before the epoch
-        # ends) — same rule as core/scheduler.py
-        c.move_at = (min(int(round(move.fraction * nb)), nb - 1)
-                     if move is not None else -1)
-        self.edges[c.edge_id].train_resume()
-        if c.move_at == 0:
-            self.engine.schedule_at(start_s, EventKind.MOVE,
-                                    client=c.client_id)
-        else:
-            self.engine.schedule_at(start_s + self._batch_time(c),
-                                    EventKind.BATCH_DONE, client=c.client_id)
-
-    def _on_batch_done(self, ev):
-        c = self.fleet.clients[ev.payload["client"]]
-        c.batch_idx += 1
-        if c.pending_move is not None and c.batch_idx == c.move_at:
-            self.engine.schedule(0.0, EventKind.MOVE, client=c.client_id)
-            return
-        if c.batch_idx < c.spec.num_batches:
-            self.engine.schedule(self._batch_time(c), EventKind.BATCH_DONE,
-                                 client=c.client_id)
-        else:
-            self._epoch_computed(c)
-
-    def _epoch_computed(self, c: SimClient):
-        """All batches done — upload the merged update over the edge
-        backhaul (FIFO: shares the link with migration traffic). A
-        churned device goes dark instead and uploads when it rejoins
-        (the backhaul is NOT reserved while it is away)."""
-        self.edges[c.edge_id].train_pause()
-        if c.client_id in self.dropouts and \
-                self.dropouts[c.client_id][0] == c.epoch:
-            self.engine.schedule(self.dropouts[c.client_id][1],
-                                 EventKind.REJOIN, client=c.client_id)
-            return
-        self._upload_update(c)
-
-    def _upload_update(self, c: SimClient):
-        nbytes = self.fleet.payload_nbytes(c)["update"]
-        _, done, _ = self.edges[c.edge_id].reserve_backhaul(self.engine.now,
-                                                            nbytes)
-        self.engine.schedule_at(done, EventKind.TRANSFER_DONE,
-                                client=c.client_id, what="update")
-
-    def _on_rejoin(self, ev):
-        self._upload_update(self.fleet.clients[ev.payload["client"]])
-
-    # -- migration (FedFly steps 6-9, with backpressure) -----------------
-
-    def _on_move(self, ev):
-        c = self.fleet.clients[ev.payload["client"]]
-        move = c.pending_move
-        c.pending_move = None
-        c.migrating = True
-        src = self.edges[c.edge_id]
-        src.train_pause()
-        src.detach()
-        src.migrations_out += 1
-        if self.measure_pack:
-            cohort = self.fleet.cohorts[c.spec.cohort_key]
-            srv, opt = cohort.server_state_for(c.replica)
-            ckpt = EdgeCheckpoint(
-                client_id=c.client_id, round_idx=c.epoch, epoch=c.epoch,
-                batch_idx=c.batch_idx, split_point=self.fleet.sp,
-                server_params=srv, optimizer_state=opt, loss=0.0,
-                rng_seed=self.fleet.seed)
-            _, report = self.migrator.migrate(ckpt, c.edge_id, move.dst_edge)
-            nbytes, pack_s, unpack_s = (report.nbytes, report.pack_s,
-                                        report.unpack_s)
-        else:       # mega-scale: skip real serialization, use cached sizes
-            nbytes = self.fleet.payload_nbytes(c)["ckpt"]
-            pack_s = unpack_s = 0.0
-        self._inflight[c.client_id] = {
-            "dst": move.dst_edge, "nbytes": nbytes, "pack_s": pack_s,
-            "unpack_s": unpack_s, "start_s": self.engine.now,
-            "src": c.edge_id}
-        self.engine.schedule(pack_s, EventKind.CHECKPOINT_PACKED,
-                             client=c.client_id)
-
-    def _on_packed(self, ev):
-        c = self.fleet.clients[ev.payload["client"]]
-        mig = self._inflight[c.client_id]
-        src = self.edges[mig["src"]]
-        _, done, wait = src.reserve_backhaul(self.engine.now, mig["nbytes"])
-        mig["queue_s"] = wait
-        self.engine.schedule_at(done, EventKind.TRANSFER_DONE,
-                                client=c.client_id, what="migration")
-
-    def _resume_after_migration(self, c: SimClient):
-        mig = self._inflight.pop(c.client_id)
-        dst = self.edges[mig["dst"]]
-        dst.attach()
-        dst.train_resume()
-        dst.migrations_in += 1
-        c.edge_id = mig["dst"]
-        c.migrating = False
-        end = self.engine.now + mig["unpack_s"]
-        self.metrics.record_migration(MigrationRecord(
-            client_id=c.client_id, src_edge=mig["src"], dst_edge=mig["dst"],
-            round_idx=c.epoch, start_s=mig["start_s"], end_s=end,
-            nbytes=mig["nbytes"], pack_s=mig["pack_s"],
-            queue_s=mig.get("queue_s", 0.0),
-            transfer_s=self.engine.now - mig["start_s"] - mig["pack_s"]
-            - mig.get("queue_s", 0.0)))
-        # FedFly: resume the interrupted epoch, never restart (move_at is
-        # clamped below num_batches, so batches always remain)
-        assert c.batch_idx < c.spec.num_batches
-        self.engine.schedule_at(end + self._batch_time(c),
-                                EventKind.BATCH_DONE, client=c.client_id)
-
-    # -- update arrival / aggregation ------------------------------------
-
-    def _on_transfer_done(self, ev):
-        c = self.fleet.clients[ev.payload["client"]]
-        if ev.payload["what"] == "migration":
-            self._resume_after_migration(c)
-            return
-        # model update reached the aggregation point
-        tree, loss = self.fleet.contribution(c, c.epoch)
-        staleness = self.agg.version - c.version_at_start
-        now = self.engine.now
-        mix = 0.0
-        if self.mode == "sync":
-            key = (c.spec.cohort_key, c.replica)
-            self._round_weights[key] = (self._round_weights.get(key, 0.0)
-                                        + c.spec.num_samples)
-            self._arrived += 1
-        else:
-            mix = self.agg.submit(tree, weight=c.spec.num_samples,
-                                  staleness=staleness)
-            self.fleet.set_global(self.agg.params)
-        self.metrics.record_contribution(
-            client_id=c.client_id, round_idx=c.epoch, arrival_s=now,
-            duration_s=now - c.epoch_start_s, staleness=staleness,
-            loss=loss, mix_weight=mix)
-        c.epochs_done += 1
-        if self.mode == "sync":
-            if self._arrived == self._expected:
-                self.engine.schedule(0.0, EventKind.ROUND_BARRIER,
-                                     round_idx=c.epoch)
-        else:
-            if c.epochs_done < self.num_rounds:
-                self._start_epoch(c, c.epoch + 1,
-                                  now + self._downlink_time(c))
-            else:
-                c.done = True
-
-    def _on_barrier(self, ev):
-        """Sync FedAvg commit: average this round's updates (deduped by
-        cohort replica — clients sharing a replica share a tree)."""
-        r = ev.payload["round_idx"]
-        for (cohort_key, replica), weight in sorted(
-                self._round_weights.items()):
-            tree = self.fleet.cohorts[cohort_key].snapshots[r][replica]
-            self.agg.submit(tree, weight)
-        self._round_weights.clear()
-        self.fleet.set_global(self.agg.commit())
-        self.metrics.record_barrier(r, self.engine.now)
-        if r + 1 < self.num_rounds:
-            self._start_round(r + 1)
-
-    def _start_round(self, r: int):
         self._arrived = 0
-        self._expected = self.fleet.num_clients
-        self._round_start_s = self.engine.now
-        for c in self.fleet.clients.values():
-            self._start_epoch(c, r, self.engine.now + self._downlink_time(c))
+        self._round_idx = 0
+        self._round_last_arrival = 0.0
+        self._consumed: Dict[Tuple, int] = {}   # (cohort, epoch) -> count
+        self._prune_floor: Dict[Tuple, int] = {k: 0 for k in fleet.cohorts}
+        self.coordinator: Optional[ShardedEngine] = None
+
+    # -- static timing inputs -------------------------------------------
+
+    def _min_batch_time(self) -> float:
+        """Fastest uncongested batch anywhere in the fleet — the default
+        async flush interval (shard-count independent by construction;
+        same formula as the shards', via shard.batch_parts)."""
+        dev_flops = {c.spec.profile.flops_per_s
+                     for c in self.fleet.clients.values()}
+        best = math.inf
+        for t in self._tables.values():
+            for df in dev_flops:
+                for e in self.edges.values():
+                    best = min(best, sum(batch_parts(
+                        t, df, e.profile.flops_per_s, e.wireless)))
+        return best
+
+    def _lookahead(self) -> float:
+        """Conservative safe horizon: no cross-shard message (a backhaul
+        checkpoint transfer) can be delivered sooner than this after it
+        is sent. With measured packing the payload size is not known a
+        priori, so only the link latency is safe."""
+        lat = min(e.backhaul.latency_s for e in self.edges.values())
+        if self.measure_pack:
+            return lat
+        min_ckpt = min(t["ckpt"] for t in self._tables.values())
+        max_bw = max(e.backhaul.bandwidth_bps for e in self.edges.values())
+        return lat + 8.0 * min_ckpt / max_bw
+
+    def _pack_fn(self):
+        if not self.measure_pack:
+            return None
+        fleet, migrator = self.fleet, self.migrator
+
+        def pack(client_id, cohort_key, replica, epoch, batch_idx, src, dst):
+            cohort = fleet.cohorts[cohort_key]
+            srv, opt = cohort.server_state_for(replica)
+            ckpt = EdgeCheckpoint(
+                client_id=client_id, round_idx=epoch, epoch=epoch,
+                batch_idx=batch_idx, split_point=fleet.sp,
+                server_params=srv, optimizer_state=opt, loss=0.0,
+                rng_seed=fleet.seed)
+            _, report = migrator.migrate(ckpt, src, dst)
+            return report.nbytes, report.pack_s, report.unpack_s
+        return pack
+
+    # -- shard construction ---------------------------------------------
+
+    def _build_shards(self, rounds: int) -> List[EdgeShard]:
+        shard_of_edge = {eid: i % self.num_shards
+                         for i, eid in enumerate(self.edge_order)}
+        attached: Dict[str, int] = {eid: 0 for eid in self.edge_order}
+        clients_by_shard: Dict[int, List[ShardClient]] = {
+            s: [] for s in range(self.num_shards)}
+        moves_of: Dict[str, Dict[int, Tuple[str, float]]] = {}
+        if self.trace is not None:
+            for mv in self.trace.events:      # one pass, not per (c, epoch)
+                if mv.round_idx < rounds:
+                    d = moves_of.setdefault(mv.client_id, {})
+                    # first event wins, like MobilityTrace.move_for
+                    d.setdefault(mv.round_idx, (mv.dst_edge, mv.fraction))
+        for cid in sorted(self.fleet.clients):
+            c = self.fleet.clients[cid]
+            moves = moves_of.get(cid, {})
+            attached[c.edge_id] += 1
+            clients_by_shard[shard_of_edge[c.edge_id]].append(ShardClient(
+                client_id=cid, cohort_key=c.spec.cohort_key,
+                replica=c.replica, edge_id=c.edge_id,
+                num_samples=c.spec.num_samples,
+                num_batches=c.spec.num_batches,
+                dev_flops_per_s=c.spec.profile.flops_per_s,
+                moves=moves, dropout=self.dropouts.get(cid)))
+        pack_fn = self._pack_fn()
+        out = []
+        for s in range(self.num_shards):
+            sedges = [ShardEdge.from_sim_edge(self.edges[eid])
+                      for eid in self.edge_order
+                      if shard_of_edge[eid] == s]
+            for e in sedges:
+                e.attached = attached[e.edge_id]
+            out.append(EdgeShard(s, sedges, clients_by_shard[s],
+                                 self._tables, shard_of_edge,
+                                 mode=self.mode, num_rounds=rounds,
+                                 pack_fn=pack_fn,
+                                 reprice_tol=self.reprice_tol))
+        return out
+
+    # -- numerics replay --------------------------------------------------
+
+    def _version_at(self, t: float) -> int:
+        """Aggregator version as of simulated time t (flush timeline)."""
+        i = bisect.bisect_right(self._flush_times, t)
+        return self._flush_versions[i - 1] if i else 0
+
+    def _train(self, cohort_key, epoch: int):
+        self.fleet.cohorts[cohort_key].run_epoch(
+            self.fleet.global_params, epoch, self.fleet.lr_schedule(epoch))
+
+    def _fire_flush(self, t: float):
+        """Apply all buffered updates (arrival < t) in one kernel call."""
+        if not self._buffer:
+            return
+        base = self.agg.version
+        updates, items = [], []
+        for tree, weight, item in self._buffer:
+            staleness = base - self._version_at(item["pulled_s"])
+            updates.append((tree, weight, staleness))
+            items.append((item, staleness))
+        self._buffer.clear()
+        alphas = self.agg.flush_batch(updates)
+        for (item, staleness), a in zip(items, alphas):
+            item["record"].staleness = staleness
+            item["record"].mix_weight = a
+            self._consume(item["cohort_key"], item["epoch"])
+        self._flush_times.append(t)
+        self._flush_versions.append(self.agg.version)
+        self.fleet.set_global(self.agg.params)
+
+    def _advance_grid(self, t: float):
+        """Fire async flush grid points at or before time t."""
+        if self.mode != "async":
+            return
+        while (self._grid_k + 1) * self._flush_dt <= t:
+            self._grid_k += 1
+            self._fire_flush(self._grid_k * self._flush_dt)
+
+    def _consume(self, cohort_key, epoch: int, prune: bool = True):
+        """Snapshot-pruning bookkeeping: one *client's* contribution for
+        (cohort, epoch) has been accounted for. Sync mode counts at
+        contribution time but defers the prune to after the commit (the
+        commit still reads the snapshots)."""
+        key = (cohort_key, epoch)
+        self._consumed[key] = self._consumed.get(key, 0) + 1
+        if prune:
+            self._maybe_prune(cohort_key)
+
+    def _maybe_prune(self, cohort_key):
+        floor = self._prune_floor[cohort_key]
+        size = self._cohort_sizes[cohort_key]
+        while self._consumed.get((cohort_key, floor), 0) >= size:
+            floor += 1
+        if floor != self._prune_floor[cohort_key]:
+            self._prune_floor[cohort_key] = floor
+            self.fleet.cohorts[cohort_key].prune(floor)
+
+    def _on_window(self, bound: float,
+                   all_records: Dict[int, Dict[str, list]]) -> List[Mail]:
+        # migrations: timing-complete, straight into metrics
+        for rec in sorted(
+                (m for r in all_records.values() for m in r["migrations"]),
+                key=lambda m: (m[4], m[0])):
+            (cid, src, dst, round_idx, start_s, end_s, nbytes, pack_s,
+             queue_s, transfer_s) = rec
+            self.metrics.record_migration(MigrationRecord(
+                client_id=cid, src_edge=src, dst_edge=dst,
+                round_idx=round_idx, start_s=start_s, end_s=end_s,
+                nbytes=nbytes, pack_s=pack_s, queue_s=queue_s,
+                transfer_s=transfer_s))
+        # merge epoch starts and contributions into one time-ordered replay
+        items: List[tuple] = []
+        for r in all_records.values():
+            for t, cohort_key, epoch in r["epoch_starts"]:
+                items.append((t, 1, str(cohort_key), ("start", cohort_key,
+                                                      epoch)))
+            for con in r["contribs"]:
+                items.append((con[0], 2, con[1], ("contrib", con)))
+        items.sort(key=lambda it: it[:3])
+
+        mail: List[Mail] = []
+        for t, _, _, action in items:
+            self._advance_grid(t)
+            if action[0] == "start":
+                self._train(action[1], action[2])
+                continue
+            (arrival, cid, cohort_key, replica, epoch, epoch_start_s,
+             pulled_s, num_samples) = action[1]
+            cohort = self.fleet.cohorts[cohort_key]
+            tree = cohort.snapshots[epoch][replica]
+            loss = float(cohort.losses[epoch][replica])
+            record = self.metrics.record_contribution(
+                client_id=cid, round_idx=epoch, arrival_s=arrival,
+                duration_s=arrival - epoch_start_s, staleness=0,
+                loss=loss, mix_weight=0.0)
+            if self.mode == "sync":
+                key = (cohort_key, replica)
+                self._round_weights[key] = (self._round_weights.get(key, 0.0)
+                                            + num_samples)
+                self._arrived += 1
+                self._round_last_arrival = arrival
+                # count per client; prune deferred to after the commit
+                self._consume(cohort_key, epoch, prune=False)
+            else:
+                self._buffer.append((tree, float(num_samples), {
+                    "record": record, "pulled_s": pulled_s,
+                    "cohort_key": cohort_key, "epoch": epoch}))
+        # fire flush points the window has fully covered
+        if self.mode == "async" and self._buffer and math.isfinite(bound):
+            self._advance_grid(bound)
+        if self.mode == "sync" and self._arrived == self._expected:
+            mail.extend(self._commit_round())
+        return mail
+
+    def _commit_round(self) -> List[Mail]:
+        r = self._round_idx
+        t = self._round_last_arrival
+        if not self._round_weights:
+            self.agg.commit()                      # empty: carry forward
+            self.metrics.record_skipped_round(r, t)
+        else:
+            for (cohort_key, replica), weight in sorted(
+                    self._round_weights.items()):
+                tree = self.fleet.cohorts[cohort_key].snapshots[r][replica]
+                self.agg.submit(tree, weight)
+            self._round_weights.clear()
+            self.fleet.set_global(self.agg.commit())
+            self.metrics.record_barrier(r, t)
+            for cohort_key in self.fleet.cohorts:  # snapshots now consumed
+                self._maybe_prune(cohort_key)
+        self._arrived = 0
+        self._round_idx = r + 1
+        if r + 1 < self.num_rounds:
+            return [Mail(dst_shard=s, time=t, kind=EventKind.ROUND_START,
+                         key="", payload={"round_idx": r + 1})
+                    for s in range(self.num_shards)]
+        return []
 
     # -- entry point -----------------------------------------------------
 
+    def _peer_on_chunk(self):
+        """Glue for the peer-driven executor: buffer record shipments and
+        forward everything strictly below the advancing safe frontier to
+        the ordinary window replay — same code path, same replay order,
+        bit-identical results."""
+        pend_contribs: List[tuple] = []
+        pend_starts: List[tuple] = []
+        pend_migs: List[tuple] = []
+
+        def on_chunk(frontier, chunks):
+            for recs in chunks.values():
+                pend_contribs.extend(recs["contribs"])
+                pend_starts.extend(recs["epoch_starts"])
+                pend_migs.extend(recs["migrations"])
+            if frontier is None:
+                return
+            take_c = [c for c in pend_contribs if c[0] < frontier]
+            take_s = [s for s in pend_starts if s[0] < frontier]
+            pend_contribs[:] = [c for c in pend_contribs
+                                if c[0] >= frontier]
+            pend_starts[:] = [s for s in pend_starts if s[0] >= frontier]
+            migs, pend_migs[:] = list(pend_migs), []
+            self._on_window(frontier, {0: {
+                "contribs": take_c, "epoch_starts": take_s,
+                "migrations": migs}})
+        return on_chunk
+
+    def _run_overlapped(self) -> None:
+        """Async + worker processes: shard timing runs in the workers, so
+        the coordinator thread spends its time blocked on pipes (GIL
+        released) — the numerics replay can trail one window behind in a
+        thread and overlap almost completely. The replay order is the
+        same window FIFO the inline path uses, so results are
+        bit-identical."""
+        q: "queue.Queue" = queue.Queue(maxsize=32)
+        errs: List[BaseException] = []
+
+        def consume():
+            while True:
+                item = q.get()
+                if item is None:
+                    return
+                try:
+                    self._on_window(*item)
+                except BaseException as e:   # surfaced by _put / at join
+                    errs.append(e)
+                    return
+
+        th = threading.Thread(target=consume, daemon=True)
+        th.start()
+
+        def _put(item):
+            # never block forever on a full queue whose consumer died —
+            # re-check for a consumer error between bounded put attempts
+            while True:
+                if errs:
+                    raise errs[0]
+                try:
+                    q.put(item, timeout=1.0)
+                    return
+                except queue.Full:
+                    continue
+
+        def enqueue(bound, records):
+            _put((bound, records))
+            return []
+
+        self.coordinator.run(enqueue)
+        _put(None)
+        th.join()
+        if errs:
+            raise errs[0]
+
     def run(self, rounds: int) -> FleetResult:
         self.num_rounds = rounds
-        if self.mode == "sync":
-            self._start_round(0)
+        self._expected = self.fleet.num_clients
+        self._flush_dt = (self.flush_interval_s
+                          if self.flush_interval_s is not None
+                          else self._min_batch_time())
+        shards = self._build_shards(rounds)
+        if self.mode == "async":
+            for s in shards:
+                s.bootstrap_async()
+        # peer-driven mesh when every shard gets its own worker (async):
+        # one semaphore barrier per window instead of parent roundtrips
+        use_peer = (self.workers is not None and self.mode == "async"
+                    and self.num_shards > 1
+                    and self.workers >= self.num_shards)
+        if use_peer:
+            self.coordinator = PeerShardedEngine(
+                shards, lookahead=self._lookahead())
         else:
-            for c in self.fleet.clients.values():
-                self._start_epoch(c, 0, self._downlink_time(c))
-        self.engine.run()
+            executor = (ProcessExecutor(shards, self.workers)
+                        if self.workers else SerialExecutor(shards))
+            lookahead = self._lookahead() if self.num_shards > 1 else None
+            self.coordinator = ShardedEngine(shards, lookahead=lookahead,
+                                             executor=executor)
+            if self.mode == "sync":
+                for s in range(self.num_shards):
+                    self.coordinator.post(Mail(
+                        dst_shard=s, time=0.0, kind=EventKind.ROUND_START,
+                        key="", payload={"round_idx": 0}))
+        wall0 = time.perf_counter()
+        try:
+            if use_peer:
+                self.coordinator.run(self._peer_on_chunk())
+            elif self.workers and self.mode == "async":
+                self._run_overlapped()
+            else:
+                self.coordinator.run(self._on_window)
+            # drain any tail of buffered async updates past the last grid
+            if self.mode == "async" and self._buffer:
+                self._grid_k += 1
+                self._fire_flush(self._grid_k * self._flush_dt)
+            stats = self.coordinator.stats()
+            # uniform wall accounting: windows + replay + flush drain,
+            # whichever path ran them
+            stats["wall_s"] = time.perf_counter() - wall0
+            stats["events_per_sec"] = (stats["events_processed"]
+                                       / stats["wall_s"]
+                                       if stats["wall_s"] > 0 else 0.0)
+        finally:
+            self.coordinator.close()
+        by_edge = {e["edge_id"]: e for e in stats.pop("edges")}
         return FleetResult(
             mode=self.mode,
             rounds=self.metrics.build_rounds(),
             migration_summary=self.metrics.migration_summary(),
-            engine_stats=self.engine.stats(),
-            edge_stats=[e.stats() for e in self.edges.values()],
+            engine_stats=stats,
+            edge_stats=[by_edge[eid] for eid in self.edge_order],
             final_params=self.agg.params,
             metrics=self.metrics)

@@ -7,7 +7,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.fedavg_agg import fedavg_agg, fedavg_agg_ref
+from repro.kernels.fedavg_agg import (fedavg_agg, fedavg_agg_mix,
+                                      fedavg_agg_mix_ref, fedavg_agg_ref,
+                                      fedavg_mix_tree, has_compiled_pallas,
+                                      resolve_interpret)
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.int8_codec import (dequantize, dequantize_ref, quantize,
                                       quantize_ref)
@@ -110,6 +113,56 @@ def test_fedavg_agg_sweep(E, n, dt):
     tol = 2e-2 if dt == jnp.bfloat16 else 1e-5
     np.testing.assert_allclose(np.asarray(a, np.float32),
                                np.asarray(b, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("E,n,dt", [(1, 4096, jnp.float32),
+                                    (4, 10000, jnp.float32),
+                                    (8, 4096, jnp.bfloat16),
+                                    (13, 12288, jnp.float32)])
+def test_fedavg_agg_mix_sweep(E, n, dt):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    g = jax.random.normal(ks[0], (n,), dt)
+    x = jax.random.normal(ks[1], (E, n), dt)
+    w = jax.random.uniform(ks[2], (E,), jnp.float32, 0.0, 0.5 / E)
+    a = fedavg_agg_mix(g, x, w, interpret=True)
+    b = fedavg_agg_mix_ref(g, x, w)
+    tol = 2e-2 if dt == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=tol)
+
+
+def test_fedavg_agg_mix_equals_sequential_mixing():
+    """b_i = a_i * prod_{j>i}(1-a_j) makes one kernel call equal a chain
+    of (1-a) g + a u mixes — the AsyncAggregator batching identity."""
+    rng = np.random.default_rng(0)
+    g = rng.normal(size=5000).astype(np.float32)
+    x = rng.normal(size=(4, 5000)).astype(np.float32)
+    alphas = [0.3, 0.12, 0.5, 0.08]
+    seq = g.copy()
+    for i, a in enumerate(alphas):
+        seq = (1 - a) * seq + a * x[i]
+    eff = [a * np.prod([1.0 - b for b in alphas[i + 1:]])
+           for i, a in enumerate(alphas)]
+    out = fedavg_agg_mix(jnp.asarray(g), jnp.asarray(x),
+                         jnp.asarray(eff, jnp.float32), interpret=True)
+    np.testing.assert_allclose(np.asarray(out), seq, atol=1e-5)
+
+
+def test_fedavg_mix_tree_non_float_leaves_pass_through():
+    g = {"w": np.ones((64, 64), np.float32), "step": np.array(7)}
+    ups = [{"w": np.zeros((64, 64), np.float32), "step": np.array(9)}]
+    out = fedavg_mix_tree(g, ups, [0.25])
+    assert out["step"] == 7                      # ints never mixed
+    np.testing.assert_allclose(out["w"], 0.75, atol=1e-6)
+
+
+def test_interpret_autodetect_matches_backend():
+    """interpret=None must resolve to the interpreter exactly when no
+    compiled-Pallas platform is available (CPU)."""
+    expected = jax.default_backend() not in ("tpu", "gpu")
+    assert resolve_interpret(None) is expected
+    assert has_compiled_pallas() is (not expected)
+    assert resolve_interpret(True) is True and resolve_interpret(False) is False
 
 
 # -- int8 codec ---------------------------------------------------------------
