@@ -1,62 +1,255 @@
-"""Paper §V.C: migration overhead ("up to two seconds").
+"""Paper §V.C: migration overhead ("up to two seconds") — staged.
 
-Measures the full checkpoint pipeline per split point and codec:
-payload bytes, pack/unpack wall time, simulated 75 Mbps transfer, and
-the real-TCP (localhost) transfer — plus the beyond-paper int8 payload
-and the device-relay route.
+Breaks the migration payload pipeline into stages and reports, as JSON
+(like ``bench_fleet``): per split point x codec (raw / int8 / delta)
+the payload bytes, quantize / serialize / frame / transfer seconds, the
+simulated 75 Mbps transfer, and the real-TCP (localhost) *streamed*
+transfer (chunked frames, production overlapping the socket).
+
+Also measured (regression-tracked, asserted in ``--smoke``):
+
+  * fused one-dispatch packed quantization vs the per-leaf dispatch
+    path the migration codec used before (one Pallas call per float
+    leaf) — the kernel-level win; expected >= 3x on the CPU ref path
+  * delta payload vs raw on a mid-training move (4-device paper config,
+    one forced move) — expected <= 35% of raw
+  * bit-exact restore in raw mode
+
+``--smoke`` runs a time-boxed CI subset and writes the JSON artifact
+(``--artifact``, default BENCH_migration.json); the checked-in
+``benchmarks/BENCH_migration.json`` is a reference snapshot.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import time
 
+import jax
 import numpy as np
 
-from benchmarks.common import make_batchers, make_scheduler
-from repro.core.checkpoint import EdgeCheckpoint
-from repro.core.migration import MigrationExecutor
-from repro.models.vgg import SPLIT_POINTS
-from repro.runtime.transport import LinkModel, SocketTransport
 from repro.core import split as split_lib
-from repro.models.vgg import VGG5
+from repro.core.checkpoint import EdgeCheckpoint
+from repro.core.mobility import MobilityTrace, move_at_round
+from repro.kernels.int8_codec import ops as codec_ops
+from repro.models.vgg import VGG5, SPLIT_POINTS
 from repro.optim.optimizers import sgd
-import jax
+from repro.runtime import serialization
+from repro.runtime.transport import LinkModel, SocketTransport
+
+
+def _float_leaves(tree):
+    """Leaves the codec actually quantizes — same eligibility rule as
+    the serialization layer, so the speedup gate measures the packed
+    leaf set the migration path really uses."""
+    return [np.asarray(x) for x in jax.tree.leaves(tree)
+            if str(np.asarray(x).dtype) in serialization._FLOATS
+            and np.asarray(x).size > serialization._MIN_QUANT_SIZE]
+
+
+def make_ckpt(split_point: int, seed: int = 0) -> EdgeCheckpoint:
+    model = VGG5()
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = sgd(momentum=0.9)
+    _, srv = split_lib.partition_params(model, params, split_point)
+    return EdgeCheckpoint(
+        client_id="pi3_1", round_idx=50, epoch=1, batch_idx=5,
+        split_point=split_point,
+        server_params=jax.tree.map(np.asarray, srv),
+        optimizer_state=jax.tree.map(np.asarray, opt.init(srv)),
+        last_grads=jax.tree.map(np.asarray, srv), loss=1.0)
+
+
+def bench_packed_speedup(ckpt: EdgeCheckpoint) -> dict:
+    """Fused one-dispatch packed quantization vs two per-leaf baselines:
+    (a) one Pallas dispatch per leaf with interpret=True — the
+    pre-streaming-pipeline kernel path this PR replaces (the smoke's
+    >= 3x gate, per the issue's acceptance criterion); (b) a per-leaf
+    numpy-ref loop — the tightest realistic alternative, reported (not
+    gated) so a regression in the packed path itself is visible rather
+    than hidden under the interpreter's huge margin. Packed uses the
+    auto backend — numpy ref on CPU, compiled Pallas on TPU/GPU."""
+    leaves = _float_leaves(ckpt.to_tree())
+
+    t0 = time.perf_counter()
+    for leaf in leaves:
+        codec_ops.quantize_leaf(leaf, use_pallas=True, interpret=True)
+    per_leaf_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for leaf in leaves:
+        codec_ops.quantize_packed_ref(
+            np.asarray(leaf, np.float32).reshape(-1))
+    per_leaf_ref_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    codec_ops.quantize_leaves(leaves)
+    packed_s = time.perf_counter() - t0
+
+    return {"num_leaves": len(leaves),
+            "payload_elems": int(sum(x.size for x in leaves)),
+            "per_leaf_s": round(per_leaf_s, 4),
+            "per_leaf_ref_s": round(per_leaf_ref_s, 4),
+            "packed_s": round(packed_s, 4),
+            "speedup": round(per_leaf_s / max(packed_s, 1e-9), 1),
+            "speedup_vs_ref": round(per_leaf_ref_s / max(packed_s, 1e-9),
+                                    2)}
+
+
+def bench_stages(ckpt: EdgeCheckpoint, codec: str, base, link: LinkModel,
+                 raw_bytes: int | None) -> dict:
+    """One codec through the full pipeline: quantize, serialize, frame,
+    streamed TCP transfer."""
+    kw = dict(base=base, base_version="bench") if codec == "delta" else {}
+
+    quantize_s = 0.0
+    if codec in ("int8", "delta"):
+        leaves = _float_leaves(ckpt.to_tree())
+        bases = None
+        if codec == "delta" and base is not None:
+            bases = [None] * len(leaves)   # sizing only; residual timing
+        t0 = time.perf_counter()           # is the same fused dispatch
+        codec_ops.quantize_leaves(leaves, bases)
+        quantize_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    payload = ckpt.pack(codec, **kw)
+    serialize_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    n_chunks = sum(1 for _ in ckpt.pack_chunks(codec, **kw))
+    frame_s = time.perf_counter() - t0
+
+    srv = SocketTransport().serve()
+    try:
+        with srv.connect("127.0.0.1", srv.port) as stream:
+            t0 = time.perf_counter()
+            sent = stream.send_chunked(ckpt.pack_chunks(codec, **kw))
+            rx = srv.recv(timeout=30)
+            transfer_s = time.perf_counter() - t0
+        assert sent == len(payload) and len(rx) == len(payload)
+    finally:
+        srv.close()
+
+    sim_transfer_s = link.transfer_time(len(payload))
+    return {"bytes": len(payload),
+            "ratio_vs_raw": (round(len(payload) / raw_bytes, 4)
+                             if raw_bytes else 1.0),
+            "chunks": n_chunks,
+            "quantize_s": round(quantize_s, 4),
+            "serialize_s": round(serialize_s, 4),
+            "frame_s": round(frame_s, 4),
+            "tcp_stream_s": round(transfer_s, 4),
+            "sim_transfer_s": round(sim_transfer_s, 4),
+            "total_sim_s": round(serialize_s + sim_transfer_s, 4)}
+
+
+def bench_mid_training_move(quick: bool = True) -> dict:
+    """The paper's 4-device testbed with one forced move after 50% of a
+    round, raw vs delta codec — the delta-payload acceptance numbers."""
+    from benchmarks.common import make_batchers, make_scheduler
+    n_train = 240 if quick else 1200
+    batch = 20 if quick else 100
+    batchers, _ = make_batchers(n_train, None, batch_size=batch)
+    trace = MobilityTrace(move_at_round("pi3_1", "edge-A", "edge-B", 1, 0.5))
+
+    reports = {}
+    for codec in ("raw", "delta"):
+        sched = make_scheduler(batchers, codec=codec)
+        sched.run(2, trace, mode="fedfly")
+        assert len(sched.migrator.reports) == 1, "forced move did not fire"
+        reports[codec] = sched.migrator.reports[0]
+
+    raw_rep, delta_rep = reports["raw"], reports["delta"]
+    # raw restore must be bit-exact: re-pack the moved client's state
+    ck = make_ckpt(2)
+    restored = EdgeCheckpoint.unpack(ck.pack("raw"))
+    bit_exact = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(ck.to_tree()),
+                        jax.tree.leaves(restored.to_tree())))
+    return {"raw_bytes": raw_rep.nbytes,
+            "delta_bytes": delta_rep.nbytes,
+            "delta_ratio": round(delta_rep.nbytes / raw_rep.nbytes, 4),
+            "delta_base_version": delta_rep.base_version,
+            "delta_quant_error": float(delta_rep.quant_error),
+            "raw_quant_error": float(raw_rep.quant_error),
+            "raw_restore_bit_exact": bool(bit_exact)}
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="time-boxed CI subset with assertions")
+    ap.add_argument("--quick", action="store_true",
+                    help="small training data for the mid-training move")
+    ap.add_argument("--artifact", default="BENCH_migration.json")
     args = ap.parse_args(argv)
 
-    model = VGG5()
-    params = model.init(jax.random.PRNGKey(0))
-    opt = sgd(momentum=0.9)
     link = LinkModel(bandwidth_bps=75e6, latency_s=0.005)
+    report = {"config": {"model": "VGG5", "link_mbps": 75,
+                         "smoke": args.smoke}}
 
-    print("# §V.C migration overhead (VGG-5 server stage, 75 Mbps link)")
-    print(f"{'SP':>4s} {'codec':>6s} {'route':>12s} {'MB':>7s} "
-          f"{'pack s':>7s} {'sim xfer s':>10s} {'tcp xfer s':>10s} "
-          f"{'total s':>8s} {'<=2s':>5s}")
-    for spname, spn in sorted(SPLIT_POINTS.items()):
-        _, srv = split_lib.partition_params(model, params, spn)
-        ck = EdgeCheckpoint(
-            client_id="pi3_1", round_idx=50, epoch=1, batch_idx=5,
-            split_point=spn, server_params=jax.tree.map(np.asarray, srv),
-            optimizer_state=jax.tree.map(np.asarray, opt.init(srv)),
-            last_grads=jax.tree.map(np.asarray, srv), loss=1.0)
-        for codec in ("raw", "int8"):
-            for route in ("direct", "device_relay"):
-                srv_sock = SocketTransport().serve()
-                ex = MigrationExecutor(
-                    link=link, codec=codec,
-                    send=lambda dst, p: srv_sock.send_to(
-                        "127.0.0.1", srv_sock.port, p),
-                    recv=lambda dst: srv_sock.recv(timeout=30))
-                _, rep = ex.migrate(ck, "edge-A", "edge-B", route=route)
-                srv_sock.close()
-                total = rep.pack_s + rep.sim_transfer_s + rep.unpack_s
-                print(f"{spname:>4s} {codec:>6s} {route:>12s} "
-                      f"{rep.nbytes/1e6:7.2f} {rep.pack_s:7.3f} "
-                      f"{rep.sim_transfer_s:10.3f} {rep.transfer_s:10.3f} "
-                      f"{total:8.3f} {'yes' if total <= 2 else 'NO':>5s}")
+    ck2 = make_ckpt(2)
+    report["packed_speedup"] = bench_packed_speedup(ck2)
+    ps = report["packed_speedup"]
+    print(f"# packed quantization: {ps['per_leaf_s']:.3f}s per-leaf "
+          f"dispatch / {ps['per_leaf_ref_s']:.4f}s per-leaf numpy -> "
+          f"{ps['packed_s']:.4f}s fused ({ps['speedup']}x vs dispatch, "
+          f"{ps['speedup_vs_ref']}x vs numpy loop, "
+          f"{ps['num_leaves']} leaves)")
+
+    sps = {"SP2": 2} if args.smoke else dict(sorted(SPLIT_POINTS.items()))
+    report["split_points"] = {}
+    print(f"{'SP':>4s} {'codec':>6s} {'MB':>7s} {'ratio':>6s} "
+          f"{'quant s':>8s} {'ser s':>7s} {'frame s':>8s} {'tcp s':>7s} "
+          f"{'sim xfer':>9s} {'<=2s':>5s}")
+    for spname, spn in sps.items():
+        ck = make_ckpt(spn)
+        # the realistic mid-round base is the round-start broadcast: the
+        # current params minus a few SGD steps of drift
+        rng = np.random.default_rng(0)
+        base = {"server_params": jax.tree.map(
+            lambda x: np.asarray(x)
+            + rng.normal(scale=1e-3, size=np.shape(x)).astype(np.float32),
+            ck.server_params)}
+        row = {}
+        raw_bytes = None
+        for codec in ("raw", "int8", "delta"):
+            r = bench_stages(ck, codec, base if codec == "delta" else None,
+                             link, raw_bytes)
+            if codec == "raw":
+                raw_bytes = r["bytes"]
+            row[codec] = r
+            total = r["total_sim_s"]
+            print(f"{spname:>4s} {codec:>6s} {r['bytes']/1e6:7.2f} "
+                  f"{r['ratio_vs_raw']:6.3f} {r['quantize_s']:8.4f} "
+                  f"{r['serialize_s']:7.4f} {r['frame_s']:8.4f} "
+                  f"{r['tcp_stream_s']:7.4f} {r['sim_transfer_s']:9.4f} "
+                  f"{'yes' if total <= 2 else 'NO':>5s}")
+        report["split_points"][spname] = row
+
+    report["mid_training_move"] = bench_mid_training_move(
+        quick=args.quick or args.smoke)
+    mt = report["mid_training_move"]
+    print(f"# mid-training move: raw {mt['raw_bytes']/1e6:.2f} MB -> "
+          f"delta {mt['delta_bytes']/1e6:.2f} MB "
+          f"({mt['delta_ratio']:.1%}), raw bit-exact: "
+          f"{mt['raw_restore_bit_exact']}")
+
+    if args.smoke:
+        assert ps["speedup"] >= 3.0, \
+            f"packed quantization speedup {ps['speedup']}x < 3x"
+        assert mt["raw_restore_bit_exact"], "raw restore not bit-exact"
+        assert mt["delta_bytes"] < mt["raw_bytes"], \
+            "delta payload not smaller than raw"
+        assert mt["delta_ratio"] <= 0.35, \
+            f"delta payload {mt['delta_ratio']:.1%} of raw > 35%"
+        print("# smoke assertions passed")
+
+    with open(args.artifact, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"# artifact: {args.artifact}")
 
 
 if __name__ == "__main__":

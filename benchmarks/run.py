@@ -31,7 +31,7 @@ def main(argv=None) -> None:
     print("\n" + "=" * 72)
     bench_split_points.main(["--n-train", str(n_train)])
     print("\n" + "=" * 72)
-    bench_overhead.main([])
+    bench_overhead.main(["--quick"] if args.quick else [])
     print("\n" + "=" * 72)
     bench_accuracy.main(["--n-train", str(n_train),
                          "--rounds", str(acc_rounds),

@@ -80,15 +80,34 @@ class EdgeCheckpoint:
             rng_seed=int(s["rng_seed"]),
         )
 
-    def pack(self, codec: str = "raw") -> bytes:
-        return serialization.pack_pytree(self.to_tree(), codec=codec)
+    def pack(self, codec: str = "raw", *, base=None,
+             base_version: Optional[str] = None) -> bytes:
+        """``base`` is a (possibly partial) tree mirroring ``to_tree()``
+        — e.g. ``{"server_params": <round-start stage>}`` — that the
+        delta codec encodes residuals against."""
+        return serialization.pack_pytree(self.to_tree(), codec=codec,
+                                         base=base,
+                                         base_version=base_version)
+
+    def pack_chunks(self, codec: str = "raw", *, base=None,
+                    base_version: Optional[str] = None):
+        """Incremental serialization for streamed transfers
+        (``FrameStream.send_chunked``)."""
+        return serialization.pack_pytree_chunks(
+            self.to_tree(), codec=codec, base=base,
+            base_version=base_version)
 
     @classmethod
-    def unpack(cls, data: bytes) -> "EdgeCheckpoint":
-        return cls.from_tree(serialization.unpack_pytree(data))
+    def unpack(cls, data: bytes, *, base=None) -> "EdgeCheckpoint":
+        return cls.from_tree(serialization.unpack_pytree(data, base=base))
 
-    def nbytes(self, codec: str = "raw") -> int:
-        return len(self.pack(codec))
+    @staticmethod
+    def base_version_of(data: bytes) -> Optional[str]:
+        """Which base version a received payload needs (None: none)."""
+        return serialization.peek_base_version(data)
+
+    def nbytes(self, codec: str = "raw", **kw) -> int:
+        return len(self.pack(codec, **kw))
 
     def replace(self, **kw) -> "EdgeCheckpoint":
         return dataclasses.replace(self, **kw)

@@ -13,6 +13,14 @@ destination. Byte movement goes through one of:
   transport     — an actual byte channel (TCP socket / in-proc queue) when
                   the caller wires one in; wall-clock timed.
 
+Codecs: ``raw`` (bit-exact), ``int8`` (per-leaf quantization), and
+``delta`` — int8 residuals against the newest base version the
+destination edge has synced (``BaseVersionRegistry``); an edge holding
+the round-k broadcast receives only the drift since round k. A
+``stream_send`` hook switches packing to the chunked pipeline
+(``pack_chunks`` → ``FrameStream.send_chunked``): serialization overlaps
+the socket transfer instead of completing before the first byte moves.
+
 Every migration returns a ``MigrationReport`` with real wall-clock pack/
 transfer/unpack times *and* the simulated-testbed transfer time from the
 link model (75 Mbps Wi-Fi by default) — the quantity the paper's "≤2 s
@@ -22,13 +30,14 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Iterable, Optional
 
 import jax
 import numpy as np
 
 from repro.core.checkpoint import EdgeCheckpoint
 from repro.runtime import serialization
+from repro.runtime.checkpoint_manager import BaseVersionRegistry
 from repro.runtime.transport import LinkModel
 
 Params = Any
@@ -47,6 +56,8 @@ class MigrationReport:
     unpack_s: float
     sim_transfer_s: float      # link-model time (the paper's overhead)
     quant_error: float = 0.0   # max abs param error introduced by codec
+    base_version: Optional[str] = None   # delta: base the payload rides on
+    overlapped: bool = False   # pack streamed into the transfer
 
     @property
     def wall_total_s(self) -> float:
@@ -62,31 +73,53 @@ class MigrationExecutor:
 
     def __init__(self, link: LinkModel = LinkModel(), codec: str = "raw",
                  send: Optional[Callable[[str, bytes], None]] = None,
-                 recv: Optional[Callable[[str], bytes]] = None):
+                 recv: Optional[Callable[[str], bytes]] = None,
+                 base_registry: Optional[BaseVersionRegistry] = None,
+                 stream_send: Optional[Callable[[str, Iterable[bytes]],
+                                                int]] = None):
         self.link = link
         self.codec = codec
         self._send = send
         self._recv = recv
+        self._stream_send = stream_send
+        self.base_registry = base_registry
         self.reports: list[MigrationReport] = []
 
     def migrate(self, ckpt: EdgeCheckpoint, src_edge: str, dst_edge: str,
-                route: str = "direct") -> tuple[EdgeCheckpoint, MigrationReport]:
-        t0 = time.perf_counter()
-        payload = ckpt.pack(self.codec)
-        t1 = time.perf_counter()
+                route: str = "direct", *, base: Params = None,
+                base_version: Optional[str] = None
+                ) -> tuple[EdgeCheckpoint, MigrationReport]:
+        if (self.codec == "delta" and base is None
+                and self.base_registry is not None):
+            base, base_version = self.base_registry.base_for(dst_edge)
 
-        if self._send is not None and self._recv is not None:
-            self._send(dst_edge, payload)
+        overlapped = self._stream_send is not None and self._recv is not None
+        t0 = time.perf_counter()
+        if overlapped:
+            # chunked pipeline: serialization overlaps the socket send,
+            # so there is no separate pack phase to clock
+            nbytes = self._stream_send(
+                dst_edge, ckpt.pack_chunks(self.codec, base=base,
+                                           base_version=base_version))
+            t1 = time.perf_counter()
             payload_rx = self._recv(dst_edge)
         else:
-            payload_rx = payload
+            payload = ckpt.pack(self.codec, base=base,
+                                base_version=base_version)
+            nbytes = len(payload)
+            t1 = time.perf_counter()
+            if self._send is not None and self._recv is not None:
+                self._send(dst_edge, payload)
+                payload_rx = self._recv(dst_edge)
+            else:
+                payload_rx = payload
         t2 = time.perf_counter()
 
-        restored = EdgeCheckpoint.unpack(payload_rx)
+        restored = EdgeCheckpoint.unpack(payload_rx, base=base)
         t3 = time.perf_counter()
 
         hops = 2 if route == "device_relay" else 1
-        sim_transfer = hops * self.link.transfer_time(len(payload))
+        sim_transfer = hops * self.link.transfer_time(nbytes)
 
         qerr = 0.0
         if self.codec != "raw":
@@ -99,9 +132,12 @@ class MigrationExecutor:
 
         report = MigrationReport(
             client_id=ckpt.client_id, src_edge=src_edge, dst_edge=dst_edge,
-            nbytes=len(payload), codec=self.codec, route=route,
-            pack_s=t1 - t0, transfer_s=t2 - t1, unpack_s=t3 - t2,
-            sim_transfer_s=sim_transfer, quant_error=qerr)
+            nbytes=nbytes, codec=self.codec, route=route,
+            # overlapped: pack rode inside the transfer, clock it there
+            pack_s=0.0 if overlapped else t1 - t0,
+            transfer_s=t2 - (t0 if overlapped else t1), unpack_s=t3 - t2,
+            sim_transfer_s=sim_transfer, quant_error=qerr,
+            base_version=base_version, overlapped=overlapped)
         self.reports.append(report)
         return restored, report
 

@@ -36,6 +36,7 @@ from repro.core.checkpoint import EdgeCheckpoint
 from repro.core.migration import MigrationExecutor, MigrationReport
 from repro.core.mobility import MobilityTrace
 from repro.optim.optimizers import Optimizer
+from repro.runtime.checkpoint_manager import BaseVersionRegistry
 from repro.runtime.cluster import (Device, EdgeServer, ClientServerState,
                                    StageCostModel, batch_time_s)
 from repro.runtime.transport import LinkModel
@@ -90,7 +91,14 @@ class FedFlyScheduler:
         self.sp = split_point
         self.lr_schedule = lr_schedule
         self.link = link
-        self.migrator = MigrationExecutor(link=link, codec=migration_codec)
+        # delta codec: every edge receives the round broadcast, so each
+        # round's server-stage partition is a base version every edge
+        # holds — migrations ship only the drift since round start
+        self.base_registry = (BaseVersionRegistry()
+                              if migration_codec == "delta" else None)
+        self._base_counter = 0
+        self.migrator = MigrationExecutor(link=link, codec=migration_codec,
+                                          base_registry=self.base_registry)
         self.migration_route = migration_route
         self.cost_model = StageCostModel()
         self.seed = seed
@@ -115,6 +123,21 @@ class FedFlyScheduler:
             edge = self.edges[dev.edge_id]
             edge.clients[dev.client_id] = ClientServerState(
                 srv_params=s, srv_opt=self.optimizer.init(s))
+        self._publish_base()
+
+    def _publish_base(self):
+        """Register this broadcast's server-stage partition as a synced
+        base version on every edge (they all just received it): the
+        delta migration codec encodes residuals against it."""
+        if self.base_registry is None:
+            return
+        _, s = split_lib.partition_params(self.model, self.global_params,
+                                          self.sp)
+        version = f"v{self._base_counter}"
+        self._base_counter += 1
+        self.base_registry.publish(
+            version, {"server_params": jax.tree.map(np.asarray, s)})
+        self.base_registry.mark_all_synced(self.edges.keys(), version)
 
     def _build_step(self):
         model, sp, opt = self.model, self.sp, self.optimizer
@@ -277,6 +300,7 @@ class FedFlyScheduler:
             dev.dev_params = d
             state = self.edges[dev.edge_id].clients[dev.client_id]
             state.srv_params = s
+        self._publish_base()
 
     def run(self, num_rounds: int, trace: Optional[MobilityTrace] = None,
             mode: str = "fedfly",

@@ -1,3 +1,8 @@
-from repro.kernels.int8_codec.int8_codec import dequantize, quantize  # noqa: F401
-from repro.kernels.int8_codec.ops import quantize_leaf, roundtrip  # noqa: F401
-from repro.kernels.int8_codec.ref import dequantize_ref, quantize_ref  # noqa: F401
+from repro.kernels.int8_codec.int8_codec import (  # noqa: F401
+    dequantize, dequantize_packed, quantize, quantize_packed)
+from repro.kernels.int8_codec.ops import (  # noqa: F401
+    dequantize_leaves, pack_leaves, quantize_leaf, quantize_leaves,
+    roundtrip)
+from repro.kernels.int8_codec.ref import (  # noqa: F401
+    dequantize_packed_ref, dequantize_ref, quantize_packed_ref,
+    quantize_ref)

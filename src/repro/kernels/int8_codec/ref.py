@@ -1,13 +1,26 @@
-"""Pure-jnp oracle: blockwise symmetric int8 quantization.
+"""Oracles: blockwise symmetric int8 quantization.
 
 Per BLOCK-element block: scale = max|x| / 127, q = round(x / scale).
 Matches the migration payload codec (runtime/serialization int8) but
 blockwise, which bounds the quantization error by the *local* dynamic
 range — tighter than the per-leaf scale the CPU codec uses.
+
+Two flavours:
+
+  ``quantize_ref``/``dequantize_ref``                — jnp, the kernel
+        test oracle (executes the same math the Pallas body does).
+  ``quantize_packed_ref``/``dequantize_packed_ref``  — pure numpy, the
+        CPU *production* path: when ``interpret=None`` auto-detect finds
+        no compiled-Pallas backend, the serialization layer runs these
+        instead of paying the Pallas interpreter's python grid loop.
+        ``base`` switches them to residual (delta) mode.
 """
 from __future__ import annotations
 
+from typing import Optional, Tuple
+
 import jax.numpy as jnp
+import numpy as np
 
 BLOCK = 1024
 
@@ -26,3 +39,69 @@ def dequantize_ref(q: jnp.ndarray, scale: jnp.ndarray, n: int,
                    block: int = BLOCK, dtype=jnp.float32):
     x = q.reshape(-1, block).astype(jnp.float32) * scale[:, None]
     return x.reshape(-1)[:n].astype(dtype)
+
+
+# -- pure-numpy packed path (CPU production, no device dispatch) ------------
+
+# rows per processing slab: keeps every temporary ~0.5 MB (cache-sized).
+# Whole-buffer numpy chains on a multi-MB payload allocate several
+# payload-sized temporaries per op and run ~4x slower (allocator +
+# cache thrash); slab processing with out= ops is what makes the fused
+# CPU path beat a per-leaf loop.
+_SLAB_ROWS = 128
+
+
+def quantize_packed_ref(x: np.ndarray, base: Optional[np.ndarray] = None,
+                        block: int = BLOCK) -> Tuple[np.ndarray, np.ndarray]:
+    """x (n,) float -> (q (n,) int8, scales (ceil(n/block),) f32);
+    quantizes ``x - base`` when a base buffer is given."""
+    n = x.shape[0]
+    R = -(-n // block)
+    q = np.empty(R * block, np.int8)
+    scales = np.empty(R, np.float32)
+    if n == 0:
+        return q, scales
+    xf = np.asarray(x)
+    bf = np.asarray(base) if base is not None else None
+    buf = np.empty((min(_SLAB_ROWS, R), block), np.float32)
+    for r0 in range(0, R, _SLAB_ROWS):
+        r1 = min(r0 + _SLAB_ROWS, R)
+        lo, hi = r0 * block, min(r1 * block, n)
+        xs = buf[:r1 - r0]
+        fl = xs.reshape(-1)
+        fl[:hi - lo] = xf[lo:hi]
+        if bf is not None:
+            fl[:hi - lo] -= np.asarray(bf[lo:hi], np.float32)
+        fl[hi - lo:] = 0.0                  # zero the padded tail
+        s = np.abs(xs).max(axis=1)
+        s /= 127.0
+        np.maximum(s, 1e-12, out=s)
+        np.divide(xs, s[:, None], out=xs)
+        np.rint(xs, out=xs)
+        np.clip(xs, -127, 127, out=xs)
+        q[lo:r1 * block] = fl
+        scales[r0:r1] = s
+    return q[:n], scales
+
+
+def dequantize_packed_ref(q: np.ndarray, scales: np.ndarray, n: int,
+                          base: Optional[np.ndarray] = None,
+                          dtype=np.float32, block: int = BLOCK) -> np.ndarray:
+    out = np.empty(n, np.float32)
+    if n == 0:
+        return out.astype(dtype, copy=False)
+    R = -(-n // block)
+    sc = np.asarray(scales, np.float32)
+    buf = np.empty((min(_SLAB_ROWS, R), block), np.float32)
+    for r0 in range(0, R, _SLAB_ROWS):
+        r1 = min(r0 + _SLAB_ROWS, R)
+        lo, hi = r0 * block, min(r1 * block, n)
+        xs = buf[:r1 - r0]
+        fl = xs.reshape(-1)
+        fl[:hi - lo] = q[lo:hi]
+        fl[hi - lo:] = 0.0
+        np.multiply(xs, sc[r0:r1, None], out=xs)
+        if base is not None:
+            fl[:hi - lo] += np.asarray(base[lo:hi], np.float32)
+        out[lo:hi] = fl[:hi - lo]
+    return out.astype(dtype, copy=False)

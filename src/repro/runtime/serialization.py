@@ -1,30 +1,59 @@
-"""Versioned, ISA-independent pytree serialization.
+"""Versioned, ISA-independent pytree serialization (the FFLY container).
 
 Format (little-endian):
-  magic b"FFLY" | u32 version | u64 header_len | header JSON | leaf blobs
+  magic b"FFLY" | u32 version | u64 header_len | header JSON | blobs
 
 The header holds the tree *skeleton* (nested dicts/lists/tuples with leaf
 indices) and per-leaf dtype/shape/codec. No pickle: checkpoints written on
 one host/ISA are readable on any other — this addresses the paper's
 "hardware heterogeneity" future-work item directly.
 
+Version history:
+  v1  raw + per-leaf int8 codecs. Still fully readable.
+  v2  adds the ``delta`` codec: every eligible float leaf is packed into
+      ONE flat buffer (BLOCK-aligned offsets, see
+      ``kernels.int8_codec.ops``) and int8-quantized in a single fused
+      dispatch — as a *residual* against a named base version where the
+      receiver already holds one, or against an implicit zero base
+      otherwise (plain blockwise int8). A leaf whose residual dynamic
+      range exceeds ``fallback_ratio`` x its own range would quantize
+      lossier than its value — it ships raw (bit-exact) instead. The
+      packed q/scale sections ride immediately after the header.
+
 Codecs:
   raw   — exact bytes (bit-exact roundtrip; default for migration)
   int8  — symmetric per-leaf int8 quantization of float leaves (4-8x
-          smaller payloads; a beyond-paper optimization of the 2 s
-          migration overhead, evaluated in benchmarks/bench_overhead.py)
+          smaller payloads, v1-compatible encoding)
+  delta — v2 packed residual encoding against ``base`` /
+          ``base_version`` (decoding needs the same base tree)
+
+``pack_pytree_chunks`` yields the container incrementally — header
+first, then the packed sections, then leaf blobs in bounded chunks — so
+blob production can overlap the socket transfer
+(``transport.FrameStream.send_chunked``) instead of serializing the
+whole payload before the first byte moves.
 """
 from __future__ import annotations
 
 import json
-from typing import Any, List, Tuple
+from typing import Any, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from repro.kernels.int8_codec import ops as codec_ops
+
 MAGIC = b"FFLY"
-VERSION = 1
+VERSION = 2
+READABLE_VERSIONS = (1, 2)
 
 _FLOATS = ("float16", "float32", "float64", "bfloat16")
+
+# leaves at or below this many elements ship raw: quantization savings
+# can't beat the per-leaf metadata, and tiny leaves are usually
+# bookkeeping whose exactness matters
+_MIN_QUANT_SIZE = 64
+
+_CHUNK = 1 << 20
 
 
 def _encode_skeleton(tree, leaves: List[np.ndarray]):
@@ -49,19 +78,31 @@ def _decode_skeleton(node, leaves):
     return leaves[node["i"]]
 
 
-def _leaf_bytes(arr: np.ndarray, codec: str) -> Tuple[dict, bytes]:
-    dtype = str(arr.dtype)
-    meta = {"dtype": dtype, "shape": list(arr.shape)}
-    if codec == "int8" and dtype in _FLOATS and arr.size > 64:
-        f32 = np.asarray(arr, np.float32)
-        scale = float(np.max(np.abs(f32))) / 127.0 or 1.0
-        q = np.clip(np.round(f32 / scale), -127, 127).astype(np.int8)
-        meta.update(codec="int8", scale=scale)
-        return meta, q.tobytes()
-    meta["codec"] = "raw"
-    if dtype == "bfloat16":
-        return meta, arr.view(np.uint16).tobytes()
-    return meta, arr.tobytes()
+def _align_base(node, base, out: List[Optional[np.ndarray]]):
+    """Walk the skeleton with a (possibly partial) base tree in parallel,
+    appending one entry per leaf index: the base array where the base
+    tree has a structurally matching leaf, else None. Missing dict keys,
+    length-mismatched sequences, and None subtrees all degrade to None —
+    the delta codec then falls back per leaf instead of failing."""
+    if node["t"] == "dict":
+        for k, child in node["v"].items():
+            _align_base(child, base.get(k) if isinstance(base, dict)
+                        else None, out)
+    elif node["t"] in ("list", "tuple"):
+        seq = (list(base) if isinstance(base, (list, tuple))
+               and len(base) == len(node["v"]) else [None] * len(node["v"]))
+        for child, b in zip(node["v"], seq):
+            _align_base(child, b, out)
+    else:
+        out.append(None if base is None else np.asarray(base))
+
+
+# -- per-leaf codecs (v1-compatible) ----------------------------------------
+
+def _raw_bytes(arr: np.ndarray) -> bytes:
+    if str(arr.dtype) == "bfloat16":
+        return np.ascontiguousarray(arr).view(np.uint16).tobytes()
+    return arr.tobytes()
 
 
 def _leaf_from_bytes(meta: dict, blob: bytes) -> np.ndarray:
@@ -76,45 +117,203 @@ def _leaf_from_bytes(meta: dict, blob: bytes) -> np.ndarray:
     if meta["dtype"] == "bfloat16":
         import ml_dtypes  # noqa: PLC0415
         return np.frombuffer(blob, np.uint16).view(
-            ml_dtypes.bfloat16).reshape(shape)
+            ml_dtypes.bfloat16).reshape(shape).copy()
     return np.frombuffer(blob, np.dtype(meta["dtype"])).reshape(shape).copy()
 
 
-def pack_pytree(tree: Any, codec: str = "raw") -> bytes:
+def _residual_lossy(arr: np.ndarray, base: np.ndarray,
+                    ratio: float) -> bool:
+    """max|x - base| > ratio * max|x|, computed in cache-sized chunks so
+    the fallback decision never materializes a leaf-sized residual
+    temporary (the quantizer builds the residual exactly once, later)."""
+    x = np.asarray(arr).reshape(-1)
+    b = np.asarray(base).reshape(-1)
+    rmax = xmax = 0.0
+    step = 1 << 17
+    for off in range(0, x.size, step):
+        xs = np.asarray(x[off:off + step], np.float32)
+        bs = np.asarray(b[off:off + step], np.float32)
+        xmax = max(xmax, float(np.max(np.abs(xs))))
+        rmax = max(rmax, float(np.max(np.abs(xs - bs))))
+    return rmax > ratio * xmax + 1e-12
+
+
+# -- pack -------------------------------------------------------------------
+
+def _chunks_of(blob: bytes) -> Iterator[bytes]:
+    for off in range(0, len(blob), _CHUNK):
+        yield blob[off:off + _CHUNK]
+
+
+def pack_pytree_chunks(tree: Any, codec: str = "raw", *,
+                       base: Any = None,
+                       base_version: Optional[str] = None,
+                       fallback_ratio: float = 1.0,
+                       use_pallas: Optional[bool] = None,
+                       interpret: Optional[bool] = None) -> Iterator[bytes]:
+    """Yield the FFLY container incrementally: header, packed q/scale
+    sections (delta), then leaf blobs in <= 1 MiB chunks. Consuming the
+    whole iterator produces exactly ``pack_pytree(...)``; feeding it to
+    ``FrameStream.send_chunked`` overlaps production with transfer."""
+    if codec not in ("raw", "int8", "delta"):
+        raise ValueError(f"unknown codec {codec!r}")
     leaves: List[np.ndarray] = []
     skeleton = _encode_skeleton(tree, leaves)
-    metas, blobs = [], []
-    for arr in leaves:
-        m, b = _leaf_bytes(arr, codec)
-        m["nbytes"] = len(b)
-        metas.append(m)
-        blobs.append(b)
-    header = json.dumps({"skeleton": skeleton, "leaves": metas,
-                         "codec": codec}).encode()
-    out = bytearray()
-    out += MAGIC
-    out += VERSION.to_bytes(4, "little")
-    out += len(header).to_bytes(8, "little")
-    out += header
-    for b in blobs:
-        out += b
-    return bytes(out)
+
+    base_leaves: List[Optional[np.ndarray]] = []
+    if codec == "delta":
+        _align_base(skeleton, base, base_leaves)
+
+    metas: List[dict] = []
+    packed_idx: List[int] = []       # leaf indices in the packed section
+    packed_bases: List[Optional[np.ndarray]] = []
+    for i, arr in enumerate(leaves):
+        dtype = str(arr.dtype)
+        meta = {"dtype": dtype, "shape": list(arr.shape)}
+        if (codec == "delta" and dtype in _FLOATS
+                and arr.size > _MIN_QUANT_SIZE):
+            b = base_leaves[i]
+            if (b is None or b.shape != arr.shape
+                    or str(b.dtype) not in _FLOATS):
+                b = None
+            if b is not None and _residual_lossy(arr, b, fallback_ratio):
+                # residual lossier than the value itself: ship the
+                # full leaf bit-exact instead (raw blob length ==
+                # arr.nbytes for every dtype incl. the bf16 u16 view)
+                meta.update(codec="raw", nbytes=int(arr.nbytes))
+                metas.append(meta)
+                continue
+            meta.update(codec="pq", vs_base=b is not None, nbytes=0)
+            packed_idx.append(i)
+            packed_bases.append(b)
+            metas.append(meta)
+            continue
+        if codec == "int8" and dtype in _FLOATS and arr.size > _MIN_QUANT_SIZE:
+            f32 = np.asarray(arr, np.float32)
+            scale = float(np.max(np.abs(f32))) / 127.0 or 1.0
+            meta.update(codec="int8", scale=scale, nbytes=arr.size)
+            metas.append(meta)
+            continue
+        meta.update(codec="raw", nbytes=int(arr.nbytes))
+        metas.append(meta)
+
+    header_obj = {"skeleton": skeleton, "leaves": metas, "codec": codec}
+    packed_leaves = [leaves[i] for i in packed_idx]
+    if codec == "delta":
+        # offsets from sizes alone — the flat buffer is materialized
+        # once, inside quantize_leaves below
+        offsets = codec_ops.leaf_offsets(packed_leaves)
+        n = int(offsets[-1])
+        header_obj["base_version"] = base_version
+        header_obj["packed"] = {
+            "n": n, "scales": codec_ops.num_scales(n),
+            "block": codec_ops.BLOCK, "leaves": packed_idx,
+            "offsets": [int(o) for o in offsets]}
+
+    header = json.dumps(header_obj).encode()
+    yield MAGIC + VERSION.to_bytes(4, "little") \
+        + len(header).to_bytes(8, "little")
+    yield header
+
+    if codec == "delta" and packed_idx:
+        # the fused one-dispatch quantization of the whole payload
+        q, scales, _ = codec_ops.quantize_leaves(
+            packed_leaves, packed_bases, use_pallas=use_pallas,
+            interpret=interpret)
+        yield from _chunks_of(q.tobytes())
+        yield scales.astype("<f4").tobytes()
+
+    for meta, arr in zip(metas, leaves):
+        if meta["codec"] == "pq":
+            continue
+        if meta["codec"] == "int8":
+            f32 = np.asarray(arr, np.float32)
+            q = np.clip(np.round(f32 / meta["scale"]), -127,
+                        127).astype(np.int8)
+            yield from _chunks_of(q.tobytes())
+        else:
+            yield from _chunks_of(_raw_bytes(arr))
 
 
-def unpack_pytree(data: bytes) -> Any:
+def pack_pytree(tree: Any, codec: str = "raw", *,
+                base: Any = None, base_version: Optional[str] = None,
+                fallback_ratio: float = 1.0,
+                use_pallas: Optional[bool] = None,
+                interpret: Optional[bool] = None) -> bytes:
+    return b"".join(pack_pytree_chunks(
+        tree, codec, base=base, base_version=base_version,
+        fallback_ratio=fallback_ratio, use_pallas=use_pallas,
+        interpret=interpret))
+
+
+# -- unpack -----------------------------------------------------------------
+
+def peek_base_version(data: bytes) -> Optional[str]:
+    """Base version id a delta payload was encoded against (None for
+    raw/int8 payloads) — the receiver checks it against its synced bases
+    before attempting to decode."""
+    header, _ = _read_header(data)
+    return header.get("base_version")
+
+
+def _read_header(data: bytes) -> Tuple[dict, int]:
     assert data[:4] == MAGIC, "bad magic"
     version = int.from_bytes(data[4:8], "little")
-    assert version == VERSION, f"unsupported version {version}"
+    assert version in READABLE_VERSIONS, f"unsupported version {version}"
     hlen = int.from_bytes(data[8:16], "little")
-    header = json.loads(data[16:16 + hlen].decode())
-    off = 16 + hlen
-    leaves = []
-    for meta in header["leaves"]:
+    return json.loads(data[16:16 + hlen].decode()), 16 + hlen
+
+
+def unpack_pytree(data: bytes, *, base: Any = None,
+                  use_pallas: Optional[bool] = None,
+                  interpret: Optional[bool] = None) -> Any:
+    header, off = _read_header(data)
+    metas = header["leaves"]
+    leaves: List[Optional[np.ndarray]] = [None] * len(metas)
+
+    packed = header.get("packed")
+    if packed is not None and packed["leaves"]:
+        n = packed["n"]
+        q = np.frombuffer(data, np.int8, count=n, offset=off)
+        off += n
+        scales = np.frombuffer(data, "<f4", count=packed["scales"],
+                               offset=off)
+        off += packed["scales"] * 4
+        idx = packed["leaves"]
+        offsets = np.asarray(packed["offsets"], np.int64)
+        pb: List[Optional[np.ndarray]] = [None] * len(idx)
+        if any(metas[i].get("vs_base") for i in idx):
+            if base is None:
+                raise ValueError(
+                    "delta payload encoded against base version "
+                    f"{header.get('base_version')!r} needs base=")
+            aligned: List[Optional[np.ndarray]] = []
+            _align_base(header["skeleton"], base, aligned)
+            for j, i in enumerate(idx):
+                if metas[i].get("vs_base"):
+                    b = aligned[i]
+                    if b is None or list(b.shape) != metas[i]["shape"]:
+                        raise ValueError(
+                            f"base tree is missing leaf {i} required to "
+                            "decode a delta payload")
+                    pb[j] = b
+        import ml_dtypes  # noqa: PLC0415
+        dts = [np.dtype(metas[i]["dtype"]) if metas[i]["dtype"] != "bfloat16"
+               else np.dtype(ml_dtypes.bfloat16) for i in idx]
+        decoded = codec_ops.dequantize_leaves(
+            q, scales, offsets, [tuple(metas[i]["shape"]) for i in idx],
+            dts, pb, use_pallas=use_pallas, interpret=interpret)
+        for i, arr in zip(idx, decoded):
+            leaves[i] = arr
+
+    for i, meta in enumerate(metas):
+        if meta["codec"] == "pq":
+            continue
         blob = data[off:off + meta["nbytes"]]
         off += meta["nbytes"]
-        leaves.append(_leaf_from_bytes(meta, blob))
+        leaves[i] = _leaf_from_bytes(meta, blob)
     return _decode_skeleton(header["skeleton"], leaves)
 
 
-def packed_size(tree: Any, codec: str = "raw") -> int:
-    return len(pack_pytree(tree, codec))
+def packed_size(tree: Any, codec: str = "raw", **kw) -> int:
+    return sum(len(c) for c in pack_pytree_chunks(tree, codec, **kw))

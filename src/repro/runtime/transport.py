@@ -6,6 +6,17 @@
                         over localhost in the integration tests.
 ``LinkModel``         — analytic timing for a link (the testbed's 75 Mbps
                         Wi-Fi), used by the simulated clock.
+
+Chunked frames: ``FrameStream.send_chunked`` streams a frame whose total
+length is not known up front — a producer thread drains a chunk iterator
+(e.g. ``serialization.pack_pytree_chunks``) into a bounded queue while
+the caller's thread writes to the socket, so leaf-blob production
+overlaps the transfer instead of serializing the whole checkpoint before
+the first byte moves. On the wire a chunked frame is the u64 sentinel
+``CHUNKED`` followed by u32-length-prefixed chunks and a zero-length
+terminator; the receiver reassembles it and delivers one payload through
+the same callback as an ordinary frame, so the two framings interleave
+freely on one connection.
 """
 from __future__ import annotations
 
@@ -14,7 +25,7 @@ import socket
 import struct
 import threading
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Iterable, Optional
 
 
 @dataclass(frozen=True)
@@ -46,6 +57,9 @@ class InProcTransport:
 
 
 _LEN = struct.Struct(">Q")
+_CLEN = struct.Struct(">I")
+CHUNKED = 0xFFFFFFFFFFFFFFFF      # u64 frame-length sentinel: chunked frame
+_SEND_QUEUE_DEPTH = 8             # producer runs at most this far ahead
 
 
 class FrameStream:
@@ -60,6 +74,63 @@ class FrameStream:
         self._conn.sendall(_LEN.pack(len(payload)))
         self._conn.sendall(payload)
         return len(payload)
+
+    def send_chunked(self, chunks: Iterable[bytes]) -> int:
+        """Stream one logical frame from a chunk iterator without knowing
+        its total size up front. A producer thread drains ``chunks`` into
+        a bounded queue while this thread writes to the socket — chunk
+        production (checkpoint serialization) overlaps the transfer.
+        Returns the payload byte count (excluding framing)."""
+        q: "queue.Queue[Optional[bytes]]" = queue.Queue(_SEND_QUEUE_DEPTH)
+        errs: list = []
+
+        def produce():
+            try:
+                for c in chunks:
+                    q.put(c)
+            except BaseException as e:   # re-raised on the caller thread
+                errs.append(e)
+            finally:
+                q.put(None)
+
+        th = threading.Thread(target=produce, daemon=True)
+        th.start()
+        total = 0
+        try:
+            self._conn.sendall(_LEN.pack(CHUNKED))
+            while True:
+                c = q.get()
+                if c is None:
+                    break
+                if not c:
+                    continue          # zero-length chunk is the terminator
+                for off in range(0, len(c), 1 << 30):   # u32 framing bound
+                    piece = c[off:off + (1 << 30)]
+                    self._conn.sendall(_CLEN.pack(len(piece)))
+                    self._conn.sendall(piece)
+                total += len(c)
+        except BaseException:
+            # a failed send must not strand the producer blocked on the
+            # full queue (it would pin the payload forever): drain until
+            # it exits, then abort the connection and propagate
+            while th.is_alive():
+                try:
+                    q.get(timeout=0.1)
+                except queue.Empty:
+                    continue
+            th.join()
+            self._conn.close()
+            raise
+        th.join()
+        if errs:
+            # never send the terminator for a half-produced frame: the
+            # receiver would deliver a truncated payload as complete.
+            # Abort the connection instead — the peer sees EOF mid-frame
+            # and drops the partial (same as a plain-frame sender dying).
+            self._conn.close()
+            raise errs[0]
+        self._conn.sendall(_CLEN.pack(0))
+        return total
 
     def close(self):
         self._conn.close()
@@ -89,28 +160,47 @@ class SocketTransport:
 
     def _recv_frames(self, conn: socket.socket,
                      deliver: Callable[[bytes], None]):
-        """Deliver every frame on one connection until clean EOF."""
+        """Deliver every frame on one connection until clean EOF. Handles
+        both plain frames (u64 length + payload) and chunked frames (u64
+        CHUNKED sentinel, u32-prefixed chunks, zero terminator): a
+        chunked frame is reassembled and delivered as one payload."""
         conn.settimeout(0.2)
         buf = bytearray()
-        need: Optional[int] = None          # None → reading a header
+        state = "head"                      # head | body | chead | cbody
+        need = 0
+        assembly = bytearray()
         while not self._stop.is_set():
             try:
                 chunk = conn.recv(1 << 20)
             except socket.timeout:
                 continue
             if not chunk:
-                if buf or need is not None:
+                if buf or state != "head":
                     raise ConnectionError("socket closed mid-frame")
                 return
             buf += chunk
             while True:
-                if need is None and len(buf) >= _LEN.size:
+                if state == "head" and len(buf) >= _LEN.size:
                     need = _LEN.unpack(bytes(buf[:_LEN.size]))[0]
                     del buf[:_LEN.size]
-                elif need is not None and len(buf) >= need:
+                    state = "chead" if need == CHUNKED else "body"
+                elif state == "body" and len(buf) >= need:
                     deliver(bytes(buf[:need]))
                     del buf[:need]
-                    need = None
+                    state = "head"
+                elif state == "chead" and len(buf) >= _CLEN.size:
+                    need = _CLEN.unpack(bytes(buf[:_CLEN.size]))[0]
+                    del buf[:_CLEN.size]
+                    if need == 0:           # terminator: frame complete
+                        deliver(bytes(assembly))
+                        assembly = bytearray()
+                        state = "head"
+                    else:
+                        state = "cbody"
+                elif state == "cbody" and len(buf) >= need:
+                    assembly += buf[:need]
+                    del buf[:need]
+                    state = "chead"
                 else:
                     break
 

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import split as split_lib
+from repro.core.checkpoint import EdgeCheckpoint
 from repro.core.mobility import MoveEvent
 from repro.data.datasets import synthetic_cifar10
 from repro.data.loader import Batcher
@@ -128,7 +129,7 @@ class Cohort:
         self.snapshots: Dict[int, List[Params]] = {}  # epoch -> np trees
         self.losses: Dict[int, np.ndarray] = {}       # epoch -> (R,)
         self._costs: Optional[Tuple[float, float, int]] = None
-        self._nbytes: Optional[Dict[str, int]] = None
+        self._nbytes: Dict[str, Dict[str, int]] = {}   # codec -> sizes
 
     def _one_step(self, dev, srv, dev_opt, srv_opt, batch, lr):
         loss, g_dev, g_srv = split_lib.split_value_and_grad(
@@ -205,18 +206,31 @@ class Cohort:
                                            self.sp)
         return self._costs
 
-    def nbytes(self) -> Dict[str, int]:
-        """Payload sizes used by the timing layer."""
-        if self._nbytes is None:
-            dev1 = jax.tree.map(lambda x: x[0], self._dev)
-            srv1 = jax.tree.map(lambda x: x[0], self._srv)
-            srv_opt1 = jax.tree.map(lambda x: x[0], self._srv_opt)
-            self._nbytes = {
+    def nbytes(self, codec: str = "raw") -> Dict[str, int]:
+        """Payload sizes used by the timing layer. ``ckpt`` is the
+        *encoded* migration container size under ``codec`` — the same
+        bytes a real ``EdgeCheckpoint.pack`` would put on the backhaul
+        (int8/delta payload sizes are value-independent apart from the
+        lossy-residual fallback, so one representative pack prices every
+        migration of the cohort). ``dev``/``update`` stay raw: model
+        broadcast and update upload are not quantized."""
+        if codec not in self._nbytes:
+            dev1 = jax.tree.map(lambda x: np.asarray(x[0]), self._dev)
+            srv1 = jax.tree.map(lambda x: np.asarray(x[0]), self._srv)
+            srv_opt1 = jax.tree.map(lambda x: np.asarray(x[0]),
+                                    self._srv_opt)
+            ck = EdgeCheckpoint(
+                client_id="cohort", round_idx=0, epoch=0, batch_idx=0,
+                split_point=self.sp, server_params=srv1,
+                optimizer_state=srv_opt1)
+            base = ({"server_params": srv1} if codec == "delta" else None)
+            self._nbytes[codec] = {
                 "dev": tree_nbytes(dev1),
                 "update": tree_nbytes(dev1) + tree_nbytes(srv1),
-                "ckpt": (tree_nbytes(srv1) + tree_nbytes(srv_opt1)),
+                "ckpt": len(ck.pack(codec, base=base,
+                                    base_version="cohort-table")),
             }
-        return self._nbytes
+        return self._nbytes[codec]
 
     def server_state_for(self, replica: int) -> Tuple[Params, Params]:
         """Current server-stage (params, opt state) of one replica — the
@@ -242,6 +256,7 @@ class Fleet:
         self.seed = seed
         self.global_params: Params = model.init(jax.random.PRNGKey(seed))
         self.cost_model = StageCostModel()
+        self._mig_base: Optional[Tuple[Params, Params]] = None
 
         by_key: Dict[Tuple[int, int], List[ClientSpec]] = {}
         for s in specs:
@@ -290,17 +305,21 @@ class Fleet:
         cohort.ensure_stages(self.global_params)
         return cohort.costs(self.cost_model)
 
-    def cohort_tables(self) -> Dict[Tuple[int, int], Dict[str, float]]:
+    def cohort_tables(self, codec: str = "raw"
+                      ) -> Dict[Tuple[int, int], Dict[str, float]]:
         """Static per-cohort timing table (FLOPs + payload bytes) — the
         only numerics the JAX-free shard engines ever see. One XLA cost
-        analysis per cohort, shipped to shards as plain floats."""
+        analysis per cohort, shipped to shards as plain floats. ``ckpt``
+        is priced from the *encoded* migration payload under ``codec``,
+        so backhaul backpressure reflects the compression."""
         out: Dict[Tuple[int, int], Dict[str, float]] = {}
         for key, cohort in self.cohorts.items():
             cohort.ensure_stages(self.global_params)
             dflops, sflops, sbytes = cohort.costs(self.cost_model)
             out[key] = {"dflops": float(dflops), "sflops": float(sflops),
                         "sbytes": float(sbytes),
-                        **{k: float(v) for k, v in cohort.nbytes().items()}}
+                        **{k: float(v)
+                           for k, v in cohort.nbytes(codec).items()}}
         return out
 
     def cohort_sizes(self) -> Dict[Tuple[int, int], int]:
@@ -310,10 +329,23 @@ class Fleet:
             sizes[c.spec.cohort_key] = sizes.get(c.spec.cohort_key, 0) + 1
         return sizes
 
-    def payload_nbytes(self, client: SimClient) -> Dict[str, int]:
+    def payload_nbytes(self, client: SimClient,
+                       codec: str = "raw") -> Dict[str, int]:
         cohort = self.cohorts[client.spec.cohort_key]
         cohort.ensure_stages(self.global_params)
-        return cohort.nbytes()
+        return cohort.nbytes(codec)
+
+    def migration_base(self) -> Params:
+        """Server-stage partition of the current global model, mirroring
+        the checkpoint tree — the base every edge holds after its last
+        model download (delta migration codec)."""
+        if (self._mig_base is None
+                or self._mig_base[0] is not self.global_params):
+            _, s = split_lib.partition_params(self.model,
+                                              self.global_params, self.sp)
+            self._mig_base = (self.global_params,
+                              {"server_params": jax.tree.map(np.asarray, s)})
+        return self._mig_base[1]
 
     @property
     def num_clients(self) -> int:

@@ -55,6 +55,7 @@ class ScenarioSpec:
     churn_offline_s: float = 30.0
     link_spread: float = 10.0
     measure_pack: bool = True
+    migration_codec: str = "raw"     # raw | int8 | delta (backhaul pricing)
     # sharded execution (engine README: shard/mailbox model)
     shards: int = 1
     workers: Optional[int] = None     # process-parallel shard engines
@@ -134,6 +135,7 @@ def build_scenario(spec: ScenarioSpec) -> FleetSimulator:
                   max_replicas=spec.max_replicas, seed=spec.seed)
     return FleetSimulator(fleet, edges, trace=_build_trace(spec),
                           mode=spec.mode, dropouts=_build_dropouts(spec),
+                          migration_codec=spec.migration_codec,
                           measure_pack=spec.measure_pack,
                           shards=spec.shards, workers=spec.workers,
                           flush_interval_s=spec.flush_interval_s)

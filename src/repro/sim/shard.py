@@ -161,7 +161,10 @@ class ShardClient:
 # (one XLA cost-analysis per cohort, computed by the coordinator)
 #   dflops, sflops : device/server fwd FLOPs per batch
 #   sbytes         : smashed activation bytes per batch
-#   dev, update, ckpt : payload sizes (downlink / upload / migration)
+#   dev, update    : payload sizes (downlink / upload), raw bytes
+#   ckpt           : migration payload, ENCODED container bytes under the
+#                    simulator's migration codec (raw/int8/delta) — the
+#                    backhaul FIFO prices what actually crosses the wire
 CohortTable = Dict[str, float]
 
 

@@ -141,8 +141,10 @@ class FleetSimulator:
             self.agg = AsyncAggregator(fleet.global_params, alpha=alpha,
                                        staleness_fn=staleness_fn)
         self.num_rounds = 0
-        # replay state
-        self._tables = fleet.cohort_tables()
+        # replay state — migration transfers are priced from the ENCODED
+        # payload bytes of the configured codec, so backhaul backpressure
+        # (and the conservative lookahead window) reflect the compression
+        self._tables = fleet.cohort_tables(codec=migration_codec)
         self._cohort_sizes = fleet.cohort_sizes()
         self._buffer: List[tuple] = []          # async: (tree, w, item)
         self._flush_times: List[float] = []     # flush timeline (times)
@@ -197,7 +199,10 @@ class FleetSimulator:
                 batch_idx=batch_idx, split_point=fleet.sp,
                 server_params=srv, optimizer_state=opt, loss=0.0,
                 rng_seed=fleet.seed)
-            _, report = migrator.migrate(ckpt, src, dst)
+            base = (fleet.migration_base()
+                    if migrator.codec == "delta" else None)
+            _, report = migrator.migrate(ckpt, src, dst, base=base,
+                                         base_version="global")
             return report.nbytes, report.pack_s, report.unpack_s
         return pack
 

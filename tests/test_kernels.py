@@ -12,9 +12,12 @@ from repro.kernels.fedavg_agg import (fedavg_agg, fedavg_agg_mix,
                                       fedavg_mix_tree, has_compiled_pallas,
                                       resolve_interpret)
 from repro.kernels.flash_attention import attention_ref, flash_attention
-from repro.kernels.int8_codec import (dequantize, dequantize_ref, quantize,
-                                      quantize_ref)
-from repro.kernels.int8_codec.ops import roundtrip
+from repro.kernels.int8_codec import (dequantize, dequantize_packed,
+                                      dequantize_packed_ref, dequantize_ref,
+                                      quantize, quantize_packed,
+                                      quantize_packed_ref, quantize_ref)
+from repro.kernels.int8_codec.ops import (dequantize_leaves, pack_leaves,
+                                          quantize_leaves, roundtrip)
 from repro.kernels.wkv6 import wkv6, wkv6_ref
 
 
@@ -185,3 +188,71 @@ def test_int8_roundtrip_error_bound(n, dt):
         + 2e-2
     assert float(jnp.max(jnp.abs(back.astype(jnp.float32)
                                  - x.astype(jnp.float32)))) <= bound
+
+
+# -- packed / residual int8 ---------------------------------------------------
+
+@pytest.mark.parametrize("n", [4096, 9000, 50000])
+def test_quantize_packed_residual_matches_numpy_ref(n):
+    """Pallas residual kernel (interpret) and the pure-numpy CPU
+    production path must agree bit-for-bit on q."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(n,)).astype(np.float32) * 4
+    base = x + rng.normal(size=(n,)).astype(np.float32) * 0.01
+    q_ref, s_ref = quantize_packed_ref(x, base)
+    q_k, s_k = quantize_packed(jnp.asarray(x), jnp.asarray(base),
+                               interpret=True)
+    np.testing.assert_array_equal(q_ref, np.asarray(q_k)[:n])
+    np.testing.assert_allclose(s_ref, np.asarray(s_k)[:len(s_ref)],
+                               rtol=1e-6)
+    # and the residual roundtrip is bounded by the RESIDUAL range
+    out = dequantize_packed(jnp.asarray(q_ref), jnp.asarray(s_ref), n,
+                            jnp.asarray(base), interpret=True)
+    bound = np.abs(x - base).max() / 127 * 0.51 + 1e-7
+    assert float(jnp.max(jnp.abs(out - x))) <= bound
+    out_np = dequantize_packed_ref(q_ref, s_ref, n, base)
+    np.testing.assert_allclose(np.asarray(out), out_np, atol=1e-6)
+
+
+def test_pack_leaves_block_aligned_offsets():
+    """Leaves start on BLOCK boundaries so quantization blocks never
+    straddle two leaves (a tiny leaf must not inherit a big neighbour's
+    dynamic range)."""
+    from repro.kernels.int8_codec.int8_codec import BLOCK
+    leaves = [np.ones((130, 9), np.float32), np.ones((5,), np.float32),
+              np.zeros((0,), np.float32), np.ones((2048,), np.float32)]
+    flat, offsets = pack_leaves(leaves)
+    assert all(int(o) % BLOCK == 0 for o in offsets)
+    assert int(offsets[-1]) == flat.shape[0]
+    # huge first leaf must not affect the small second leaf's scale
+    leaves = [np.full((1000,), 1e4, np.float32),
+              np.full((8,), 1e-3, np.float32)]
+    q, s, off = quantize_leaves(leaves, use_pallas=False)
+    outs = dequantize_leaves(q, s, off, [(1000,), (8,)],
+                             [np.float32, np.float32], use_pallas=False)
+    np.testing.assert_allclose(outs[1], leaves[1], rtol=0.01)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_quantize_leaves_multi_leaf_roundtrip(use_pallas):
+    """One fused dispatch over many leaves == per-leaf error bounds."""
+    rng = np.random.default_rng(0)
+    leaves = [rng.normal(size=(65, 33)).astype(np.float32) * 3,
+              rng.normal(size=(7,)).astype(np.float32),
+              rng.normal(size=(2000,)).astype(np.float16),
+              np.zeros((0,), np.float32)]
+    bases = [leaves[0] * 0.999, None, None, None]
+    kw = dict(use_pallas=use_pallas,
+              interpret=True if use_pallas else None)
+    q, s, off = quantize_leaves(leaves, bases, **kw)
+    outs = dequantize_leaves(q, s, off, [x.shape for x in leaves],
+                             [x.dtype for x in leaves], bases, **kw)
+    for x, b, o in zip(leaves, bases, outs):
+        assert o.shape == x.shape and o.dtype == x.dtype
+        if not x.size:
+            continue
+        r = x.astype(np.float32) - (np.asarray(b, np.float32)
+                                    if b is not None else 0.0)
+        slop = 5e-3 if x.dtype == np.float16 else 1e-6
+        err = np.abs(o.astype(np.float32) - x.astype(np.float32)).max()
+        assert err <= np.abs(r).max() / 127 * 0.51 + slop

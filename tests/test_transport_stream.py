@@ -1,10 +1,16 @@
 """SocketTransport sustained streams: many length-prefixed frames per
-TCP connection (edge-to-edge migration streams)."""
+TCP connection (edge-to-edge migration streams), and chunked frames
+whose production overlaps the socket transfer."""
 from __future__ import annotations
+
+import socket
+import threading
+import time
 
 import numpy as np
 
 from repro.core.checkpoint import EdgeCheckpoint
+from repro.runtime import serialization as ser
 from repro.runtime.transport import SocketTransport
 
 
@@ -61,6 +67,210 @@ def test_open_stream_does_not_starve_other_senders():
             srv.send_to("127.0.0.1", srv.port, b"from-send-to")
             got = {srv.recv(timeout=10), srv.recv(timeout=10)}
             assert got == {b"from-idle-stream", b"from-send-to"}
+    finally:
+        srv.close()
+
+
+def test_chunked_frame_reassembled():
+    """A chunked frame (unknown total size up front) is delivered as ONE
+    payload, byte-identical to the concatenated chunks."""
+    srv = SocketTransport().serve()
+    try:
+        big = np.random.default_rng(1).bytes(3 << 20)
+        chunks = [big[i:i + 700_000] for i in range(0, len(big), 700_000)]
+        with srv.connect("127.0.0.1", srv.port) as s:
+            assert s.send_chunked(iter(chunks)) == len(big)
+        assert srv.recv(timeout=10) == big
+    finally:
+        srv.close()
+
+
+def test_chunked_and_plain_frames_interleave_on_one_connection():
+    """Mid-stream connection reuse: plain / chunked / plain / chunked on
+    a single FrameStream, all delivered in order."""
+    srv = SocketTransport().serve()
+    try:
+        with srv.connect("127.0.0.1", srv.port) as s:
+            s.send(b"plain-1")
+            s.send_chunked(iter([b"a" * 1000, b"b" * 1000]))
+            s.send(b"plain-2")
+            s.send_chunked(iter([b"", b"c" * 10]))   # empty chunks skipped
+        assert srv.recv(10) == b"plain-1"
+        assert srv.recv(10) == b"a" * 1000 + b"b" * 1000
+        assert srv.recv(10) == b"plain-2"
+        assert srv.recv(10) == b"c" * 10
+    finally:
+        srv.close()
+
+
+def test_many_chunked_frames_back_to_back():
+    srv = SocketTransport().serve()
+    try:
+        payloads = [bytes([i]) * (50_000 + i) for i in range(8)]
+        with srv.connect("127.0.0.1", srv.port) as s:
+            for p in payloads:
+                s.send_chunked(p[i:i + 9973] for i in range(0, len(p), 9973))
+        for p in payloads:
+            assert srv.recv(timeout=10) == p
+    finally:
+        srv.close()
+
+
+def test_chunked_survives_slow_consumer():
+    """Backpressure correctness: the receiver drains slowly (TCP window
+    fills, sendall blocks, the bounded producer queue fills) — the
+    payload must still arrive intact."""
+    srv = SocketTransport()
+    orig_recv = srv._recv_frames
+
+    class SlowConn:
+        """Throttles the server's recv loop to ~6 MB/s."""
+
+        def __init__(self, conn):
+            self._c = conn
+
+        def recv(self, n):
+            time.sleep(0.005)
+            return self._c.recv(min(n, 32768))
+
+        def settimeout(self, t):
+            self._c.settimeout(t)
+
+    srv._recv_frames = lambda conn, deliver: orig_recv(SlowConn(conn),
+                                                       deliver)
+    srv.serve()
+    try:
+        big = np.random.default_rng(2).bytes(2 << 20)
+
+        def gen():
+            for i in range(0, len(big), 65536):
+                yield big[i:i + 65536]
+        with srv.connect("127.0.0.1", srv.port) as s:
+            sent = s.send_chunked(gen())
+        assert sent == len(big)
+        assert srv.recv(timeout=30) == big
+    finally:
+        srv.close()
+
+
+def test_chunked_send_overlaps_production():
+    """The first bytes must hit the wire while later chunks are still
+    being produced — the serialize-then-send barrier is gone. A raw
+    socket server records when the first byte arrives; a slow producer
+    records when the last chunk is generated."""
+    lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    lsock.bind(("127.0.0.1", 0))
+    lsock.listen(1)
+    port = lsock.getsockname()[1]
+    first_byte_t = []
+    done = threading.Event()
+
+    def server():
+        conn, _ = lsock.accept()
+        with conn:
+            total = 0
+            while True:
+                b = conn.recv(1 << 16)
+                if not b:
+                    break
+                if not first_byte_t:
+                    first_byte_t.append(time.perf_counter())
+                total += len(b)
+        done.set()
+
+    th = threading.Thread(target=server, daemon=True)
+    th.start()
+
+    last_produced_t = []
+
+    def slow_chunks():
+        for i in range(12):
+            time.sleep(0.02)
+            yield bytes([i]) * 4096
+        last_produced_t.append(time.perf_counter())
+
+    from repro.runtime.transport import FrameStream
+    with FrameStream("127.0.0.1", port) as s:
+        s.send_chunked(slow_chunks())
+    done.wait(timeout=10)
+    lsock.close()
+    assert first_byte_t and last_produced_t
+    # first byte arrived long before production finished (~0.24s total)
+    assert first_byte_t[0] < last_produced_t[0] - 0.05
+
+
+def test_chunked_producer_error_aborts_frame():
+    """A chunk iterator that raises mid-stream must NOT terminate the
+    frame (the receiver would deliver a truncated payload as complete):
+    the connection aborts, the peer drops the partial, and frames from
+    other connections keep flowing."""
+    srv = SocketTransport().serve()
+    try:
+        def bad_chunks():
+            yield b"x" * 1000
+            raise RuntimeError("producer died")
+
+        stream = srv.connect("127.0.0.1", srv.port)
+        try:
+            with np.testing.assert_raises(RuntimeError):
+                stream.send_chunked(bad_chunks())
+        finally:
+            stream.close()
+        # the partial frame was dropped; the transport still serves
+        srv.send_to("127.0.0.1", srv.port, b"still-alive")
+        assert srv.recv(timeout=10) == b"still-alive"
+    finally:
+        srv.close()
+
+
+def test_chunked_send_failure_unblocks_producer():
+    """A peer that dies mid-transfer must not strand the producer thread
+    blocked on the full queue (it would pin the payload forever)."""
+    from repro.runtime.transport import FrameStream
+    lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    lsock.bind(("127.0.0.1", 0))
+    lsock.listen(1)
+
+    def server():
+        conn, _ = lsock.accept()
+        conn.close()                       # reset mid-stream
+
+    threading.Thread(target=server, daemon=True).start()
+    fs = FrameStream("127.0.0.1", lsock.getsockname()[1])
+    before = threading.active_count()
+
+    def chunks():
+        for _ in range(2000):              # 2000 x 64 KiB >> any buffer
+            yield b"z" * 65536
+
+    try:
+        with np.testing.assert_raises(OSError):
+            fs.send_chunked(chunks())
+    finally:
+        lsock.close()
+    # the producer drained and exited rather than blocking on q.put
+    deadline = time.time() + 5
+    while threading.active_count() > before and time.time() < deadline:
+        time.sleep(0.05)
+    assert threading.active_count() <= before
+
+
+def test_chunked_checkpoint_pipeline_roundtrip():
+    """End to end: pack_pytree_chunks -> send_chunked -> reassembled
+    container unpacks to the same tree."""
+    srv = SocketTransport().serve()
+    try:
+        rng = np.random.default_rng(3)
+        tree = {"w": rng.normal(size=(600, 50)).astype(np.float32),
+                "i": np.arange(100, dtype=np.int64)}
+        base = {"w": tree["w"] * 0.999}
+        with srv.connect("127.0.0.1", srv.port) as s:
+            s.send_chunked(ser.pack_pytree_chunks(
+                tree, "delta", base=base, base_version="rt"))
+        back = ser.unpack_pytree(srv.recv(timeout=10), base=base)
+        np.testing.assert_array_equal(back["i"], tree["i"])
+        assert np.abs(back["w"] - tree["w"]).max() <= \
+            np.abs(tree["w"] * 0.001).max() / 127 * 0.51 + 1e-7
     finally:
         srv.close()
 
