@@ -16,12 +16,22 @@ cohort JAX numerics stay on the coordinator, so expect the ≥2x point
 at 10k devices to need ≥4 cores (more devices → more events per window
 → better scaling; the artifact records os.cpu_count for context).
 
+Multi-host execution: ``--hosts N`` runs the first selected scenario on
+N shard-group host processes connected only by TCP sockets (the
+multi-host mailbox protocol, localhost harness), compares events/sec
+against the in-process serial engine AND the pipe-based peer mesh at
+the same shard count, verifies all three produce bit-identical
+per-round metrics, and writes a per-executor artifact
+(``--artifact``, default bench_fleet_hosts.json in this mode).
+
   PYTHONPATH=src python -m benchmarks.bench_fleet                # default
   PYTHONPATH=src python -m benchmarks.bench_fleet --quick        # CI smoke
   PYTHONPATH=src python -m benchmarks.bench_fleet --devices 10000 \
       --edges 32 --shards 4
   PYTHONPATH=src python -m benchmarks.bench_fleet --devices 10000 \
       --edges 32 --shard-sweep 1 4 --scenarios poisson
+  PYTHONPATH=src python -m benchmarks.bench_fleet --devices 2000 \
+      --edges 8 --hosts 2 --scenarios poisson
 """
 from __future__ import annotations
 
@@ -103,6 +113,48 @@ def _shard_sweep(args, name: str, n_clients: int, n_edges: int,
     return sweep
 
 
+def _host_sweep(args, name: str, n_clients: int, n_edges: int,
+                rounds: int) -> dict:
+    """The same scenario under three executors — in-process serial,
+    pipe-based peer mesh, socket-connected host processes — asserting
+    bit-identical per-round metrics (sockets change the transport, never
+    the simulation) and reporting events/sec for each."""
+    shards = max(args.shards, args.hosts)
+    executors = {
+        "serial": dict(shards=shards, workers=None, hosts=None),
+        "pipes": dict(shards=shards, workers=shards, hosts=None),
+        "sockets": dict(shards=shards, workers=None, hosts=args.hosts),
+    }
+    sweep = {"scenario": name, "devices": n_clients, "edges": n_edges,
+             "rounds": rounds, "shards": shards, "hosts": args.hosts,
+             "cpu_count": os.cpu_count(), "per_executor": {}}
+    baseline_rounds = None
+    for label, kw in executors.items():
+        spec = _scenario_spec(name, args, n_clients, n_edges, rounds,
+                              kw["shards"], kw["workers"]).replace(
+            hosts=kw["hosts"], measure_pack=False)
+        res = _run_one(name, spec)
+        sweep["per_executor"][label] = {
+            **kw, "events_per_sec": res["events_per_sec"],
+            "wall_s": res["wall_s"], "windows": res["windows"],
+            "events": res["events"]}
+        if baseline_rounds is None:
+            baseline_rounds = res["rounds"]
+            sweep["rounds"] = res["rounds"]
+        else:
+            identical = res["rounds"] == baseline_rounds
+            sweep["per_executor"][label]["rounds_bit_identical"] = identical
+            if not identical:
+                raise AssertionError(
+                    f"per-round metrics differ between serial and {label} "
+                    f"executors — transport must not change the simulation")
+        print(f"  {label:>8s} (shards={kw['shards']}, "
+              f"workers={kw['workers']}, hosts={kw['hosts']}): "
+              f"{res['events_per_sec']:9.0f} ev/s  "
+              f"{res['wall_s']:6.1f}s wall  {res['windows']:5d} windows")
+    return sweep
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--clients", "--devices", dest="clients", type=int,
@@ -118,8 +170,15 @@ def main(argv=None) -> None:
     ap.add_argument("--shard-sweep", type=int, nargs="*", default=None,
                     help="run the first scenario once per shard count, "
                          "verify bit-identity, emit the artifact")
-    ap.add_argument("--artifact", default="bench_fleet_shards.json",
-                    help="where --shard-sweep writes its JSON artifact")
+    ap.add_argument("--hosts", type=int, default=None,
+                    help="run the first scenario on N socket-connected "
+                         "host processes, compare vs serial and pipe "
+                         "executors, verify bit-identity, emit the "
+                         "artifact")
+    ap.add_argument("--artifact", default=None,
+                    help="where --shard-sweep / --hosts write their JSON "
+                         "artifact (default bench_fleet_shards.json / "
+                         "bench_fleet_hosts.json)")
     ap.add_argument("--scenarios", nargs="*", default=sorted(SCENARIOS),
                     choices=sorted(SCENARIOS))
     ap.add_argument("--quick", action="store_true",
@@ -133,13 +192,27 @@ def main(argv=None) -> None:
 
     if args.shard_sweep:
         name = args.scenarios[0]
+        artifact = args.artifact or "bench_fleet_shards.json"
         print(f"# shard sweep: {name}, {n_clients} devices, {n_edges} "
               f"edges, {rounds} rounds, shard counts {args.shard_sweep}")
         sweep = _shard_sweep(args, name, n_clients, n_edges, rounds)
-        with open(args.artifact, "w") as f:
+        with open(artifact, "w") as f:
             json.dump(sweep, f)
-        print(f"# artifact: {args.artifact}")
+        print(f"# artifact: {artifact}")
         print(json.dumps(sweep["per_shards"]))
+        return
+
+    if args.hosts:
+        name = args.scenarios[0]
+        artifact = args.artifact or "bench_fleet_hosts.json"
+        print(f"# multi-host sweep: {name}, {n_clients} devices, "
+              f"{n_edges} edges, {rounds} rounds, {args.hosts} socket "
+              f"hosts vs serial/pipes")
+        sweep = _host_sweep(args, name, n_clients, n_edges, rounds)
+        with open(artifact, "w") as f:
+            json.dump(sweep, f)
+        print(f"# artifact: {artifact}")
+        print(json.dumps(sweep["per_executor"]))
         return
 
     workers = args.workers if args.workers is not None else \

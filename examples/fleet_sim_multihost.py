@@ -1,0 +1,131 @@
+"""Multi-host fleet simulation: shard the FedFly event queue across
+separate machines, connected only by TCP sockets.
+
+Every host runs THIS binary with the same fleet arguments (the fleet is
+rebuilt deterministically from the seed on each host — no state ships at
+startup) and a rank picked from the shared address directory. Rank 0 is
+the coordinator: it replays the cohort numerics from the record frames
+the hosts stream back and prints the result; every rank — 0 included —
+runs one shard-group host loop. The conservative-window barrier rides
+the all-to-all mail exchange (``repro.sim.mailbox.SocketMailbox``), and
+per-round metrics are bit-identical to a single-process run for any
+host count (wire protocol: docs/ARCHITECTURE.md).
+
+Two machines:
+
+  # machine A (rank 0, coordinator)
+  PYTHONPATH=src python examples/fleet_sim_multihost.py \
+      --hosts 2 --rank 0 --listen 0.0.0.0:7070 \
+      --connect hostA:7070,hostB:7071
+
+  # machine B (rank 1)
+  PYTHONPATH=src python examples/fleet_sim_multihost.py \
+      --hosts 2 --rank 1 --listen 0.0.0.0:7071 \
+      --connect hostA:7070,hostB:7071
+
+Single machine (spawns the host processes itself, same socket protocol):
+
+  PYTHONPATH=src python examples/fleet_sim_multihost.py --hosts 2
+"""
+import argparse
+import json
+import time
+
+from repro.core.mobility import MobilityTrace, poisson_moves
+from repro.models.vgg import VGG5
+from repro.optim.optimizers import sgd
+from repro.optim.schedules import constant
+from repro.sim import (Fleet, FleetSimulator, hinge_staleness, make_edges,
+                       make_fleet_specs)
+
+
+def build_sim(args) -> FleetSimulator:
+    """Deterministic from the arguments: every rank builds the identical
+    simulator, so only sockets — never state — connect the hosts."""
+    edges = make_edges(args.edges, slots=64)
+    specs = make_fleet_specs(args.devices, [e.edge_id for e in edges],
+                             batch_size=16, num_batches=2)
+    fleet = Fleet(VGG5(), sgd(momentum=0.9), specs, split_point=2,
+                  lr_schedule=constant(0.01),
+                  max_replicas=args.max_replicas, seed=args.seed)
+    trace = MobilityTrace(poisson_moves(
+        [s.client_id for s in specs], [e.edge_id for e in edges],
+        total_rounds=args.rounds, rate_per_round=0.05, seed=args.seed))
+    return FleetSimulator(
+        fleet, edges, trace=trace, mode="async", alpha=0.6,
+        staleness_fn=hinge_staleness(a=4.0 / args.devices,
+                                     b=2.0 * args.devices),
+        shards=max(args.shards, args.hosts), measure_pack=False,
+        hosts=args.hosts if args.rank is None else None)
+
+
+def report(result, args, wall: float) -> None:
+    es = result.engine_stats
+    print(f"simulated {args.devices} devices x {args.rounds} rounds on "
+          f"{args.edges} edges / {es['num_shards']} shards / "
+          f"{es.get('num_hosts', 1)} hosts in {wall:.1f}s wall "
+          f"({es['events_processed']} events, "
+          f"{es['events_per_sec']:.0f} ev/s, "
+          f"{es.get('windows', 1)} windows)")
+    for r in result.rounds:
+        print(f"  round {r['round_idx']}: {r['n_updates']} updates, "
+              f"loss {r['mean_loss']:.3f}, "
+              f"round time {r['mean_round_time_s']:.2f}s sim")
+    print(json.dumps(result.summary()))
+
+
+def parse_addr(s: str):
+    host, port = s.rsplit(":", 1)
+    return host, int(port)
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--hosts", type=int, default=2,
+                    help="number of shard-group host processes")
+    ap.add_argument("--rank", type=int, default=None,
+                    help="this machine's rank (omit to spawn every host "
+                         "locally)")
+    ap.add_argument("--listen", default=None, metavar="HOST:PORT",
+                    help="address this rank binds (distributed mode)")
+    ap.add_argument("--connect", default=None,
+                    metavar="H0:P0,H1:P1,...",
+                    help="comma-separated address of every rank, in rank "
+                         "order (distributed mode)")
+    ap.add_argument("--devices", type=int, default=1000)
+    ap.add_argument("--edges", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--max-replicas", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    sim = build_sim(args)
+    if args.rank is None:
+        # localhost harness: FleetSimulator spawns the host processes,
+        # still connected only by sockets
+        result = sim.run(args.rounds)
+        report(result, args, time.time() - t0)
+        return
+    if args.listen is None or args.connect is None:
+        ap.error("distributed mode (--rank) needs --listen and --connect")
+    addresses = {r: parse_addr(a)
+                 for r, a in enumerate(args.connect.split(","))}
+    if len(addresses) != args.hosts:
+        ap.error(f"--connect lists {len(addresses)} addresses for "
+                 f"--hosts {args.hosts}")
+    result = sim.run_multihost(args.rounds, rank=args.rank,
+                               listen=parse_addr(args.listen),
+                               addresses=addresses)
+    if result is not None:                        # rank 0
+        report(result, args, time.time() - t0)
+    else:
+        print(f"rank {args.rank}: shard group complete in "
+              f"{time.time() - t0:.1f}s wall")
+
+
+if __name__ == "__main__":        # spawn-safe: hosts re-import this file
+    main()

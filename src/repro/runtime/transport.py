@@ -25,7 +25,7 @@ import socket
 import struct
 import threading
 from dataclasses import dataclass
-from typing import Callable, Dict, Iterable, Optional
+from typing import Callable, Dict, Iterable, Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -204,16 +204,47 @@ class SocketTransport:
                 else:
                     break
 
-    def serve(self, callback: Optional[Callable[[bytes], None]] = None):
+    def serve(self, callback: Optional[Callable[[bytes], None]] = None,
+              per_connection: Optional[Callable[[], Tuple[
+                  Callable[[bytes], None],
+                  Callable[[Optional[BaseException]], None]]]] = None):
+        """Start the listener thread. ``callback`` (or the internal inbox)
+        receives every frame from every connection. ``per_connection``
+        instead supplies one ``(deliver, on_close)`` pair per accepted
+        connection: ``deliver`` sees that connection's frames in order and
+        ``on_close(err)`` fires when the connection ends (``err`` is None
+        on a clean frame-boundary EOF, the exception otherwise) — this is
+        how ``sim.mailbox.SocketMailbox`` notices a peer died mid-window
+        instead of blocking on its next frame forever."""
         self._srv.listen(8)
-        deliver = callback or self._inbox.put
+        default_deliver = callback or self._inbox.put
 
         def handle(conn: socket.socket):
-            with conn:
-                try:
-                    self._recv_frames(conn, deliver)
-                except (ConnectionError, OSError):
-                    pass            # peer died mid-frame; drop the partial
+            on_close: Optional[Callable[[Optional[BaseException]], None]] \
+                = None
+            err: Optional[BaseException] = None
+            try:
+                with conn:
+                    # the hook call sits inside `with conn` so a failing
+                    # hook still closes the accepted socket
+                    if per_connection is not None:
+                        deliver, on_close = per_connection()
+                    else:
+                        deliver = default_deliver
+                    try:
+                        self._recv_frames(conn, deliver)
+                    except (ConnectionError, OSError) as e:
+                        err = e     # peer died mid-frame; drop the partial
+            except BaseException as e:
+                # a deliver-callback failure must still report the close —
+                # a hook consumer (the mailbox barrier) would otherwise
+                # wait on a connection whose handler died silently
+                err = e
+                if on_close is None:
+                    raise
+            finally:
+                if on_close is not None:
+                    on_close(err)
 
         def loop():
             self._srv.settimeout(0.2)

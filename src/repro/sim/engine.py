@@ -373,97 +373,39 @@ WindowCallback = Callable[[float, Dict[int, Dict[str, list]]], List[Mail]]
 
 # ---------------------------------------------------------------------------
 # peer-driven sharded execution (async mode): the coordinator is NOT in
-# the per-window loop. Workers synchronize among themselves — a shared
-# barrier + a shared next-event-time array replace the parent roundtrip,
-# and cross-shard mail flows over direct peer pipes — while the parent
-# trails behind, replaying record shipments below the fleet-wide safe
-# frontier. One window costs two semaphore barriers instead of two pipe
-# roundtrips through a busy parent.
+# the per-window loop. Workers synchronize among themselves — the
+# all-to-all mail exchange over direct peer pipes doubles as the window
+# barrier (repro.sim.mailbox.run_host_windows) — while the parent trails
+# behind, replaying record shipments below the fleet-wide safe frontier.
+# One window costs one pipe exchange instead of two roundtrips through a
+# busy parent. The same loop runs over TCP sockets in
+# repro.sim.mailbox.HostShardedEngine (multi-host sharding).
 # ---------------------------------------------------------------------------
 
 _PEER_BARRIER_TIMEOUT_S = 600.0
-_SHIP_EVERY_WINDOWS = 8
 
 
 def _peer_worker_main(conn, peers, lookahead) -> None:
-    """One shard per worker; the all-to-all exchange IS the barrier —
-    no shared-memory primitives (sandboxes without named semaphores run
-    this fine). Per window every worker:
-
-      1. sends (advertised_time, mail) to every peer, where
-         advertised_time = min(own next event, own *undelivered*
-         outgoing mail) — so the global minimum over all advertised
-         times covers every pending message in the system;
-      2. receives the same from every peer; everyone now computes the
-         SAME T = min(all advertised); exit together when T = +inf;
-      3. delivers incoming mail, runs its own events in [T, T+lookahead).
-
-    Records accumulate locally and ship to the parent every few windows
-    tagged with the covered bound, so the parent replays everything
-    strictly below min(worker frontiers) while the mesh runs ahead."""
+    """One shard per worker. The worker is a degenerate single-shard
+    "host": mail rides a ``PipeMailbox`` (whose exchange is the barrier
+    — no shared-memory primitives, so sandboxes without named semaphores
+    run this fine) and records ship to the parent over the worker pipe.
+    See ``repro.sim.mailbox.run_host_windows`` for the loop contract."""
     import traceback
+
+    from repro.sim.mailbox import (PipeMailbox, PipeRecordSink,
+                                   run_host_windows)
     try:
-        _peer_worker_loop(conn, peers, lookahead)
+        shard = conn.recv()
+        run_host_windows([shard], PipeMailbox(peers), lookahead,
+                         PipeRecordSink(conn))
     except BaseException:
         try:
             conn.send(("err", traceback.format_exc()))
         except (BrokenPipeError, OSError):
             pass
+    finally:
         conn.close()
-
-
-def _peer_worker_loop(conn, peers, lookahead) -> None:
-    shard = conn.recv()
-    inf = float("inf")
-    windows = 0
-    acc: Dict[str, list] = {"contribs": [], "epoch_starts": [],
-                            "migrations": []}
-
-    def ship(bound: float) -> None:
-        if any(acc.values()):
-            conn.send(("records", bound, dict(acc)))
-            for k in acc:
-                acc[k] = []
-        else:
-            conn.send(("frontier", bound))
-
-    outbox: Dict[int, List[Mail]] = {p: [] for p in peers}
-    t = shard.peek()
-    my_t = inf if t is None else t
-    while True:
-        for p, c in peers.items():            # send to all ...
-            c.send((my_t, outbox[p]))
-        outbox = {p: [] for p in peers}
-        times = [my_t]
-        incoming: List[Mail] = []
-        for c in peers.values():              # ... then drain all
-            pt, mail = c.recv()
-            times.append(pt)
-            incoming.extend(mail)
-        T = min(times)
-        if T == inf:
-            break
-        if incoming:
-            shard.deliver(incoming)
-        bound = T + lookahead
-        res = shard.run_window(bound, [])
-        for k, v in res.records.items():
-            acc[k].extend(v)
-        mail_min = inf
-        for m in res.mail:
-            _check_mail_within_lookahead(m, bound)
-            outbox[m.dst_shard].append(m)
-            mail_min = min(mail_min, m.time)
-        t = shard.peek()
-        my_t = min(inf if t is None else t, mail_min)
-        windows += 1
-        if windows % _SHIP_EVERY_WINDOWS == 0:
-            ship(bound)
-    ship(inf)
-    final = shard.final_stats()
-    final["engine"]["windows"] = windows
-    conn.send(("done", final))
-    conn.close()
 
 
 class PeerShardedEngine:
@@ -575,7 +517,7 @@ class PeerShardedEngine:
             elif kind == "frontier":
                 frontiers[sid] = msg[1]
             elif kind == "done":
-                self._final[sid] = msg[1]
+                self._final.update(msg[1])     # {shard_id: final stats}
                 frontiers[sid] = float("inf")
             new_frontier = min(frontiers.values())
             if new_frontier > replay_frontier:

@@ -1,0 +1,678 @@
+"""Shard mailboxes: the transport under the conservative-window barrier.
+
+The sharded engines (repro.sim.engine) synchronize by an all-to-all
+exchange: every window, every participant sends ``(advertised_time,
+outgoing Mail)`` to every peer and receives the same — the exchange IS
+the barrier, and the global minimum over advertised times is the next
+window start ``T``. This module abstracts *what carries that exchange*:
+
+  ``PipeMailbox``    — multiprocessing pipes between worker processes on
+                       one machine (what ``PeerShardedEngine`` uses).
+  ``SocketMailbox``  — real TCP: one ``runtime.transport.FrameStream``
+                       per directed peer pair, frames carrying
+                       FFLY-encoded messages. The same protocol runs
+                       across machines (``examples/fleet_sim_multihost``).
+
+``run_host_windows`` is the host loop both transports drive: it owns a
+*group* of ``EdgeShard`` engines (a "host"), runs their windows between
+exchanges, routes intra-group mail locally, and ships simulator records
+to the coordinator. ``HostShardedEngine`` packages N such hosts as
+independent OS processes on one machine, connected only by sockets —
+the localhost harness for the multi-host protocol (used by
+``FleetSimulator(hosts=N)`` and ``bench_fleet.py --hosts``).
+
+Wire format (normative spec: docs/ARCHITECTURE.md): every message is one
+transport frame whose payload is an FFLY v2 container of a tagged
+pytree — ``encode_message``/``decode_message`` below. No pickle crosses
+the network, so hosts of different ISAs interoperate, and the migrated
+client timing state (``ShardClient``) rides the same container format as
+the checkpoints themselves.
+
+Failure semantics (mirrors the chunked-frame producer abort): a peer
+that disconnects mid-window — a killed host process, a dropped link —
+must abort the run with a clear error, never hang the barrier. The
+transport reports per-connection closes; ``SocketMailbox.exchange``
+raises as soon as a peer it still needs is gone, and the coordinator
+raises when a host's record stream dies before its ``done``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing as mp
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.runtime.serialization import pack_pytree, unpack_pytree
+from repro.runtime.transport import FrameStream, SocketTransport
+from repro.sim.engine import (EventKind, Mail, _check_mail_within_lookahead,
+                              _merge_shard_stats)
+from repro.sim.shard import ShardClient
+
+_TAG = "__w"                      # tagged-node marker in the wire tree
+_BARRIER_TIMEOUT_S = 600.0        # no progress for this long => stalled
+_SHIP_EVERY_WINDOWS = 8           # record-shipment cadence (amortize frames)
+_CONNECT_RETRY_S = 60.0           # peers may start at different times
+
+
+# ---------------------------------------------------------------------------
+# wire codec: Mail and protocol messages as FFLY containers
+# ---------------------------------------------------------------------------
+
+def _to_wire(obj: Any) -> Any:
+    """Lower a protocol object to an FFLY-serializable pytree (dicts with
+    string keys, lists/tuples, scalar/ndarray leaves). Python-only values
+    become tagged dicts: ``{"__w": tag, ...}`` — see docs/ARCHITECTURE.md
+    for the closed set of tags."""
+    if obj is None:
+        return {_TAG: "none"}
+    if isinstance(obj, EventKind):
+        return {_TAG: "kind", "v": obj.value}
+    if isinstance(obj, Mail):
+        return {_TAG: "mail", "dst": obj.dst_shard, "time": obj.time,
+                "kind": obj.kind.value, "key": obj.key,
+                "payload": _to_wire(obj.payload)}
+    if isinstance(obj, ShardClient):
+        fields = {f.name: getattr(obj, f.name)
+                  for f in dataclasses.fields(ShardClient)}
+        if fields.pop("batch_event") is not None:
+            # clients only travel between batches; a live BATCH_DONE would
+            # reference engine state that cannot cross a host boundary
+            raise ValueError(f"client {obj.client_id} has a live batch "
+                             "event and cannot be serialized")
+        return {_TAG: "sc", "v": {k: _to_wire(v) for k, v in fields.items()}}
+    if isinstance(obj, dict):
+        if all(isinstance(k, str) for k in obj) and _TAG not in obj:
+            return {k: _to_wire(v) for k, v in obj.items()}
+        # non-string keys would be stringified by the container's JSON
+        # header — carry keys and values as parallel lists instead
+        return {_TAG: "map", "k": [_to_wire(k) for k in obj],
+                "v": [_to_wire(v) for v in obj.values()]}
+    if isinstance(obj, tuple):
+        return tuple(_to_wire(x) for x in obj)
+    if isinstance(obj, list):
+        return [_to_wire(x) for x in obj]
+    if isinstance(obj, (bool, int, float, str, bytes, np.ndarray,
+                        np.generic)):
+        return obj
+    raise TypeError(f"cannot wire-encode {type(obj).__name__}: {obj!r}")
+
+
+def _from_wire(obj: Any) -> Any:
+    """Inverse of ``_to_wire`` over a decoded FFLY tree (where every
+    scalar leaf comes back as a 0-d numpy array)."""
+    if isinstance(obj, np.ndarray):
+        return obj.item() if obj.ndim == 0 else obj
+    if isinstance(obj, dict):
+        if _TAG not in obj:
+            return {k: _from_wire(v) for k, v in obj.items()}
+        tag = _from_wire(obj[_TAG])
+        if tag == "none":
+            return None
+        if tag == "kind":
+            return EventKind(_from_wire(obj["v"]))
+        if tag == "mail":
+            return Mail(dst_shard=_from_wire(obj["dst"]),
+                        time=_from_wire(obj["time"]),
+                        kind=EventKind(_from_wire(obj["kind"])),
+                        key=_from_wire(obj["key"]),
+                        payload=_from_wire(obj["payload"]))
+        if tag == "sc":
+            return ShardClient(**{k: _from_wire(v)
+                                  for k, v in obj["v"].items()})
+        if tag == "map":
+            return dict(zip((_from_wire(k) for k in obj["k"]),
+                            (_from_wire(v) for v in obj["v"])))
+        raise ValueError(f"unknown wire tag {tag!r}")
+    if isinstance(obj, tuple):
+        return tuple(_from_wire(x) for x in obj)
+    if isinstance(obj, list):
+        return [_from_wire(x) for x in obj]
+    return obj
+
+
+def encode_message(msg: Dict[str, Any]) -> bytes:
+    """One protocol message -> one frame payload (an FFLY container)."""
+    return pack_pytree(_to_wire(msg))
+
+
+def decode_message(data: bytes) -> Dict[str, Any]:
+    return _from_wire(unpack_pytree(data))
+
+
+# ---------------------------------------------------------------------------
+# the mailbox interface
+# ---------------------------------------------------------------------------
+
+class Mailbox:
+    """One participant's endpoint of the all-to-all mail mesh.
+
+    ``exchange`` implements the window barrier: send ``(my_time,
+    outbox[p])`` to every peer, receive the same from every peer, return
+    ``(min over all advertised times incl. our own, incoming mail)``.
+    Every participant computes the same minimum, so the exchange doubles
+    as the barrier — there is no separate synchronization primitive."""
+
+    peer_ids: Sequence[int] = ()
+
+    def exchange(self, my_time: float, outbox: Dict[int, List[Mail]]
+                 ) -> Tuple[float, List[Mail]]:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class PipeMailbox(Mailbox):
+    """The in-process/pipe mesh: one duplex ``multiprocessing.Pipe`` per
+    peer pair (what ``PeerShardedEngine`` wires up). Mail travels as
+    pickled objects — same-machine only."""
+
+    def __init__(self, peers: Dict[int, Any]):
+        self._peers = peers
+        self.peer_ids = sorted(peers)
+
+    def exchange(self, my_time, outbox):
+        for p in self.peer_ids:                      # send to all ...
+            self._peers[p].send((my_time, outbox.get(p, [])))
+        times = [my_time]
+        incoming: List[Mail] = []
+        for p in self.peer_ids:                      # ... then drain all
+            try:
+                pt, mail = self._peers[p].recv()
+            except EOFError:
+                raise RuntimeError(
+                    f"mailbox peer {p} disconnected mid-window (worker "
+                    "process died?) — aborting run") from None
+            times.append(pt)
+            incoming.extend(mail)
+        return min(times), incoming
+
+
+class SocketMailbox(Mailbox):
+    """TCP mesh endpoint built on ``SocketTransport``/``FrameStream``.
+
+    Topology: every participant runs one listener; for each *directed*
+    pair (i -> j) host i opens one sustained ``FrameStream`` to host j's
+    listener and sends a hello frame, then exactly one mail frame per
+    window — so per-peer frame queues stay aligned with the window
+    sequence. The same listener also accepts ``records`` channels (host
+    -> coordinator record shipments), exposed on ``self.records``.
+
+    A peer connection that closes before the protocol finished marks the
+    peer dead and wakes any blocked ``exchange``, which aborts the run
+    with a clear error instead of hanging the barrier (the socket analog
+    of the chunked-frame producer abort)."""
+
+    def __init__(self, rank: int, host: str = "127.0.0.1", port: int = 0, *,
+                 barrier_timeout_s: float = _BARRIER_TIMEOUT_S):
+        self.rank = rank
+        self.barrier_timeout_s = barrier_timeout_s
+        self.peer_ids: List[int] = []
+        self._streams: Dict[int, FrameStream] = {}
+        self._inbox: Dict[int, "queue.Queue"] = {}
+        self._dead: Dict[int, str] = {}
+        self._lock = threading.Lock()
+        self._closing = False
+        #: (type, src_rank, message) tuples from "records" channels
+        self.records: "queue.Queue[Tuple[str, int, Dict[str, Any]]]" = \
+            queue.Queue()
+        self.transport = SocketTransport(host, port)
+        self.port = self.transport.port
+        self.transport.serve(per_connection=self._connection)
+
+    # -- incoming side ---------------------------------------------------
+
+    def _inbox_for(self, rank: int) -> "queue.Queue":
+        with self._lock:
+            return self._inbox.setdefault(rank, queue.Queue())
+
+    def _connection(self):
+        """Per-connection router: the first frame must be a hello naming
+        the sender and channel; later frames go to that peer's inbox
+        (mail) or the shared records queue."""
+        state: Dict[str, Any] = {"channel": None, "src": None}
+
+        def deliver(frame: bytes) -> None:
+            try:
+                msg = decode_message(frame)
+            except Exception as e:
+                raise ConnectionError(f"undecodable frame: {e}") from e
+            if state["channel"] is None:
+                if msg.get("type") != "hello":
+                    raise ConnectionError(
+                        f"expected hello, got {msg.get('type')!r}")
+                state["channel"] = msg["channel"]
+                state["src"] = msg["src"]
+                return
+            if state["channel"] == "mail":
+                self._inbox_for(state["src"]).put(msg)
+            else:
+                self.records.put((msg["type"], state["src"], msg))
+
+        def on_close(err: Optional[BaseException]) -> None:
+            if self._closing or state["channel"] is None:
+                return
+            why = str(err) if err else "connection closed"
+            if state["channel"] == "mail":
+                self._dead[state["src"]] = why
+                self._inbox_for(state["src"]).put(None)   # wake the waiter
+            else:
+                self.records.put(("lost", state["src"], {"err": why}))
+
+        return deliver, on_close
+
+    # -- outgoing side ---------------------------------------------------
+
+    def connect(self, addresses: Dict[int, Tuple[str, int]], *,
+                retry_s: float = _CONNECT_RETRY_S) -> "SocketMailbox":
+        """Open the outgoing half of the mesh: one stream + hello per
+        peer in ``addresses`` (our own rank is skipped). Retries while
+        peers are still starting up."""
+        self.peer_ids = sorted(r for r in addresses if r != self.rank)
+        for r in self.peer_ids:
+            self._inbox_for(r)                   # exist before any hello
+            self._streams[r] = _connect_retry(addresses[r], retry_s)
+            self._streams[r].send(encode_message(
+                {"type": "hello", "channel": "mail", "src": self.rank}))
+        return self
+
+    # -- the barrier ------------------------------------------------------
+
+    def exchange(self, my_time, outbox):
+        for p in self.peer_ids:
+            try:
+                self._streams[p].send(encode_message(
+                    {"type": "mail", "time": my_time,
+                     "mail": outbox.get(p, [])}))
+            except OSError as e:
+                raise RuntimeError(
+                    f"mailbox peer {p} unreachable ({e}) — aborting run"
+                ) from None
+        times = [my_time]
+        incoming: List[Mail] = []
+        for p in self.peer_ids:
+            msg = self._pop(p)
+            times.append(msg["time"])
+            incoming.extend(msg["mail"])
+        return min(times), incoming
+
+    def _pop(self, p: int) -> Dict[str, Any]:
+        deadline = time.monotonic() + self.barrier_timeout_s
+        q = self._inbox_for(p)
+        while True:
+            try:
+                msg = q.get(timeout=0.2)
+            except queue.Empty:
+                if time.monotonic() >= deadline:
+                    raise RuntimeError(
+                        f"window barrier made no progress for "
+                        f"{self.barrier_timeout_s}s waiting on host {p} "
+                        "(peer stalled?)") from None
+                continue
+            if msg is None:       # the dead-peer sentinel (FIFO: any
+                # frames delivered before the close drain first)
+                raise RuntimeError(
+                    f"mailbox peer {p} disconnected mid-window "
+                    f"({self._dead.get(p, 'connection closed')}) — "
+                    "aborting run (host process died?)")
+            return msg
+
+    def close(self) -> None:
+        self._closing = True
+        for s in self._streams.values():
+            try:
+                s.close()
+            except OSError:
+                pass
+        self.transport.close()
+
+
+def _connect_retry(addr: Tuple[str, int],
+                   retry_s: float = _CONNECT_RETRY_S) -> FrameStream:
+    deadline = time.monotonic() + retry_s
+    while True:
+        try:
+            return FrameStream(addr[0], addr[1])
+        except OSError:
+            if time.monotonic() >= deadline:
+                raise
+            time.sleep(0.2)
+
+
+# ---------------------------------------------------------------------------
+# record sinks: how a host ships simulator records to the coordinator
+# ---------------------------------------------------------------------------
+
+class PipeRecordSink:
+    """Record shipments over the worker's parent pipe (peer executor)."""
+
+    def __init__(self, conn):
+        self._conn = conn
+
+    def records(self, bound: float, recs: Dict[str, list]) -> None:
+        self._conn.send(("records", bound, recs))
+
+    def frontier(self, bound: float) -> None:
+        self._conn.send(("frontier", bound))
+
+    def done(self, finals: Dict[int, Dict[str, Any]]) -> None:
+        self._conn.send(("done", finals))
+
+    def err(self, tb: str) -> None:
+        self._conn.send(("err", tb))
+
+    def close(self) -> None:
+        self._conn.close()
+
+
+class SocketRecordSink:
+    """Record shipments as FFLY frames on a sustained stream to the
+    coordinator's listener (the ``records`` channel)."""
+
+    def __init__(self, addr: Tuple[str, int], rank: int, *,
+                 retry_s: float = _CONNECT_RETRY_S):
+        self._stream = _connect_retry(addr, retry_s)
+        self._stream.send(encode_message(
+            {"type": "hello", "channel": "records", "src": rank}))
+
+    def records(self, bound, recs):
+        self._stream.send(encode_message(
+            {"type": "records", "bound": bound, "records": recs}))
+
+    def frontier(self, bound):
+        self._stream.send(encode_message(
+            {"type": "frontier", "bound": bound}))
+
+    def done(self, finals):
+        self._stream.send(encode_message({"type": "done", "stats": finals}))
+
+    def err(self, tb):
+        self._stream.send(encode_message({"type": "err", "traceback": tb}))
+
+    def close(self):
+        self._stream.close()
+
+
+# ---------------------------------------------------------------------------
+# the host loop: a group of shards between exchanges
+# ---------------------------------------------------------------------------
+
+def run_host_windows(shards: Sequence[Any], mailbox: Mailbox,
+                     lookahead: float, sink: Any,
+                     owner_of_shard: Optional[Dict[int, int]] = None) -> int:
+    """Drive a *group* of shard engines under the mail-exchange barrier.
+
+    Per window: advertise ``min(own next event, undelivered outgoing
+    mail)``; everyone computes the same ``T = min(all advertised)``; exit
+    together at ``T = +inf``; otherwise deliver incoming mail, run every
+    shard's events in ``[T, T + lookahead)``, route produced mail (intra-
+    group locally, cross-group into next window's outbox). Records ship
+    to ``sink`` every few windows tagged with the covered bound, so the
+    coordinator replays strictly below the fleet-wide safe frontier.
+    ``owner_of_shard`` maps a destination shard id to the peer that owns
+    it (identity when every peer is a single shard). Returns the window
+    count."""
+    group = {s.shard_id: s for s in shards}
+    owner = owner_of_shard or {}
+    inf = float("inf")
+    windows = 0
+    acc: Dict[str, list] = {"contribs": [], "epoch_starts": [],
+                            "migrations": []}
+
+    def ship(bound: float) -> None:
+        if any(acc.values()):
+            sink.records(bound, {k: list(v) for k, v in acc.items()})
+            for k in acc:
+                acc[k] = []
+        else:
+            sink.frontier(bound)
+
+    def peek_min() -> float:
+        return min((inf if (t := s.peek()) is None else t
+                    for s in group.values()), default=inf)
+
+    def deliver(mail: List[Mail]) -> None:
+        by_dst: Dict[int, List[Mail]] = {}
+        for m in mail:
+            by_dst.setdefault(m.dst_shard, []).append(m)
+        for dst in sorted(by_dst):
+            group[dst].deliver(by_dst[dst])
+
+    outbox: Dict[int, List[Mail]] = {p: [] for p in mailbox.peer_ids}
+    my_t = peek_min()
+    while True:
+        T, incoming = mailbox.exchange(my_t, outbox)
+        outbox = {p: [] for p in mailbox.peer_ids}
+        if T == inf:
+            break
+        if incoming:
+            deliver(incoming)
+        bound = T + lookahead
+        local: List[Mail] = []
+        mail_min = inf
+        for sid in sorted(group):
+            res = group[sid].run_window(bound, [])
+            for k, v in res.records.items():
+                acc[k].extend(v)
+            for m in res.mail:
+                _check_mail_within_lookahead(m, bound)
+                if m.dst_shard in group:
+                    local.append(m)       # delivered below => covered by
+                else:                     # the next peek_min()
+                    outbox.setdefault(owner.get(m.dst_shard, m.dst_shard),
+                                      []).append(m)
+                    mail_min = min(mail_min, m.time)
+        if local:
+            deliver(local)
+        my_t = min(peek_min(), mail_min)
+        windows += 1
+        if windows % _SHIP_EVERY_WINDOWS == 0:
+            ship(bound)
+    ship(inf)
+    finals = {}
+    for sid in sorted(group):
+        f = group[sid].final_stats()
+        f["engine"]["windows"] = windows
+        finals[sid] = f
+    sink.done(finals)
+    return windows
+
+
+# ---------------------------------------------------------------------------
+# multi-host execution: N shard-group processes connected only by sockets
+# ---------------------------------------------------------------------------
+
+def _host_proc_main(conn) -> None:
+    """Entry point of one host process (localhost harness). Bootstrap
+    rides the spawn pipe — (rank, shard group, owner map, lookahead,
+    record address) in, bound mail port out, peer directory in — and
+    every byte of the window protocol after that rides TCP."""
+    import traceback
+    sink = None
+    mailbox = None
+    try:
+        rank, group, owner, lookahead, record_addr = conn.recv()
+        mailbox = SocketMailbox(rank)
+        conn.send(("port", mailbox.port))
+        directory = conn.recv()
+        sink = SocketRecordSink(record_addr, rank)
+        mailbox.connect(directory)
+        conn.send(("ready",))
+        run_host_windows(group, mailbox, lookahead, sink, owner)
+    except BaseException:
+        tb = traceback.format_exc()
+        try:
+            if sink is not None:
+                sink.err(tb)
+            else:
+                conn.send(("err", tb))
+        except (BrokenPipeError, OSError):
+            pass
+    finally:
+        if mailbox is not None:
+            mailbox.close()
+        if sink is not None:
+            sink.close()
+        conn.close()
+
+
+def drain_host_records(records: "queue.Queue", num_hosts: int,
+                       on_chunk: Callable[[Optional[float],
+                                           Dict[int, Dict[str, list]]], None],
+                       *, timeout_s: float = _BARRIER_TIMEOUT_S
+                       ) -> Dict[int, Dict[str, Any]]:
+    """Coordinator side of the record protocol: consume ``(type, src,
+    msg)`` tuples from ``records`` (a ``SocketMailbox.records`` queue)
+    until every host reported ``done``; call ``on_chunk`` exactly like
+    ``PeerShardedEngine.run`` does. Raises if a host errors, dies (its
+    record stream closes before ``done``), or the mesh stalls. Returns
+    the per-shard final stats."""
+    inf = float("inf")
+    frontiers = {r: 0.0 for r in range(num_hosts)}
+    done: set = set()
+    finals: Dict[int, Dict[str, Any]] = {}
+    replay_frontier = 0.0
+    while len(done) < num_hosts:
+        try:
+            kind, src, msg = records.get(timeout=timeout_s)
+        except queue.Empty:
+            raise RuntimeError(
+                f"multi-host mesh made no progress for {timeout_s}s "
+                "(host stalled?)") from None
+        if kind == "err":
+            raise RuntimeError(f"shard host {src} failed:\n"
+                               f"{msg['traceback']}")
+        if kind == "lost":
+            if src in done:
+                continue          # clean close after its done message
+            raise RuntimeError(
+                f"shard host {src} died mid-run ({msg['err']})")
+        if kind == "records":
+            frontiers[src] = msg["bound"]
+            on_chunk(None, {src: msg["records"]})
+        elif kind == "frontier":
+            frontiers[src] = msg["bound"]
+        elif kind == "done":
+            finals.update(msg["stats"])
+            done.add(src)
+            frontiers[src] = inf
+        new_frontier = min(frontiers.values())
+        if new_frontier > replay_frontier:
+            replay_frontier = new_frontier
+            on_chunk(replay_frontier, {})
+    on_chunk(inf, {})
+    return finals
+
+
+def merge_host_finals(finals: Dict[int, Dict[str, Any]], *, wall_s: float,
+                      num_shards: int, num_hosts: int) -> Dict[str, Any]:
+    """Fold per-shard final stats from a multi-host run into one
+    engine-stats dict (shared by ``HostShardedEngine.stats`` and
+    ``FleetSimulator.run_multihost`` so the stats shape cannot
+    diverge)."""
+    windows = max((f["engine"].get("windows", 0) for f in finals.values()),
+                  default=0)
+    stats = _merge_shard_stats(finals, wall_s=wall_s, windows=windows,
+                               num_shards=num_shards)
+    stats["num_hosts"] = num_hosts
+    return stats
+
+
+class HostShardedEngine:
+    """Multi-host executor: N OS processes, each owning a group of
+    ``EdgeShard`` engines, connected **only by TCP sockets** — the
+    localhost harness for the protocol that runs across machines. The
+    window barrier rides the ``SocketMailbox`` all-to-all exchange
+    exactly as ``PeerShardedEngine``'s rides its pipes, and the parent
+    drains record frames from its own listener, so ``on_chunk`` sees the
+    same contract (and the replay stays bit-identical to
+    ``SerialExecutor`` for any host count)."""
+
+    def __init__(self, shards: Sequence[Any], *, lookahead: float,
+                 hosts: int):
+        if lookahead is None or lookahead <= 0:
+            raise ValueError("multi-host execution needs a positive "
+                             "lookahead")
+        shards = sorted(shards, key=lambda s: s.shard_id)
+        self.num_hosts = max(1, min(hosts, len(shards)))
+        self.shard_ids = [s.shard_id for s in shards]
+        self.owner = {sid: sid % self.num_hosts for sid in self.shard_ids}
+        # the parent's listener doubles as the record collector; it never
+        # joins the mail mesh (no connect), so rank is out-of-band
+        self._collector = SocketMailbox(-1)
+        self._final: Dict[int, Dict[str, Any]] = {}
+        self.windows = 0
+        self.wall_s = 0.0
+        ctx = mp.get_context("spawn")
+        self._procs = []
+        self._boots = []
+        record_addr = ("127.0.0.1", self._collector.port)
+        try:
+            for rank in range(self.num_hosts):
+                group = [s for s in shards
+                         if self.owner[s.shard_id] == rank]
+                parent, child = ctx.Pipe()
+                proc = ctx.Process(target=_host_proc_main, args=(child,),
+                                   daemon=True)
+                proc.start()
+                parent.send((rank, group, self.owner, lookahead,
+                             record_addr))
+                self._procs.append(proc)
+                self._boots.append(parent)
+            directory = {rank: ("127.0.0.1", self._boot_recv(rank)[1])
+                         for rank in range(self.num_hosts)}
+            for parent in self._boots:
+                parent.send(directory)
+            for rank in range(self.num_hosts):
+                self._boot_recv(rank)             # ("ready",)
+        except BaseException:
+            # a failed bootstrap must not leak the collector listener or
+            # the already-spawned host processes (the caller never gets
+            # an engine to close)
+            self.close()
+            raise
+
+    def _boot_recv(self, rank: int):
+        conn = self._boots[rank]
+        if not conn.poll(timeout=120):
+            raise RuntimeError(f"shard host {rank} did not start "
+                               "(bootstrap timeout)")
+        try:
+            msg = conn.recv()
+        except EOFError:
+            raise RuntimeError(
+                f"shard host {rank} died during startup") from None
+        if msg[0] == "err":
+            raise RuntimeError(f"shard host {rank} failed during "
+                               f"startup:\n{msg[1]}")
+        return msg
+
+    def run(self, on_chunk) -> "HostShardedEngine":
+        wall0 = time.perf_counter()
+        self._final = drain_host_records(self._collector.records,
+                                         self.num_hosts, on_chunk)
+        self.wall_s = time.perf_counter() - wall0
+        return self
+
+    def stats(self) -> Dict[str, Any]:
+        out = merge_host_finals(self._final, wall_s=self.wall_s,
+                                num_shards=len(self.shard_ids),
+                                num_hosts=self.num_hosts)
+        self.windows = out["windows"]
+        return out
+
+    def close(self) -> None:
+        self._collector.close()
+        for conn in self._boots:
+            try:
+                conn.close()
+            except OSError:
+                pass
+        for proc in self._procs:
+            proc.join(timeout=5)
+            if proc.is_alive():
+                proc.terminate()

@@ -58,7 +58,8 @@ class ScenarioSpec:
     migration_codec: str = "raw"     # raw | int8 | delta (backhaul pricing)
     # sharded execution (engine README: shard/mailbox model)
     shards: int = 1
-    workers: Optional[int] = None     # process-parallel shard engines
+    workers: Optional[int] = None     # process-parallel shard engines (pipes)
+    hosts: Optional[int] = None       # socket-sharded host processes
     flush_interval_s: Optional[float] = None  # async batched-flush grid
 
     def replace(self, **kw) -> "ScenarioSpec":
@@ -138,6 +139,7 @@ def build_scenario(spec: ScenarioSpec) -> FleetSimulator:
                           migration_codec=spec.migration_codec,
                           measure_pack=spec.measure_pack,
                           shards=spec.shards, workers=spec.workers,
+                          hosts=spec.hosts,
                           flush_interval_s=spec.flush_interval_s)
 
 
@@ -152,7 +154,8 @@ def run_scenario(spec: ScenarioSpec) -> Dict[str, Any]:
                    "num_edges": spec.num_edges, "rounds": spec.rounds,
                    "mode": spec.mode, "max_replicas": spec.max_replicas,
                    "slots": spec.slots, "seed": spec.seed,
-                   "shards": spec.shards, "workers": spec.workers},
+                   "shards": spec.shards, "workers": spec.workers,
+                   "hosts": spec.hosts},
         "rounds": result.rounds,
         "migrations": result.migration_summary,
         "engine": result.engine_stats,

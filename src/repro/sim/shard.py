@@ -136,7 +136,12 @@ class ShardEdge:
 @dataclass
 class ShardClient:
     """Timing-only view of one device; travels between shards inside the
-    migration Mail when its destination edge is remote."""
+    migration Mail when its destination edge is remote. Wire contract
+    (multi-host sharding, docs/ARCHITECTURE.md §3.3): every field except
+    ``batch_event`` is plain data the FFLY message codec can carry, and
+    ``batch_event`` must be None whenever the client travels — clients
+    only migrate between batches, so a live engine reference here would
+    be a protocol bug, and ``sim.mailbox`` refuses to serialize it."""
     client_id: str
     cohort_key: Tuple[int, int]
     replica: int

@@ -55,6 +55,9 @@ from repro.sim.edge import SimEdge
 from repro.sim.engine import (EventKind, Mail, PeerShardedEngine,
                               ProcessExecutor, SerialExecutor, ShardedEngine)
 from repro.sim.fleet import Fleet
+from repro.sim.mailbox import (HostShardedEngine, SocketMailbox,
+                               SocketRecordSink, drain_host_records,
+                               merge_host_finals, run_host_windows)
 from repro.sim.metrics import FleetMetrics, MigrationRecord
 from repro.sim.shard import EdgeShard, ShardClient, ShardEdge, batch_parts
 
@@ -91,7 +94,11 @@ class FleetSimulator:
     """Sharded discrete-event FedFly simulation over a ``Fleet`` and
     ``SimEdge``s. ``shards=1`` (default) is the degenerate single-heap
     case; ``workers=N`` runs the shard engines in N parallel processes
-    (requires ``measure_pack=False`` — workers are JAX-free)."""
+    over pipes; ``hosts=N`` runs N shard-group processes connected only
+    by TCP sockets — the localhost harness of the multi-host protocol
+    (``run_multihost`` spreads the same protocol over separate
+    machines). Both require ``measure_pack=False`` — workers and hosts
+    are JAX-free."""
 
     def __init__(self, fleet: Fleet, edges: Sequence[SimEdge], *,
                  trace: Optional[MobilityTrace] = None,
@@ -103,6 +110,7 @@ class FleetSimulator:
                  measure_pack: bool = True,
                  shards: int = 1,
                  workers: Optional[int] = None,
+                 hosts: Optional[int] = None,
                  flush_interval_s: Optional[float] = None,
                  reprice_tol: float = 0.05):
         if mode not in ("sync", "async"):
@@ -117,6 +125,23 @@ class FleetSimulator:
             raise ValueError("workers (multiprocessing shards) require "
                              "measure_pack=False: shard processes are "
                              "JAX-free and cannot serialize checkpoints")
+        if hosts is not None:
+            if hosts < 1:
+                raise ValueError(f"hosts must be >= 1, got {hosts}")
+            if mode != "async":
+                raise ValueError(
+                    "multi-host execution (hosts=) is async-only: the "
+                    "sync round restart is control mail the coordinator "
+                    "injects mid-run, which the self-synchronizing host "
+                    "mesh has no channel for")
+            if measure_pack:
+                raise ValueError("hosts (socket-sharded execution) "
+                                 "requires measure_pack=False: host "
+                                 "processes are JAX-free and cannot "
+                                 "serialize checkpoints")
+            if workers is not None:
+                raise ValueError("hosts and workers are mutually "
+                                 "exclusive (sockets vs pipes)")
         self.fleet = fleet
         self.edge_order = [e.edge_id for e in edges]
         self.edges: Dict[str, SimEdge] = {e.edge_id: e for e in edges}
@@ -131,6 +156,8 @@ class FleetSimulator:
         self.migrator = MigrationExecutor(codec=migration_codec)
         self.num_shards = min(shards, len(self.edge_order))
         self.workers = workers
+        self.hosts = (min(hosts, self.num_shards) if hosts is not None
+                      else None)
         self.flush_interval_s = flush_interval_s
         self.reprice_tol = reprice_tol
 
@@ -461,6 +488,25 @@ class FleetSimulator:
         if errs:
             raise errs[0]
 
+    def _drain_async_tail(self) -> None:
+        """Flush any buffered async updates past the last grid point."""
+        if self.mode == "async" and self._buffer:
+            self._grid_k += 1
+            self._fire_flush(self._grid_k * self._flush_dt)
+
+    def _build_result(self, stats: Dict[str, Any]) -> FleetResult:
+        """Fold merged engine stats + accumulated metrics into the
+        FleetResult (shared by every executor path)."""
+        by_edge = {e["edge_id"]: e for e in stats.pop("edges")}
+        return FleetResult(
+            mode=self.mode,
+            rounds=self.metrics.build_rounds(),
+            migration_summary=self.metrics.migration_summary(),
+            engine_stats=stats,
+            edge_stats=[by_edge[eid] for eid in self.edge_order],
+            final_params=self.agg.params,
+            metrics=self.metrics)
+
     def run(self, rounds: int) -> FleetResult:
         self.num_rounds = rounds
         self._expected = self.fleet.num_clients
@@ -473,10 +519,17 @@ class FleetSimulator:
                 s.bootstrap_async()
         # peer-driven mesh when every shard gets its own worker (async):
         # one semaphore barrier per window instead of parent roundtrips
-        use_peer = (self.workers is not None and self.mode == "async"
+        use_hosts = self.hosts is not None
+        use_peer = (not use_hosts
+                    and self.workers is not None and self.mode == "async"
                     and self.num_shards > 1
                     and self.workers >= self.num_shards)
-        if use_peer:
+        if use_hosts:
+            # socket-sharded host groups (localhost harness of the
+            # multi-host protocol); same record contract as the peer mesh
+            self.coordinator = HostShardedEngine(
+                shards, lookahead=self._lookahead(), hosts=self.hosts)
+        elif use_peer:
             self.coordinator = PeerShardedEngine(
                 shards, lookahead=self._lookahead())
         else:
@@ -492,16 +545,13 @@ class FleetSimulator:
                         key="", payload={"round_idx": 0}))
         wall0 = time.perf_counter()
         try:
-            if use_peer:
+            if use_hosts or use_peer:
                 self.coordinator.run(self._peer_on_chunk())
             elif self.workers and self.mode == "async":
                 self._run_overlapped()
             else:
                 self.coordinator.run(self._on_window)
-            # drain any tail of buffered async updates past the last grid
-            if self.mode == "async" and self._buffer:
-                self._grid_k += 1
-                self._fire_flush(self._grid_k * self._flush_dt)
+            self._drain_async_tail()
             stats = self.coordinator.stats()
             # uniform wall accounting: windows + replay + flush drain,
             # whichever path ran them
@@ -511,12 +561,78 @@ class FleetSimulator:
                                        if stats["wall_s"] > 0 else 0.0)
         finally:
             self.coordinator.close()
-        by_edge = {e["edge_id"]: e for e in stats.pop("edges")}
-        return FleetResult(
-            mode=self.mode,
-            rounds=self.metrics.build_rounds(),
-            migration_summary=self.metrics.migration_summary(),
-            engine_stats=stats,
-            edge_stats=[by_edge[eid] for eid in self.edge_order],
-            final_params=self.agg.params,
-            metrics=self.metrics)
+        return self._build_result(stats)
+
+    def run_multihost(self, rounds: int, *, rank: int,
+                      listen: Tuple[str, int],
+                      addresses: Dict[int, Tuple[str, int]]
+                      ) -> Optional[FleetResult]:
+        """Run this process's slice of a simulation spread over separate
+        machines (``examples/fleet_sim_multihost.py``). Every rank must
+        construct an *identical* FleetSimulator (same fleet, edges, seed,
+        spec) and call this with the same ``addresses`` directory
+        ``{rank: (host, port)}``; ``listen`` is the (host, port) this
+        rank binds. Rank 0 is the coordinator — it replays the numerics
+        and returns the ``FleetResult`` — and every rank, 0 included,
+        runs one shard-group host loop. The window barrier, cross-shard
+        mail, and record shipments all ride TCP frames
+        (docs/ARCHITECTURE.md); results are bit-identical to a
+        single-process ``SerialExecutor`` run."""
+        if self.mode != "async":
+            raise ValueError("run_multihost requires mode='async'")
+        if self.measure_pack:
+            raise ValueError("run_multihost requires measure_pack=False")
+        hosts = len(addresses)
+        if sorted(addresses) != list(range(hosts)):
+            raise ValueError(
+                f"address directory must map ranks 0..{hosts - 1} "
+                f"exactly, got {sorted(addresses)} — a gapped directory "
+                "would orphan shards and drop their mail")
+        if rank not in addresses:
+            raise ValueError(f"rank {rank} not in the address directory")
+        self.num_rounds = rounds
+        self._expected = self.fleet.num_clients
+        self._flush_dt = (self.flush_interval_s
+                          if self.flush_interval_s is not None
+                          else self._min_batch_time())
+        shards = self._build_shards(rounds)
+        owner = {s.shard_id: s.shard_id % hosts for s in shards}
+        group = [s for s in shards if owner[s.shard_id] == rank]
+        for s in group:
+            s.bootstrap_async()
+        lookahead = self._lookahead()
+        mailbox = SocketMailbox(rank, host=listen[0], port=listen[1])
+        sink = SocketRecordSink(addresses[0], rank)
+        mailbox.connect(addresses)
+        wall0 = time.perf_counter()
+        try:
+            if rank != 0:
+                run_host_windows(group, mailbox, lookahead, sink, owner)
+                return None
+            # rank 0: drive our own shard group in a thread (it is
+            # JAX-free) while this thread drains records and replays the
+            # numerics — the same split HostShardedEngine gets from its
+            # child processes
+            def host_loop():
+                try:
+                    run_host_windows(group, mailbox, lookahead, sink,
+                                     owner)
+                except BaseException:
+                    import traceback
+                    try:
+                        sink.err(traceback.format_exc())
+                    except OSError:
+                        pass
+            th = threading.Thread(target=host_loop, daemon=True)
+            th.start()
+            finals = drain_host_records(mailbox.records, hosts,
+                                        self._peer_on_chunk())
+            th.join()
+            self._drain_async_tail()
+            stats = merge_host_finals(
+                finals, wall_s=time.perf_counter() - wall0,
+                num_shards=len(shards), num_hosts=hosts)
+            return self._build_result(stats)
+        finally:
+            mailbox.close()
+            sink.close()

@@ -1,0 +1,41 @@
+"""Docs stay navigable: the top-level README and architecture docs
+exist, and no Markdown file carries a broken intra-repo link (the same
+check CI runs via scripts/check_doc_links.py)."""
+from __future__ import annotations
+
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def test_required_docs_exist():
+    for rel in ("README.md", "docs/ARCHITECTURE.md",
+                "benchmarks/README.md", "src/repro/sim/README.md",
+                "src/repro/runtime/README.md"):
+        assert (ROOT / rel).is_file(), f"missing {rel}"
+
+
+def test_readme_covers_the_basics():
+    text = (ROOT / "README.md").read_text()
+    for needle in ("FedFly", "PYTHONPATH=src python -m pytest",
+                   "docs/ARCHITECTURE.md", "src/repro/sim/README.md",
+                   "src/repro/runtime/README.md"):
+        assert needle in text, f"README.md lacks {needle!r}"
+
+
+def test_architecture_specifies_the_wire_format():
+    text = (ROOT / "docs/ARCHITECTURE.md").read_text()
+    for needle in ("0xFFFFFFFFFFFFFFFF", "u32be 0", "FFLY",
+                   '"type": "hello"', '"type": "mail"', '"__w"',
+                   "frontier"):
+        assert needle in text, f"ARCHITECTURE.md lacks {needle!r}"
+
+
+def test_no_broken_intra_repo_links():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "check_doc_links.py"),
+         str(ROOT)],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr

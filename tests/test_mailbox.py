@@ -1,0 +1,240 @@
+"""Shard mailbox wire protocol: FFLY-encoded Mail round-trips (including
+migrated client timing state and empty mailboxes), the SocketMailbox
+window exchange over localhost TCP, and the disconnect abort — a killed
+peer process must fail the barrier with a clear error, never hang it."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import threading
+
+import pytest
+
+from repro.sim.engine import EventKind, Mail
+from repro.sim.mailbox import (SocketMailbox, decode_message, encode_message,
+                               _from_wire, _to_wire)
+from repro.sim.shard import ShardClient
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+
+
+def roundtrip(msg):
+    return decode_message(encode_message(msg))
+
+
+def make_client(**kw) -> ShardClient:
+    base = dict(client_id="dev-0007", cohort_key=(16, 2), replica=3,
+                edge_id="edge-1", num_samples=600, num_batches=2,
+                dev_flops_per_s=13.5e9,
+                moves={0: ("edge-2", 0.5), 2: ("edge-0", 0.25)},
+                dropout=(1, 30.0), epoch=2, batch_idx=1, epochs_done=2,
+                epoch_start_s=12.625, pulled_s=12.5,
+                pending_move=("edge-2", 0.5), move_at=1, done=False)
+    base.update(kw)
+    return ShardClient(**base)
+
+
+# -- message round-trips ------------------------------------------------------
+
+def test_migration_mail_roundtrip():
+    """The cross-shard migration message: client timing state + the
+    in-flight migration record (delta-encoded checkpoint payload size)
+    survive the wire bit-exactly."""
+    client = make_client()
+    mail = Mail(dst_shard=2, time=17.25, kind=EventKind.TRANSFER_DONE,
+                key="dev-0007",
+                payload={"client": "dev-0007", "what": "migration",
+                         "client_state": client,
+                         "mig": {"dst": "edge-3", "nbytes": 519489,
+                                 "pack_s": 0.0071, "unpack_s": 0.0042,
+                                 "start_s": 16.125, "src": "edge-1",
+                                 "queue_s": 0.5}})
+    out = roundtrip({"type": "mail", "time": 17.25, "mail": [mail]})
+    assert out["type"] == "mail" and out["time"] == 17.25
+    (m,) = out["mail"]
+    assert isinstance(m, Mail)
+    assert (m.dst_shard, m.time, m.kind, m.key) == \
+        (2, 17.25, EventKind.TRANSFER_DONE, "dev-0007")
+    assert m.payload["mig"] == mail.payload["mig"]
+    back = m.payload["client_state"]
+    assert isinstance(back, ShardClient)
+    assert back == client
+    assert isinstance(back.cohort_key, tuple)
+    assert back.moves == {0: ("edge-2", 0.5), 2: ("edge-0", 0.25)}
+    assert back.batch_event is None
+
+
+def test_empty_mailbox_and_inf_time_roundtrip():
+    """The common case: a window exchange carrying no mail at all, and
+    the +inf advertisement that terminates the run."""
+    out = roundtrip({"type": "mail", "time": float("inf"), "mail": []})
+    assert out == {"type": "mail", "time": float("inf"), "mail": []}
+
+
+def test_client_state_optional_fields_roundtrip():
+    c = make_client(dropout=None, pending_move=None, moves={}, done=True)
+    out = roundtrip({"type": "mail", "time": 0.0, "mail": [
+        Mail(dst_shard=0, time=1.0, kind=EventKind.TRANSFER_DONE, key="",
+             payload={"client_state": c})]})
+    back = out["mail"][0].payload["client_state"]
+    assert back == c
+    assert back.dropout is None and back.pending_move is None
+    assert back.moves == {}
+
+
+def test_live_batch_event_refuses_to_serialize():
+    c = make_client()
+    c.batch_event = object()      # any live engine reference
+    with pytest.raises(ValueError, match="live batch"):
+        encode_message({"type": "mail", "time": 0.0, "mail": [
+            Mail(dst_shard=0, time=1.0, kind=EventKind.TRANSFER_DONE,
+                 key="x", payload={"client_state": c})]})
+
+
+def test_records_message_roundtrip():
+    """Record shipments: contribution/epoch-start/migration tuples keep
+    their exact floats, tuple-ness, and cohort keys."""
+    recs = {"contribs": [(1.5, "dev-0001", (16, 2), 0, 1, 0.25, 0.125,
+                          600)],
+            "epoch_starts": [(0.125, (16, 2), 1)],
+            "migrations": [("dev-0001", "edge-0", "edge-1", 1, 1.0,
+                            1.015625, 519489, 0.007, 0.0, 0.0086)]}
+    out = roundtrip({"type": "records", "bound": 2.5, "records": recs})
+    assert out == {"type": "records", "bound": 2.5, "records": recs}
+    assert isinstance(out["records"]["contribs"][0][2], tuple)
+
+
+def test_done_message_roundtrip_with_int_keys():
+    stats = {3: {"engine": {"events_processed": 42, "sim_time_s": 1.5,
+                            "windows": 7, "by_kind": {"move": 4}},
+                 "edges": [{"edge_id": "edge-3", "slots": 8}]}}
+    out = roundtrip({"type": "done", "stats": stats})
+    assert out == {"type": "done", "stats": stats}
+    assert list(out["stats"]) == [3]          # int key, not "3"
+
+
+def test_wire_rejects_unknown_objects():
+    with pytest.raises(TypeError, match="wire-encode"):
+        _to_wire(object())
+
+
+# -- property test (hypothesis, optional in minimal envs) --------------------
+
+def test_wire_tree_property():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    scalars = st.one_of(
+        st.none(), st.booleans(), st.integers(-2**62, 2**62),
+        st.floats(allow_nan=False),
+        # numpy '<U' storage truncates *trailing* NULs, so keep \x00 out
+        st.text(st.characters(min_codepoint=1, exclude_categories=["Cs"]),
+                max_size=8))
+    trees = st.recursive(
+        scalars,
+        lambda c: st.one_of(
+            st.lists(c, max_size=3),
+            st.tuples(c, c),
+            st.dictionaries(
+                st.text(st.characters(min_codepoint=1,
+                                      exclude_categories=["Cs"]),
+                        max_size=5), c, max_size=3),
+            st.dictionaries(st.integers(0, 99), c, max_size=3)),
+        max_leaves=12)
+
+    @hyp.settings(max_examples=60, deadline=None)
+    @hyp.given(payload=trees, time=st.floats(allow_nan=False),
+               dst=st.integers(0, 63),
+               key=st.text(st.characters(min_codepoint=1,
+                                         exclude_categories=["Cs"]),
+                           max_size=6),
+               kind=st.sampled_from(list(EventKind)))
+    def check(payload, time, dst, key, kind):
+        msg = {"type": "mail", "time": time,
+               "mail": [Mail(dst_shard=dst, time=time, kind=kind, key=key,
+                             payload={"v": payload})]}
+        out = roundtrip(msg)
+        assert out["time"] == time
+        (m,) = out["mail"]
+        assert (m.dst_shard, m.time, m.kind, m.key) == (dst, time, kind,
+                                                        key)
+        assert m.payload == {"v": payload}
+
+    check()
+
+
+def test_from_wire_rejects_unknown_tag():
+    with pytest.raises(ValueError, match="unknown wire tag"):
+        _from_wire({"__w": "garbage"})
+
+
+# -- the socket mesh ----------------------------------------------------------
+
+def test_socket_exchange_two_endpoints():
+    """Two SocketMailboxes on localhost: both compute the same window
+    start T, and mail crosses with its payload intact."""
+    a = SocketMailbox(0)
+    b = SocketMailbox(1)
+    directory = {0: ("127.0.0.1", a.port), 1: ("127.0.0.1", b.port)}
+    try:
+        a.connect(directory)
+        b.connect(directory)
+        mail = Mail(dst_shard=1, time=5.5, kind=EventKind.TRANSFER_DONE,
+                    key="dev-0001", payload={"client": "dev-0001",
+                                             "what": "update"})
+        out = {}
+
+        def run_b():
+            out["b"] = b.exchange(7.0, {})
+
+        th = threading.Thread(target=run_b)
+        th.start()
+        T, incoming = a.exchange(3.0, {1: [mail]})
+        th.join(timeout=30)
+        assert T == 3.0 and incoming == []
+        Tb, inc_b = out["b"]
+        assert Tb == 3.0
+        assert len(inc_b) == 1 and inc_b[0].key == "dev-0001"
+        assert inc_b[0].payload == mail.payload
+    finally:
+        a.close()
+        b.close()
+
+
+_PEER_SCRIPT = """
+import os, sys
+from repro.sim.mailbox import SocketMailbox
+parent_port = int(sys.argv[1])
+mb = SocketMailbox(1)
+print(mb.port, flush=True)
+mb.connect({0: ("127.0.0.1", parent_port), 1: ("127.0.0.1", mb.port)})
+T, mail = mb.exchange(1.0, {})          # window 1 completes normally
+os._exit(0)                             # then the host is killed
+"""
+
+
+def test_killed_peer_process_aborts_exchange():
+    """Regression for the hang the disconnect abort prevents: a peer
+    host process that dies mid-window must turn the blocked barrier into
+    a RuntimeError (the socket analog of PR 3's producer abort), not a
+    deadlock."""
+    mb = SocketMailbox(0, barrier_timeout_s=60.0)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [sys.executable, "-c", _PEER_SCRIPT, str(mb.port)],
+        stdout=subprocess.PIPE, text=True, env=env)
+    try:
+        peer_port = int(proc.stdout.readline())
+        mb.connect({0: ("127.0.0.1", mb.port),
+                    1: ("127.0.0.1", peer_port)})
+        T, incoming = mb.exchange(2.0, {})          # window 1: peer alive
+        assert T == 1.0 and incoming == []
+        proc.wait(timeout=30)                       # peer is gone now
+        with pytest.raises(RuntimeError,
+                           match="disconnected|unreachable"):
+            mb.exchange(3.0, {})                    # window 2: abort
+    finally:
+        proc.kill()
+        mb.close()

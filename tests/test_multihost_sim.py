@@ -1,0 +1,98 @@
+"""Multi-host sharded simulation over localhost TCP: bit-identity with
+the in-process SerialExecutor across host counts, validation of the
+hosts= contract, and the killed-host abort."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.mobility import MobilityTrace, poisson_moves
+from repro.models.vgg import VGG5
+from repro.optim.optimizers import sgd
+from repro.optim.schedules import constant
+from repro.sim.edge import make_edges
+from repro.sim.fleet import Fleet, make_fleet_specs
+from repro.sim.mailbox import HostShardedEngine
+from repro.sim.simulator import FleetSimulator
+
+
+def flat_params(tree):
+    return np.concatenate([np.asarray(x).ravel()
+                           for x in jax.tree.leaves(tree)])
+
+
+def make_sim(*, shards=4, hosts=None, num_clients=16, num_edges=4,
+             rounds=3, seed=1, rate=0.3, **kw):
+    edges = make_edges(num_edges, slots=8)
+    specs = make_fleet_specs(num_clients, [e.edge_id for e in edges],
+                             batch_size=8, num_batches=3)
+    fleet = Fleet(VGG5(), sgd(momentum=0.9), specs, split_point=2,
+                  lr_schedule=constant(0.01), max_replicas=4, seed=seed)
+    trace = MobilityTrace(poisson_moves([s.client_id for s in specs],
+                                        [e.edge_id for e in edges],
+                                        rounds, rate, seed=seed))
+    return FleetSimulator(fleet, edges, mode=kw.pop("mode", "async"),
+                          shards=shards, hosts=hosts, trace=trace,
+                          measure_pack=kw.pop("measure_pack", False), **kw)
+
+
+def test_host_count_invariance():
+    """1 vs 2 vs 4 socket hosts on localhost: per-round metrics, final
+    params, migration summary, and per-edge stats all bit-identical to
+    the in-process SerialExecutor — the transport never touches the
+    simulation."""
+    base = make_sim().run(3)                       # SerialExecutor
+    assert base.migration_summary["count"] > 0     # migrations do cross
+    for hosts in (1, 2, 4):
+        other = make_sim(hosts=hosts).run(3)
+        assert other.engine_stats["num_hosts"] == hosts
+        assert other.rounds == base.rounds
+        assert other.migration_summary == base.migration_summary
+        assert other.edge_stats == base.edge_stats
+        assert (flat_params(other.final_params)
+                == flat_params(base.final_params)).all()
+
+
+def test_hosts_validation():
+    with pytest.raises(ValueError, match="async-only"):
+        make_sim(mode="sync", hosts=2)
+    with pytest.raises(ValueError, match="measure_pack=False"):
+        make_sim(hosts=2, measure_pack=True)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        make_sim(hosts=2, workers=2)
+    with pytest.raises(ValueError, match="hosts must be"):
+        make_sim(hosts=0)
+
+
+def test_hosts_clamped_to_shards():
+    sim = make_sim(shards=2, hosts=8)
+    assert sim.hosts == 2
+
+
+def test_run_multihost_rejects_gapped_directory():
+    """A directory whose ranks are not exactly 0..H-1 would orphan the
+    missing rank's shards and drop their mail — reject it up front."""
+    sim = make_sim()
+    with pytest.raises(ValueError, match="0..1"):
+        sim.run_multihost(1, rank=0, listen=("127.0.0.1", 0),
+                          addresses={0: ("127.0.0.1", 1), 2: ("127.0.0.1", 2)})
+
+
+def test_killed_host_process_aborts_run():
+    """A host process killed after the mesh handshake must abort the
+    coordinator's run with a clear error (via the surviving hosts'
+    disconnect aborts and/or the dead host's record-stream close) —
+    never hang the window barrier."""
+    sim = make_sim()
+    shards = sim._build_shards(3)
+    for s in shards:
+        s.bootstrap_async()
+    engine = HostShardedEngine(shards, lookahead=sim._lookahead(), hosts=2)
+    try:
+        engine._procs[1].kill()
+        with pytest.raises(RuntimeError,
+                           match="died|disconnected|failed"):
+            engine.run(lambda *a: None)
+    finally:
+        engine.close()

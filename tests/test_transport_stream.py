@@ -275,6 +275,34 @@ def test_chunked_checkpoint_pipeline_roundtrip():
         srv.close()
 
 
+def test_per_connection_on_close_fires_even_if_deliver_raises():
+    """A per-connection deliver callback that raises (bad frame, buggy
+    consumer) must still fire on_close with the error — a mailbox
+    waiting on that connection would otherwise hang until its barrier
+    timeout instead of aborting."""
+    closes = []
+
+    def hooks():
+        def deliver(b):
+            raise ValueError("poisoned frame")
+
+        def on_close(err):
+            closes.append(err)
+        return deliver, on_close
+
+    srv = SocketTransport()
+    srv.serve(per_connection=hooks)
+    try:
+        with srv.connect("127.0.0.1", srv.port) as s:
+            s.send(b"boom")
+        deadline = time.time() + 10
+        while not closes and time.time() < deadline:
+            time.sleep(0.05)
+        assert len(closes) == 1 and isinstance(closes[0], ValueError)
+    finally:
+        srv.close()
+
+
 def test_checkpoint_stream_roundtrip():
     """A sustained migration stream: several EdgeCheckpoints back to back
     on one connection, all unpacked intact."""
