@@ -6,15 +6,19 @@ JSON: engine throughput (events/sec), per-scenario per-round records
 
 Sharded execution: ``--shards K`` splits the event queue by edge into K
 shard engines under the conservative-lookahead window protocol;
-``--workers N`` runs them in N parallel processes (defaults to K when
---shards > 1). ``--shard-sweep 1 2 4`` runs the first selected scenario
-once per shard count, verifies the per-round metrics are bit-identical
-across counts, and writes a per-shard-count events/sec artifact
-(``--artifact``, default bench_fleet_shards.json). Parallel speedup is
-bounded by the machine: event processing shards across workers but the
-cohort JAX numerics stay on the coordinator, so expect the ≥2x point
-at 10k devices to need ≥4 cores (more devices → more events per window
-→ better scaling; the artifact records os.cpu_count for context).
+``--workers N`` runs them in N parallel shard-group processes (defaults
+to K when --shards > 1). Worker processes own BOTH the timing engines
+and the cohort XLA training (each group trains the cohorts whose
+clients it hosts; the coordinator only aggregates and broadcasts), so
+``--cohorts M`` with M > 1 is the regime where workers speed up the
+XLA-dominated wall clock, not just event throughput. ``--shard-sweep
+1 2 4`` runs the first selected scenario once per shard count, verifies
+the per-round metrics are bit-identical across counts, asserts that
+worker runs actually trained in the worker processes (per-group
+pid/cohort ownership lands in the artifact), and writes a
+per-shard-count events/sec artifact (``--artifact``, default
+bench_fleet_shards.json). The artifact records os.cpu_count: the ≥1.5x
+point for 4 workers at 10k devices needs ≥4 cores.
 
 Multi-host execution: ``--hosts N`` runs the first selected scenario on
 N shard-group host processes connected only by TCP sockets (the
@@ -48,11 +52,28 @@ def _scenario_spec(name: str, args, n_clients: int, n_edges: int,
     return SCENARIOS[name].replace(
         num_clients=n_clients, num_edges=n_edges, rounds=rounds,
         max_replicas=args.max_replicas, seed=args.seed,
+        num_cohorts=args.cohorts,
         shards=shards, workers=workers,
         # skip real checkpoint serialization at benchmark scale so
         # events/sec measures the engine, not pickle-free packing
-        # (required anyway for worker processes, which are JAX-free)
+        # (required anyway for worker processes, which only price
+        # migrations from the cached cohort tables)
         measure_pack=(n_clients <= 128 and workers is None))
+
+
+def _trainer_summary(engine_stats) -> dict:
+    """Per-process cohort-ownership proof for the artifact: which OS
+    processes actually ran cohort training, and how much."""
+    trainers = engine_stats.get("trainers", {})
+    return {
+        "coordinator_pid": os.getpid(),
+        "per_group": {str(g): {"pid": t["pid"],
+                               "epochs_trained": t["epochs_trained"],
+                               "cohorts": [list(c) for c in t["cohorts"]]}
+                      for g, t in sorted(trainers.items())},
+        "worker_trained": bool(trainers) and all(
+            t["pid"] != os.getpid() for t in trainers.values()),
+    }
 
 
 def _run_one(name: str, spec) -> dict:
@@ -67,6 +88,7 @@ def _run_one(name: str, spec) -> dict:
         "sim_time_s": round(rep["engine"]["sim_time_s"], 3),
         "rounds": rep["rounds"],
         "migration_overhead": rep["migrations"],
+        "trainers": _trainer_summary(rep["engine"]),
     }
 
 
@@ -75,8 +97,8 @@ def _shard_sweep(args, name: str, n_clients: int, n_edges: int,
     """One scenario per shard count; asserts bit-identical per-round
     metrics and emits the events/sec artifact."""
     sweep = {"scenario": name, "devices": n_clients, "edges": n_edges,
-             "rounds": rounds, "cpu_count": os.cpu_count(),
-             "per_shards": {}}
+             "rounds": rounds, "cohorts": args.cohorts,
+             "cpu_count": os.cpu_count(), "per_shards": {}}
     baseline_rounds = None
     for k in args.shard_sweep:
         workers = (k if k > 1 else None) if args.workers is None \
@@ -87,10 +109,15 @@ def _shard_sweep(args, name: str, n_clients: int, n_edges: int,
         spec = _scenario_spec(name, args, n_clients, n_edges, rounds,
                               k, workers).replace(measure_pack=False)
         res = _run_one(name, spec)
+        if workers:
+            # the whole point of worker-owned cohorts: XLA training must
+            # demonstrably execute in the worker processes
+            assert res["trainers"]["worker_trained"], \
+                "cohort training did not run in the worker processes"
         sweep["per_shards"][str(k)] = {
             "workers": workers, "events_per_sec": res["events_per_sec"],
             "wall_s": res["wall_s"], "windows": res["windows"],
-            "events": res["events"]}
+            "events": res["events"], "trainers": res["trainers"]}
         if baseline_rounds is None:
             baseline_rounds = res["rounds"]
             sweep["rounds"] = res["rounds"]
@@ -137,7 +164,7 @@ def _host_sweep(args, name: str, n_clients: int, n_edges: int,
         sweep["per_executor"][label] = {
             **kw, "events_per_sec": res["events_per_sec"],
             "wall_s": res["wall_s"], "windows": res["windows"],
-            "events": res["events"]}
+            "events": res["events"], "trainers": res["trainers"]}
         if baseline_rounds is None:
             baseline_rounds = res["rounds"]
             sweep["rounds"] = res["rounds"]
@@ -161,6 +188,10 @@ def main(argv=None) -> None:
                     default=256, help="fleet size (alias: --devices)")
     ap.add_argument("--edges", type=int, default=8)
     ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--cohorts", type=int, default=1,
+                    help="cohort signatures in the fleet; >1 is the "
+                         "XLA-dominated regime worker-owned training "
+                         "parallelizes")
     ap.add_argument("--max-replicas", type=int, default=4)
     ap.add_argument("--shards", type=int, default=1,
                     help="edge-partitioned shard engines")

@@ -10,9 +10,15 @@ O(replicas), and whole flush-windows of FedAsync updates fold into the
 global model in ONE fedavg_agg kernel dispatch instead of one tree-map
 per update. Per-round metrics are bit-identical for any shard count.
 
+With FLEET_SIM_WORKERS set, the shard-group worker processes own the
+cohort XLA training too (the coordinator only aggregates and
+broadcasts); FLEET_SIM_COHORTS>1 creates the many-cohort regime where
+that parallelism shows up in the wall clock.
+
   PYTHONPATH=src python examples/fleet_sim.py              # 4 shards
   FLEET_SIM_SHARDS=1 PYTHONPATH=src python examples/fleet_sim.py
-  FLEET_SIM_WORKERS=4 PYTHONPATH=src python examples/fleet_sim.py
+  FLEET_SIM_WORKERS=4 FLEET_SIM_COHORTS=8 PYTHONPATH=src \
+      python examples/fleet_sim.py
 """
 import json
 import os
@@ -30,6 +36,7 @@ NUM_EDGES = 8
 ROUNDS = 3
 SHARDS = int(os.environ.get("FLEET_SIM_SHARDS", "4"))
 WORKERS = int(os.environ.get("FLEET_SIM_WORKERS", "0")) or None
+COHORTS = int(os.environ.get("FLEET_SIM_COHORTS", "1"))
 
 
 def main():
@@ -39,7 +46,8 @@ def main():
     #    each training 2 batches of 16 per local epoch at split point SP2
     edges = make_edges(NUM_EDGES, slots=64)
     specs = make_fleet_specs(NUM_CLIENTS, [e.edge_id for e in edges],
-                             batch_size=16, num_batches=2)
+                             batch_size=16, num_batches=2,
+                             cohorts=COHORTS)
     fleet = Fleet(VGG5(), sgd(momentum=0.9), specs, split_point=2,
                   lr_schedule=constant(0.01), max_replicas=4, seed=0)
 

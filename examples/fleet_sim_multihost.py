@@ -41,20 +41,26 @@ from repro.sim import (Fleet, FleetSimulator, hinge_staleness, make_edges,
 
 def build_sim(args) -> FleetSimulator:
     """Deterministic from the arguments: every rank builds the identical
-    simulator, so only sockets — never state — connect the hosts."""
+    simulator, so only sockets — never state — connect the hosts. Every
+    rank also owns the cohort trainers for the cohorts its shards host;
+    the coordinator ships global-model broadcasts and train directives
+    over the control channel and gets update snapshots back."""
     edges = make_edges(args.edges, slots=64)
     specs = make_fleet_specs(args.devices, [e.edge_id for e in edges],
-                             batch_size=16, num_batches=2)
+                             batch_size=16, num_batches=2,
+                             cohorts=args.cohorts)
     fleet = Fleet(VGG5(), sgd(momentum=0.9), specs, split_point=2,
                   lr_schedule=constant(0.01),
                   max_replicas=args.max_replicas, seed=args.seed)
     trace = MobilityTrace(poisson_moves(
         [s.client_id for s in specs], [e.edge_id for e in edges],
         total_rounds=args.rounds, rate_per_round=0.05, seed=args.seed))
+    async_kw = (dict(alpha=0.6,
+                     staleness_fn=hinge_staleness(a=4.0 / args.devices,
+                                                  b=2.0 * args.devices))
+                if args.mode == "async" else {})
     return FleetSimulator(
-        fleet, edges, trace=trace, mode="async", alpha=0.6,
-        staleness_fn=hinge_staleness(a=4.0 / args.devices,
-                                     b=2.0 * args.devices),
+        fleet, edges, trace=trace, mode=args.mode, **async_kw,
         shards=max(args.shards, args.hosts), measure_pack=False,
         hosts=args.hosts if args.rank is None else None)
 
@@ -69,8 +75,8 @@ def report(result, args, wall: float) -> None:
           f"{es.get('windows', 1)} windows)")
     for r in result.rounds:
         print(f"  round {r['round_idx']}: {r['n_updates']} updates, "
-              f"loss {r['mean_loss']:.3f}, "
-              f"round time {r['mean_round_time_s']:.2f}s sim")
+              f"loss {r.get('mean_loss', float('nan')):.3f}, "
+              f"round time {r.get('mean_round_time_s', 0.0):.2f}s sim")
     print(json.dumps(result.summary()))
 
 
@@ -94,7 +100,13 @@ def main():
                     metavar="H0:P0,H1:P1,...",
                     help="comma-separated address of every rank, in rank "
                          "order (distributed mode)")
+    ap.add_argument("--mode", choices=("sync", "async"), default="async",
+                    help="sync uses the control-mail round restart — "
+                         "multi-host sync barriers ride the same mesh")
     ap.add_argument("--devices", type=int, default=1000)
+    ap.add_argument("--cohorts", type=int, default=1,
+                    help="cohort signatures (>1 parallelizes the XLA "
+                         "training across hosts)")
     ap.add_argument("--edges", type=int, default=8)
     ap.add_argument("--rounds", type=int, default=3)
     ap.add_argument("--shards", type=int, default=4)

@@ -8,7 +8,7 @@ momentum in bf16 so the train_4k dry-run fits HBM (DESIGN.md §6).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +22,27 @@ class Optimizer:
     name: str
     init: Callable[[Params], OptState]
     update: Callable[..., Tuple[Params, OptState]]  # (grads, state, params, lr)
+    #: (factory name, kwargs) — lets an optimizer cross a process boundary
+    #: (the sim's worker-owned cohort trainers rebuild it from this; the
+    #: init/update closures themselves cannot pickle)
+    conf: Optional[Tuple[str, dict]] = None
+
+    def __reduce__(self):
+        if self.conf is None:
+            raise TypeError(
+                f"optimizer {self.name!r} has no conf and cannot be "
+                "pickled; construct it via a registered factory "
+                "(sgd/adamw) or pass conf=(factory_name, kwargs)")
+        return (_rebuild_optimizer, (self.conf,))
+
+
+def _rebuild_optimizer(conf: Tuple[str, dict]) -> "Optimizer":
+    name, kwargs = conf
+    try:
+        factory = _FACTORIES[name]
+    except KeyError:
+        raise ValueError(f"unknown optimizer factory {name!r}") from None
+    return factory(**kwargs)
 
 
 def sgd(momentum: float = 0.9, momentum_dtype: Optional[str] = None,
@@ -48,7 +69,10 @@ def sgd(momentum: float = 0.9, momentum_dtype: Optional[str] = None,
                               is_leaf=lambda t: isinstance(t, tuple))
         return new_p, {"mu": new_mu, "step": state["step"] + 1}
 
-    return Optimizer("sgd", init, update)
+    return Optimizer("sgd", init, update,
+                     conf=("sgd", {"momentum": momentum,
+                                   "momentum_dtype": momentum_dtype,
+                                   "weight_decay": weight_decay}))
 
 
 def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
@@ -83,7 +107,14 @@ def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
                  "v": jax.tree.map(lambda t: t[2], out, is_leaf=leaf),
                  "step": step})
 
-    return Optimizer("adamw", init, update)
+    return Optimizer("adamw", init, update,
+                     conf=("adamw", {"b1": b1, "b2": b2, "eps": eps,
+                                     "weight_decay": weight_decay,
+                                     "moment_dtype": moment_dtype}))
+
+
+_FACTORIES: Dict[str, Callable[..., Optimizer]] = {"sgd": sgd,
+                                                   "adamw": adamw}
 
 
 def global_norm(tree) -> jax.Array:

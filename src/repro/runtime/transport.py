@@ -207,7 +207,8 @@ class SocketTransport:
     def serve(self, callback: Optional[Callable[[bytes], None]] = None,
               per_connection: Optional[Callable[[], Tuple[
                   Callable[[bytes], None],
-                  Callable[[Optional[BaseException]], None]]]] = None):
+                  Callable[[Optional[BaseException]], None]]]] = None,
+              backlog: Optional[int] = None):
         """Start the listener thread. ``callback`` (or the internal inbox)
         receives every frame from every connection. ``per_connection``
         instead supplies one ``(deliver, on_close)`` pair per accepted
@@ -215,8 +216,11 @@ class SocketTransport:
         ``on_close(err)`` fires when the connection ends (``err`` is None
         on a clean frame-boundary EOF, the exception otherwise) — this is
         how ``sim.mailbox.SocketMailbox`` notices a peer died mid-window
-        instead of blocking on its next frame forever."""
-        self._srv.listen(8)
+        instead of blocking on its next frame forever. ``backlog`` sizes
+        the accept queue: callers expecting a connect storm (the
+        hosts×(hosts-1) mesh bring-up) must size it from the peer count
+        instead of relying on the default 8."""
+        self._srv.listen(max(backlog or 0, 8))
         default_deliver = callback or self._inbox.put
 
         def handle(conn: socket.socket):

@@ -8,26 +8,28 @@ from repro.sim.async_agg import (AsyncAggregator, SyncAggregator,
                                  constant_staleness, hinge_staleness,
                                  poly_staleness)
 from repro.sim.edge import BACKHAUL_1GBPS, SimEdge, make_edges
-from repro.sim.engine import (Event, EventKind, Mail, PeerShardedEngine,
-                              ProcessExecutor, SerialExecutor, ShardedEngine,
-                              SimEngine)
-from repro.sim.fleet import (ClientSpec, Cohort, Fleet, SimClient,
-                             make_fleet_specs)
-from repro.sim.mailbox import (HostShardedEngine, Mailbox, PipeMailbox,
-                               SocketMailbox, decode_message, encode_message,
-                               run_host_windows)
+from repro.sim.engine import (Event, EventKind, Mail, SerialExecutor,
+                              ShardedEngine, SimEngine)
+from repro.sim.fleet import (ClientSpec, Cohort, CohortSpec, Fleet,
+                             PrunedEpochError, SimClient, make_fleet_specs)
+from repro.sim.mailbox import (HostShardedEngine, Mailbox, PeerShardedEngine,
+                               PipeMailbox, SocketMailbox, decode_message,
+                               encode_message, run_host_windows)
 from repro.sim.metrics import FleetMetrics, MigrationRecord
 from repro.sim.shard import EdgeShard, InflightBatch, ShardClient, ShardEdge
 from repro.sim.simulator import FleetResult, FleetSimulator
+from repro.sim.trainer import GroupTrainer, LocalTrainer, TrainerProxy
 
 __all__ = [
     "AsyncAggregator", "SyncAggregator", "constant_staleness",
     "hinge_staleness", "poly_staleness", "BACKHAUL_1GBPS", "SimEdge",
     "make_edges", "Event", "EventKind", "Mail", "PeerShardedEngine",
-    "ProcessExecutor", "SerialExecutor", "ShardedEngine", "SimEngine",
-    "ClientSpec", "Cohort", "Fleet", "SimClient", "make_fleet_specs",
+    "SerialExecutor", "ShardedEngine", "SimEngine",
+    "ClientSpec", "Cohort", "CohortSpec", "Fleet", "PrunedEpochError",
+    "SimClient", "make_fleet_specs",
     "HostShardedEngine", "Mailbox", "PipeMailbox", "SocketMailbox",
     "decode_message", "encode_message", "run_host_windows", "FleetMetrics",
     "MigrationRecord", "EdgeShard", "InflightBatch", "ShardClient",
     "ShardEdge", "FleetResult", "FleetSimulator",
+    "GroupTrainer", "LocalTrainer", "TrainerProxy",
 ]

@@ -14,8 +14,12 @@ events in [T, T + lookahead), then exchanges cross-shard ``Mail``
 the FedFly structure — shards only interact through backhaul transfers,
 whose latency lower-bounds the lookahead — so no event a shard
 processes inside a window can be invalidated by a message it has not
-yet received. Shards run serially in-process (``SerialExecutor``) or in
-parallel worker processes (``ProcessExecutor``).
+yet received. ``ShardedEngine`` + ``SerialExecutor`` is the in-process
+reference path; every parallel path (worker pipes, socket hosts) runs
+the self-synchronizing group mesh in ``repro.sim.mailbox`` instead,
+where the all-to-all mail exchange doubles as the window barrier and a
+coordinator→mesh control channel carries round restarts, global-model
+broadcasts, and train directives (worker-owned cohort training).
 
 Determinism: ties in simulated time are broken by an explicit stable
 key (the simulator passes the client id) and then insertion order, and
@@ -27,7 +31,6 @@ used to order events.
 from __future__ import annotations
 
 import heapq
-import multiprocessing as mp
 import time
 from collections import Counter
 from dataclasses import dataclass, field
@@ -257,296 +260,8 @@ class SerialExecutor:
         pass
 
 
-class ProcessExecutor:
-    """One persistent worker process per shard (or per group of shards
-    when ``workers`` < shard count), talking over pipes. Windows for
-    different workers run in parallel; the coordinator only does the
-    barrier bookkeeping.
-
-    Shards must be picklable and free of JAX state — the fleet's
-    numerics stay in the coordinator, workers simulate timing only."""
-
-    def __init__(self, shards: Sequence[Any], workers: int):
-        ctx = mp.get_context("spawn")
-        workers = max(1, min(workers, len(shards)))
-        self._conn_of_shard: Dict[int, Any] = {}
-        self._procs = []
-        self._conns = []
-        groups: List[List[Any]] = [[] for _ in range(workers)]
-        for i, s in enumerate(sorted(shards, key=lambda s: s.shard_id)):
-            groups[i % workers].append(s)
-        for group in groups:
-            if not group:
-                continue
-            parent, child = ctx.Pipe()
-            proc = ctx.Process(target=_group_worker_main, args=(child,),
-                               daemon=True)
-            proc.start()
-            parent.send(group)
-            for s in group:
-                self._conn_of_shard[s.shard_id] = parent
-            self._procs.append(proc)
-            self._conns.append(parent)
-
-    @staticmethod
-    def _recv(conn) -> Any:
-        """Receive one worker reply; surface worker-side failures with
-        their traceback instead of a bare EOFError."""
-        try:
-            resp = conn.recv()
-        except EOFError:
-            raise RuntimeError("shard worker process died") from None
-        if resp[0] == "err":
-            raise RuntimeError(f"shard worker failed:\n{resp[1]}")
-        return resp[1]
-
-    def run_windows(self, work: Dict[int, Tuple[Optional[float], List[Mail]]]
-                    ) -> Dict[int, WindowResult]:
-        by_conn: Dict[Any, Dict[int, Tuple[Optional[float], List[Mail]]]] = {}
-        for sid, job in work.items():
-            by_conn.setdefault(self._conn_of_shard[sid], {})[sid] = job
-        for conn, jobs in by_conn.items():          # fan out ...
-            conn.send(("window", jobs))
-        out: Dict[int, WindowResult] = {}
-        for conn in by_conn:                        # ... then gather
-            out.update(self._recv(conn))
-        return out
-
-    def _broadcast(self, cmd: str) -> Dict[int, Any]:
-        for conn in self._conns:
-            conn.send((cmd,))
-        out: Dict[int, Any] = {}
-        for conn in self._conns:
-            out.update(self._recv(conn))
-        return out
-
-    def peek(self) -> Dict[int, Optional[float]]:
-        return self._broadcast("peek")
-
-    def final_stats(self) -> Dict[int, Dict[str, Any]]:
-        return self._broadcast("stats")
-
-    def close(self) -> None:
-        for conn in self._conns:
-            try:
-                conn.send(("close",))
-                conn.close()
-            except (BrokenPipeError, OSError):
-                pass
-        for proc in self._procs:
-            proc.join(timeout=5)
-            if proc.is_alive():
-                proc.terminate()
-
-
-def _group_worker_main(conn) -> None:
-    """Worker loop owning several shards (workers < shards). Replies are
-    ("ok", payload) or ("err", traceback) so handler failures reach the
-    coordinator with their traceback instead of a bare EOFError."""
-    import traceback
-    shards = {s.shard_id: s for s in conn.recv()}
-    while True:
-        msg = conn.recv()
-        cmd = msg[0]
-        try:
-            if cmd == "window":
-                jobs = msg[1]
-                out: Any = {sid: shards[sid].run_window(bound, mail)
-                            for sid, (bound, mail) in jobs.items()}
-            elif cmd == "peek":
-                out = {sid: s.peek() for sid, s in shards.items()}
-            elif cmd == "stats":
-                out = {sid: s.final_stats() for sid, s in shards.items()}
-            elif cmd == "close":
-                conn.close()
-                return
-            conn.send(("ok", out))
-        except BaseException:
-            conn.send(("err", traceback.format_exc()))
-            conn.close()
-            return
-
-
 # a window callback may inject new mail (e.g. the sync round restart)
 WindowCallback = Callable[[float, Dict[int, Dict[str, list]]], List[Mail]]
-
-
-# ---------------------------------------------------------------------------
-# peer-driven sharded execution (async mode): the coordinator is NOT in
-# the per-window loop. Workers synchronize among themselves — the
-# all-to-all mail exchange over direct peer pipes doubles as the window
-# barrier (repro.sim.mailbox.run_host_windows) — while the parent trails
-# behind, replaying record shipments below the fleet-wide safe frontier.
-# One window costs one pipe exchange instead of two roundtrips through a
-# busy parent. The same loop runs over TCP sockets in
-# repro.sim.mailbox.HostShardedEngine (multi-host sharding).
-# ---------------------------------------------------------------------------
-
-_PEER_BARRIER_TIMEOUT_S = 600.0
-
-
-def _peer_worker_main(conn, peers, lookahead) -> None:
-    """One shard per worker. The worker is a degenerate single-shard
-    "host": mail rides a ``PipeMailbox`` (whose exchange is the barrier
-    — no shared-memory primitives, so sandboxes without named semaphores
-    run this fine) and records ship to the parent over the worker pipe.
-    See ``repro.sim.mailbox.run_host_windows`` for the loop contract."""
-    import traceback
-
-    from repro.sim.mailbox import (PipeMailbox, PipeRecordSink,
-                                   run_host_windows)
-    try:
-        shard = conn.recv()
-        run_host_windows([shard], PipeMailbox(peers), lookahead,
-                         PipeRecordSink(conn))
-    except BaseException:
-        try:
-            conn.send(("err", traceback.format_exc()))
-        except (BrokenPipeError, OSError):
-            pass
-    finally:
-        conn.close()
-
-
-class PeerShardedEngine:
-    """Async-mode peer executor: one process per shard, self-synchronized
-    windows, parent replays records below the global safe frontier.
-
-    ``on_chunk(frontier, {shard_id: records})`` is called every time the
-    minimum worker frontier advances; all record items strictly below
-    the frontier are guaranteed present (the simulator buffers and
-    filters). Bit-identical to the serial path: same arithmetic, same
-    mail times, same replay order."""
-
-    def __init__(self, shards: Sequence[Any], *, lookahead: float):
-        if lookahead is None or lookahead <= 0:
-            raise ValueError("peer sharded execution needs a positive "
-                             "lookahead")
-        ctx = mp.get_context("spawn")
-        self.shard_ids = sorted(s.shard_id for s in shards)
-        # peer mesh: one duplex pipe per pair, passed at Process creation
-        # (fds must be inherited, not sent later)
-        mesh: Dict[Tuple[int, int], Any] = {}
-        for i in self.shard_ids:
-            for j in self.shard_ids:
-                if i < j:
-                    mesh[(i, j)] = ctx.Pipe()
-        self._conns = {}
-        self._procs = []
-        for s in sorted(shards, key=lambda s: s.shard_id):
-            sid = s.shard_id
-            parent, child = ctx.Pipe()
-            peers = {}
-            for (i, j), (a, b) in mesh.items():
-                if i == sid:
-                    peers[j] = a
-                elif j == sid:
-                    peers[i] = b
-            proc = ctx.Process(
-                target=_peer_worker_main,
-                args=(child, peers, lookahead), daemon=True)
-            proc.start()
-            parent.send(s)
-            self._conns[sid] = parent
-            self._procs.append(proc)
-        for (a, b) in mesh.values():          # parent keeps no mesh ends
-            a.close()
-            b.close()
-        self._final: Dict[int, Dict[str, Any]] = {}
-        self.wall_s = 0.0
-        self.windows = 0
-
-    def run(self, on_chunk: Callable[[Optional[float],
-                                      Dict[int, Dict[str, list]]], None]
-            ) -> "PeerShardedEngine":
-        """Drain record shipments; call ``on_chunk(None, {sid: records})``
-        for each arriving batch and ``on_chunk(frontier, {})`` whenever
-        the global safe frontier advances.
-
-        Draining runs in its own thread so a slow replay can never fill
-        the worker pipes — pipe backpressure on one worker would stall
-        the whole mesh (every window is an all-to-all exchange)."""
-        import queue as queue_mod
-        import threading
-        from multiprocessing.connection import wait as conn_wait
-        wall0 = time.perf_counter()
-        sid_of = {conn: sid for sid, conn in self._conns.items()}
-        q: "queue_mod.Queue" = queue_mod.Queue()
-        drain_errs: List[BaseException] = []
-
-        def drain():
-            live = dict(self._conns)
-            try:
-                while live:
-                    ready = conn_wait(list(live.values()),
-                                      timeout=_PEER_BARRIER_TIMEOUT_S)
-                    if not ready:
-                        raise RuntimeError(
-                            f"peer shard mesh made no progress for "
-                            f"{_PEER_BARRIER_TIMEOUT_S}s (worker stalled?)")
-                    for conn in ready:
-                        sid = sid_of[conn]
-                        try:
-                            msg = conn.recv()
-                        except EOFError:
-                            raise RuntimeError(
-                                f"shard worker {sid} died") from None
-                        if msg[0] == "err":
-                            raise RuntimeError(
-                                f"shard worker {sid} failed:\n{msg[1]}")
-                        if msg[0] == "done":
-                            del live[sid]
-                        q.put((msg[0], sid, msg))
-            except BaseException as e:     # re-raised by the main loop
-                drain_errs.append(e)
-            finally:
-                q.put(None)
-
-        th = threading.Thread(target=drain, daemon=True)
-        th.start()
-        frontiers = {sid: 0.0 for sid in self.shard_ids}
-        replay_frontier = 0.0
-        while True:
-            item = q.get()
-            if item is None:
-                break
-            kind, sid, msg = item
-            if kind == "records":
-                frontiers[sid] = msg[1]
-                on_chunk(None, {sid: msg[2]})
-            elif kind == "frontier":
-                frontiers[sid] = msg[1]
-            elif kind == "done":
-                self._final.update(msg[1])     # {shard_id: final stats}
-                frontiers[sid] = float("inf")
-            new_frontier = min(frontiers.values())
-            if new_frontier > replay_frontier:
-                replay_frontier = new_frontier
-                on_chunk(replay_frontier, {})
-        th.join()
-        if drain_errs:
-            raise drain_errs[0]
-        on_chunk(float("inf"), {})
-        self.windows = max((f["engine"].get("windows", 0)
-                            for f in self._final.values()), default=0)
-        self.wall_s = time.perf_counter() - wall0
-        return self
-
-    def stats(self) -> Dict[str, Any]:
-        return _merge_shard_stats(self._final, wall_s=self.wall_s,
-                                  windows=self.windows,
-                                  num_shards=len(self.shard_ids))
-
-    def close(self) -> None:
-        for conn in self._conns.values():
-            try:
-                conn.close()
-            except (BrokenPipeError, OSError):
-                pass
-        for proc in self._procs:
-            proc.join(timeout=5)
-            if proc.is_alive():
-                proc.terminate()
 
 
 class ShardedEngine:
@@ -555,8 +270,7 @@ class ShardedEngine:
     Each iteration:
       1. T = earliest pending simulated time across shards and undelivered
          mail; the window is [T, T + lookahead).
-      2. Every shard with events (or deliverable mail) runs its window —
-         in parallel under ``ProcessExecutor``.
+      2. Every shard with events (or deliverable mail) runs its window.
       3. Outgoing mail is routed; the ``on_window`` callback sees every
          shard's records (the coordinator applies aggregation numerics
          there) and may inject control mail (round restarts).

@@ -88,20 +88,48 @@ def make_fleet_specs(num_clients: int, edge_ids: Sequence[str], *,
                      batch_size: int = 16, num_batches: int = 2,
                      samples_per_client: int = 600,
                      profiles: Sequence[HardwareProfile] = (PI3, PI4),
-                     ) -> List[ClientSpec]:
+                     cohorts: int = 1) -> List[ClientSpec]:
     """Uniform fleet, clients dealt round-robin onto edges — the same
-    initial placement rule ``mobility.poisson_moves`` assumes."""
+    initial placement rule ``mobility.poisson_moves`` assumes.
+    ``cohorts > 1`` spreads clients over that many cohort signatures
+    (cycling ``num_batches`` upward), which is what lets worker-owned
+    cohort training parallelize the XLA work across shard groups."""
     return [ClientSpec(client_id=f"dev-{i:04d}",
                        profile=profiles[i % len(profiles)],
                        edge_id=edge_ids[i % len(edge_ids)],
                        num_samples=samples_per_client,
-                       batch_size=batch_size, num_batches=num_batches)
+                       batch_size=batch_size,
+                       num_batches=num_batches + (i % max(cohorts, 1)))
             for i in range(num_clients)]
 
 
 # ---------------------------------------------------------------------------
 # cohorts
 # ---------------------------------------------------------------------------
+
+class PrunedEpochError(RuntimeError):
+    """A pruned (cohort, epoch) was re-requested. Retraining it would
+    silently use optimizer state that has drifted past that epoch, so the
+    protocol surfaces the straggler bug loudly instead."""
+
+
+@dataclass(frozen=True)
+class CohortSpec:
+    """Everything needed to rebuild a ``Cohort`` in another process —
+    the bootstrap payload of worker-owned cohort training. Picklable:
+    the model is a plain object and ``Optimizer`` reduces to its
+    (factory, kwargs) conf."""
+    key: Tuple[int, int]
+    replicas: int
+    sp: int
+    seed: int
+    model: Any
+    optimizer: Any
+
+    def build(self) -> "Cohort":
+        return Cohort(self.key, self.model, self.optimizer, self.sp,
+                      self.replicas, self.seed)
+
 
 class Cohort:
     """A stack of ``replicas`` split-model instances advanced in lockstep
@@ -115,6 +143,7 @@ class Cohort:
         self.opt = optimizer
         self.sp = sp
         self.replicas = replicas
+        self._seed = seed
         # per-replica private data: each replica's epoch is exactly
         # num_batches batches
         n = replicas * self.batch_size * self.num_batches
@@ -128,6 +157,7 @@ class Cohort:
         self._dev_opt = self._srv_opt = None  # stacked opt state (persists)
         self.snapshots: Dict[int, List[Params]] = {}  # epoch -> np trees
         self.losses: Dict[int, np.ndarray] = {}       # epoch -> (R,)
+        self.floor = 0                                # epochs < floor pruned
         self._costs: Optional[Tuple[float, float, int]] = None
         self._nbytes: Dict[str, Dict[str, int]] = {}   # codec -> sizes
 
@@ -167,6 +197,12 @@ class Cohort:
         from the current global model (Step 1/6 re-broadcast)."""
         if epoch in self.snapshots:
             return
+        if epoch < self.floor:
+            raise PrunedEpochError(
+                f"cohort {self.key} epoch {epoch} was already pruned "
+                f"(floor {self.floor}): a straggler re-requested a retired "
+                "epoch, and retraining it would silently reuse optimizer "
+                "state that advanced past it")
         self.ensure_stages(global_params)   # opt state on first call
         dev1, srv1 = split_lib.partition_params(self.model, global_params,
                                                 self.sp)
@@ -187,10 +223,17 @@ class Cohort:
         self.losses[epoch] = np.asarray(loss)
 
     def prune(self, min_live_epoch: int):
-        """Drop snapshots no straggler can still contribute."""
+        """Drop snapshots no straggler can still contribute. A later
+        ``run_epoch`` below the new floor raises ``PrunedEpochError``."""
         for e in [e for e in self.snapshots if e < min_live_epoch]:
             del self.snapshots[e]
             del self.losses[e]
+        self.floor = max(self.floor, min_live_epoch)
+
+    def spec(self) -> CohortSpec:
+        return CohortSpec(key=self.key, replicas=self.replicas, sp=self.sp,
+                          seed=self._seed, model=self.model,
+                          optimizer=self.opt)
 
     # -- cost model (one XLA lowering per cohort, not per client) --------
 
@@ -321,6 +364,11 @@ class Fleet:
                         **{k: float(v)
                            for k, v in cohort.nbytes(codec).items()}}
         return out
+
+    def cohort_specs(self) -> Dict[Tuple[int, int], CohortSpec]:
+        """Rebuildable spec per cohort — what ships to the shard group
+        that owns the cohort under worker-owned training."""
+        return {key: c.spec() for key, c in self.cohorts.items()}
 
     def cohort_sizes(self) -> Dict[Tuple[int, int], int]:
         """Clients per cohort (for snapshot-pruning bookkeeping)."""

@@ -13,31 +13,46 @@ window start ``T``. This module abstracts *what carries that exchange*:
                        FFLY-encoded messages. The same protocol runs
                        across machines (``examples/fleet_sim_multihost``).
 
-``run_host_windows`` is the host loop both transports drive: it owns a
-*group* of ``EdgeShard`` engines (a "host"), runs their windows between
-exchanges, routes intra-group mail locally, and ships simulator records
-to the coordinator. ``HostShardedEngine`` packages N such hosts as
-independent OS processes on one machine, connected only by sockets —
-the localhost harness for the multi-host protocol (used by
-``FleetSimulator(hosts=N)`` and ``bench_fleet.py --hosts``).
+``run_host_windows`` is the group loop both transports drive: it owns a
+*group* of ``EdgeShard`` engines, runs their windows between exchanges,
+routes intra-group mail locally, and ships simulator records to the
+coordinator. On top of the records plane (group → coordinator) there is
+a **control plane** (coordinator → group): ``resume`` mail restarts a
+quiescent mesh (the sync-mode round restart — also what makes sync
+multi-host possible), ``bcast``/``train`` messages drive the group's
+worker-owned cohort trainer (``repro.sim.trainer.GroupTrainer``), and
+``stop`` ends the session. Trained epochs return on the records plane
+as ``update`` messages, routed straight to the coordinator's
+``TrainerProxy`` (never through the replay queue, so a replay blocked
+on an update cannot deadlock on a message stuck behind it).
+
+``PeerShardedEngine`` (pipes) and ``HostShardedEngine`` (sockets) both
+package N group processes behind the same ``_drive_mesh`` coordinator
+loop; the socket engine is the localhost harness for the multi-host
+protocol (used by ``FleetSimulator(hosts=N)``, ``bench_fleet.py
+--hosts``, and — spread over machines — ``FleetSimulator.run_multihost``).
 
 Wire format (normative spec: docs/ARCHITECTURE.md): every message is one
 transport frame whose payload is an FFLY v2 container of a tagged
 pytree — ``encode_message``/``decode_message`` below. No pickle crosses
-the network, so hosts of different ISAs interoperate, and the migrated
-client timing state (``ShardClient``) rides the same container format as
-the checkpoints themselves.
+the network, so hosts of different ISAs interoperate, and both the
+migrated client timing state (``ShardClient``) and the trainer payloads
+(global-model broadcasts, update snapshots — nested FFLY containers as
+bytes leaves) ride the same container format as the checkpoints
+themselves.
 
 Failure semantics (mirrors the chunked-frame producer abort): a peer
 that disconnects mid-window — a killed host process, a dropped link —
 must abort the run with a clear error, never hang the barrier. The
 transport reports per-connection closes; ``SocketMailbox.exchange``
-raises as soon as a peer it still needs is gone, and the coordinator
-raises when a host's record stream dies before its ``done``.
+raises as soon as a peer it still needs is gone, the coordinator raises
+when a group's record stream dies before its ``done``, and a dead group
+also poisons any replay blocked on one of its updates.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import multiprocessing as mp
 import queue
 import threading
@@ -51,11 +66,13 @@ from repro.runtime.transport import FrameStream, SocketTransport
 from repro.sim.engine import (EventKind, Mail, _check_mail_within_lookahead,
                               _merge_shard_stats)
 from repro.sim.shard import ShardClient
+from repro.sim.trainer import GroupTrainer
 
 _TAG = "__w"                      # tagged-node marker in the wire tree
 _BARRIER_TIMEOUT_S = 600.0        # no progress for this long => stalled
 _SHIP_EVERY_WINDOWS = 8           # record-shipment cadence (amortize frames)
 _CONNECT_RETRY_S = 60.0           # peers may start at different times
+_INF = float("inf")
 
 
 # ---------------------------------------------------------------------------
@@ -64,9 +81,9 @@ _CONNECT_RETRY_S = 60.0           # peers may start at different times
 
 def _to_wire(obj: Any) -> Any:
     """Lower a protocol object to an FFLY-serializable pytree (dicts with
-    string keys, lists/tuples, scalar/ndarray leaves). Python-only values
-    become tagged dicts: ``{"__w": tag, ...}`` — see docs/ARCHITECTURE.md
-    for the closed set of tags."""
+    string keys, lists/tuples, scalar/ndarray/bytes leaves). Python-only
+    values become tagged dicts: ``{"__w": tag, ...}`` — see
+    docs/ARCHITECTURE.md for the closed set of tags."""
     if obj is None:
         return {_TAG: "none"}
     if isinstance(obj, EventKind):
@@ -200,7 +217,11 @@ class SocketMailbox(Mailbox):
     listener and sends a hello frame, then exactly one mail frame per
     window — so per-peer frame queues stay aligned with the window
     sequence. The same listener also accepts ``records`` channels (host
-    -> coordinator record shipments), exposed on ``self.records``.
+    -> coordinator record shipments, exposed on ``self.records``) and a
+    ``ctrl`` channel (coordinator -> host control mail, exposed on
+    ``self.control``). The listener backlog is sized from the expected
+    connection count (``backlog=``): a hosts×(hosts-1) connect storm at
+    mesh bring-up must not overflow a fixed-depth accept queue.
 
     A peer connection that closes before the protocol finished marks the
     peer dead and wakes any blocked ``exchange``, which aborts the run
@@ -208,7 +229,8 @@ class SocketMailbox(Mailbox):
     of the chunked-frame producer abort)."""
 
     def __init__(self, rank: int, host: str = "127.0.0.1", port: int = 0, *,
-                 barrier_timeout_s: float = _BARRIER_TIMEOUT_S):
+                 barrier_timeout_s: float = _BARRIER_TIMEOUT_S,
+                 backlog: Optional[int] = None):
         self.rank = rank
         self.barrier_timeout_s = barrier_timeout_s
         self.peer_ids: List[int] = []
@@ -220,9 +242,18 @@ class SocketMailbox(Mailbox):
         #: (type, src_rank, message) tuples from "records" channels
         self.records: "queue.Queue[Tuple[str, int, Dict[str, Any]]]" = \
             queue.Queue()
+        #: control messages from "ctrl" channels (coordinator -> host)
+        self.control: "queue.Queue[Dict[str, Any]]" = queue.Queue()
+        #: routed around ``records`` straight from the reader thread, so
+        #: a coordinator replay blocked on an update can never deadlock
+        #: on a message queued behind it
+        self.on_update: Optional[Callable[[Dict[str, Any]], None]] = None
+        #: called (with a reason) when a records channel errors or dies
+        self.on_abort: Optional[Callable[[str], None]] = None
         self.transport = SocketTransport(host, port)
         self.port = self.transport.port
-        self.transport.serve(per_connection=self._connection)
+        self.transport.serve(per_connection=self._connection,
+                             backlog=backlog)
 
     # -- incoming side ---------------------------------------------------
 
@@ -233,7 +264,9 @@ class SocketMailbox(Mailbox):
     def _connection(self):
         """Per-connection router: the first frame must be a hello naming
         the sender and channel; later frames go to that peer's inbox
-        (mail) or the shared records queue."""
+        (mail), the control queue (ctrl), or the shared records queue —
+        with ``update``/``err`` messages also handed to the trainer
+        hooks directly on this reader thread."""
         state: Dict[str, Any] = {"channel": None, "src": None}
 
         def deliver(frame: bytes) -> None:
@@ -250,8 +283,16 @@ class SocketMailbox(Mailbox):
                 return
             if state["channel"] == "mail":
                 self._inbox_for(state["src"]).put(msg)
+            elif state["channel"] == "ctrl":
+                self.control.put(msg)
             else:
-                self.records.put((msg["type"], state["src"], msg))
+                kind = msg.get("type")
+                if kind == "update" and self.on_update is not None:
+                    self.on_update(msg)
+                    return
+                if kind == "err" and self.on_abort is not None:
+                    self.on_abort(msg.get("traceback", "trainer error"))
+                self.records.put((kind, state["src"], msg))
 
         def on_close(err: Optional[BaseException]) -> None:
             if self._closing or state["channel"] is None:
@@ -260,7 +301,16 @@ class SocketMailbox(Mailbox):
             if state["channel"] == "mail":
                 self._dead[state["src"]] = why
                 self._inbox_for(state["src"]).put(None)   # wake the waiter
+            elif state["channel"] == "ctrl":
+                # the coordinator died: synthesize a stop so a group
+                # parked at quiescence aborts within one loop iteration
+                # instead of sitting out the full control timeout (the
+                # pipe path's EOF->stop equivalent)
+                self.control.put({"type": "stop"})
             else:
+                if self.on_abort is not None:
+                    self.on_abort(f"record stream of host {state['src']} "
+                                  f"closed ({why})")
                 self.records.put(("lost", state["src"], {"err": why}))
 
         return deliver, on_close
@@ -270,8 +320,9 @@ class SocketMailbox(Mailbox):
     def connect(self, addresses: Dict[int, Tuple[str, int]], *,
                 retry_s: float = _CONNECT_RETRY_S) -> "SocketMailbox":
         """Open the outgoing half of the mesh: one stream + hello per
-        peer in ``addresses`` (our own rank is skipped). Retries while
-        peers are still starting up."""
+        peer in ``addresses`` (our own rank is skipped). Retries with
+        backoff while peers are still starting up (or their accept
+        queues are momentarily full during the connect storm)."""
         self.peer_ids = sorted(r for r in addresses if r != self.rank)
         for r in self.peer_ids:
             self._inbox_for(r)                   # exist before any hello
@@ -333,37 +384,59 @@ class SocketMailbox(Mailbox):
 
 def _connect_retry(addr: Tuple[str, int],
                    retry_s: float = _CONNECT_RETRY_S) -> FrameStream:
+    """Connect with bounded exponential backoff: mesh bring-up is a
+    connect storm, and a transient ``ConnectionRefusedError`` (listener
+    not bound yet, accept backlog momentarily full) must not kill the
+    run — only a peer that stays unreachable for ``retry_s`` does."""
     deadline = time.monotonic() + retry_s
+    delay = 0.05
     while True:
         try:
             return FrameStream(addr[0], addr[1])
         except OSError:
             if time.monotonic() >= deadline:
                 raise
-            time.sleep(0.2)
+            time.sleep(min(delay, max(deadline - time.monotonic(), 0.0)))
+            delay = min(delay * 2.0, 1.0)
 
 
 # ---------------------------------------------------------------------------
-# record sinks: how a host ships simulator records to the coordinator
+# record sinks: how a group ships simulator records to the coordinator
 # ---------------------------------------------------------------------------
+#
+# Both sinks are thread-safe: the group's window loop and its trainer
+# thread share one connection (records interleave with update messages).
 
 class PipeRecordSink:
-    """Record shipments over the worker's parent pipe (peer executor)."""
+    """Record shipments over the worker's parent pipe (pipe mesh)."""
 
     def __init__(self, conn):
         self._conn = conn
+        self._lock = threading.Lock()
+
+    def _send(self, msg: Dict[str, Any]) -> None:
+        with self._lock:
+            self._conn.send(msg)
 
     def records(self, bound: float, recs: Dict[str, list]) -> None:
-        self._conn.send(("records", bound, recs))
+        self._send({"type": "records", "bound": bound, "records": recs})
 
     def frontier(self, bound: float) -> None:
-        self._conn.send(("frontier", bound))
+        self._send({"type": "frontier", "bound": bound})
 
-    def done(self, finals: Dict[int, Dict[str, Any]]) -> None:
-        self._conn.send(("done", finals))
+    def update(self, cohort_key, epoch: int, payload: bytes) -> None:
+        self._send({"type": "update", "cohort": cohort_key, "epoch": epoch,
+                    "payload": payload})
+
+    def idle(self, gen: int) -> None:
+        self._send({"type": "idle", "gen": gen})
+
+    def done(self, finals: Dict[int, Dict[str, Any]],
+             trainer: Optional[Dict[str, Any]] = None) -> None:
+        self._send({"type": "done", "stats": finals, "trainer": trainer})
 
     def err(self, tb: str) -> None:
-        self._conn.send(("err", tb))
+        self._send({"type": "err", "traceback": tb})
 
     def close(self) -> None:
         self._conn.close()
@@ -376,50 +449,69 @@ class SocketRecordSink:
     def __init__(self, addr: Tuple[str, int], rank: int, *,
                  retry_s: float = _CONNECT_RETRY_S):
         self._stream = _connect_retry(addr, retry_s)
-        self._stream.send(encode_message(
-            {"type": "hello", "channel": "records", "src": rank}))
+        self._lock = threading.Lock()
+        self._send({"type": "hello", "channel": "records", "src": rank})
+
+    def _send(self, msg: Dict[str, Any]) -> None:
+        with self._lock:
+            self._stream.send(encode_message(msg))
 
     def records(self, bound, recs):
-        self._stream.send(encode_message(
-            {"type": "records", "bound": bound, "records": recs}))
+        self._send({"type": "records", "bound": bound, "records": recs})
 
     def frontier(self, bound):
-        self._stream.send(encode_message(
-            {"type": "frontier", "bound": bound}))
+        self._send({"type": "frontier", "bound": bound})
 
-    def done(self, finals):
-        self._stream.send(encode_message({"type": "done", "stats": finals}))
+    def update(self, cohort_key, epoch, payload):
+        self._send({"type": "update", "cohort": cohort_key, "epoch": epoch,
+                    "payload": payload})
+
+    def idle(self, gen):
+        self._send({"type": "idle", "gen": gen})
+
+    def done(self, finals, trainer=None):
+        self._send({"type": "done", "stats": finals, "trainer": trainer})
 
     def err(self, tb):
-        self._stream.send(encode_message({"type": "err", "traceback": tb}))
+        self._send({"type": "err", "traceback": tb})
 
     def close(self):
         self._stream.close()
 
 
 # ---------------------------------------------------------------------------
-# the host loop: a group of shards between exchanges
+# the group loop: a group of shards between exchanges
 # ---------------------------------------------------------------------------
 
 def run_host_windows(shards: Sequence[Any], mailbox: Mailbox,
                      lookahead: float, sink: Any,
-                     owner_of_shard: Optional[Dict[int, int]] = None) -> int:
+                     owner_of_shard: Optional[Dict[int, int]] = None, *,
+                     control: Optional["queue.Queue"] = None,
+                     trainer: Optional[GroupTrainer] = None,
+                     control_timeout_s: float = _BARRIER_TIMEOUT_S) -> int:
     """Drive a *group* of shard engines under the mail-exchange barrier.
 
     Per window: advertise ``min(own next event, undelivered outgoing
-    mail)``; everyone computes the same ``T = min(all advertised)``; exit
-    together at ``T = +inf``; otherwise deliver incoming mail, run every
-    shard's events in ``[T, T + lookahead)``, route produced mail (intra-
-    group locally, cross-group into next window's outbox). Records ship
-    to ``sink`` every few windows tagged with the covered bound, so the
-    coordinator replays strictly below the fleet-wide safe frontier.
-    ``owner_of_shard`` maps a destination shard id to the peer that owns
-    it (identity when every peer is a single shard). Returns the window
-    count."""
+    mail)``; everyone computes the same ``T = min(all advertised)``;
+    otherwise deliver incoming mail, run every shard's events in
+    ``[T, T + lookahead)``, route produced mail (intra-group locally,
+    cross-group into next window's outbox). Records ship to ``sink``
+    every few windows tagged with the covered bound, so the coordinator
+    replays strictly below the fleet-wide safe frontier.
+
+    Quiescence (``T = +∞``): with no ``control`` queue the group simply
+    exits (the legacy async contract). With one, it ships whatever
+    records remain, announces ``idle`` (tagged with the number of
+    resumes consumed, so the coordinator can tell this quiescence from a
+    pre-resume one), and blocks for control mail: ``resume`` injects the
+    coordinator's mail (the sync round restart) and re-enters the loop;
+    ``stop`` ends the session. ``owner_of_shard`` maps a destination
+    shard id to the peer that owns it (identity when every peer is a
+    single shard). Returns the window count."""
     group = {s.shard_id: s for s in shards}
     owner = owner_of_shard or {}
-    inf = float("inf")
     windows = 0
+    gen = 0
     acc: Dict[str, list] = {"contribs": [], "epoch_starts": [],
                             "migrations": []}
 
@@ -428,12 +520,12 @@ def run_host_windows(shards: Sequence[Any], mailbox: Mailbox,
             sink.records(bound, {k: list(v) for k, v in acc.items()})
             for k in acc:
                 acc[k] = []
-        else:
+        elif math.isfinite(bound):
             sink.frontier(bound)
 
     def peek_min() -> float:
-        return min((inf if (t := s.peek()) is None else t
-                    for s in group.values()), default=inf)
+        return min((_INF if (t := s.peek()) is None else t
+                    for s in group.values()), default=_INF)
 
     def deliver(mail: List[Mail]) -> None:
         by_dst: Dict[int, List[Mail]] = {}
@@ -447,13 +539,28 @@ def run_host_windows(shards: Sequence[Any], mailbox: Mailbox,
     while True:
         T, incoming = mailbox.exchange(my_t, outbox)
         outbox = {p: [] for p in mailbox.peer_ids}
-        if T == inf:
-            break
+        if T == _INF:
+            ship(_INF)
+            if control is None:
+                break
+            sink.idle(gen)
+            try:
+                msg = control.get(timeout=control_timeout_s)
+            except queue.Empty:
+                raise RuntimeError(
+                    f"no control mail for {control_timeout_s}s at "
+                    "quiescence (coordinator stalled?)") from None
+            if msg["type"] == "stop":
+                break
+            gen += 1                             # resume: the next round
+            deliver(msg["mail"])
+            my_t = peek_min()
+            continue
         if incoming:
             deliver(incoming)
         bound = T + lookahead
         local: List[Mail] = []
-        mail_min = inf
+        mail_min = _INF
         for sid in sorted(group):
             res = group[sid].run_window(bound, [])
             for k, v in res.records.items():
@@ -472,37 +579,371 @@ def run_host_windows(shards: Sequence[Any], mailbox: Mailbox,
         windows += 1
         if windows % _SHIP_EVERY_WINDOWS == 0:
             ship(bound)
-    ship(inf)
+    tstats = trainer.finish() if trainer is not None else None
     finals = {}
     for sid in sorted(group):
         f = group[sid].final_stats()
         f["engine"]["windows"] = windows
         finals[sid] = f
-    sink.done(finals)
+    sink.done(finals, tstats)
     return windows
 
 
+def _dispatch_control(source: "queue.Queue",
+                      trainer: GroupTrainer) -> "queue.Queue":
+    """Split one FIFO control stream into its two delivery planes: the
+    trainer's inbox (``bcast``/``train`` — consumed any time, training
+    never blocks the window barrier) and the returned barrier queue
+    (``resume``/``stop`` — consumed by the window loop at quiescence).
+    ``stop`` goes to both; per-plane FIFO order is preserved."""
+    barrier_q: "queue.Queue" = queue.Queue()
+
+    def loop():
+        while True:
+            msg = source.get()
+            kind = msg["type"]
+            if kind in ("bcast", "train"):
+                trainer.post(msg)
+            elif kind == "resume":
+                barrier_q.put(msg)
+            elif kind == "stop":
+                trainer.post(msg)
+                barrier_q.put(msg)
+                return
+
+    threading.Thread(target=loop, daemon=True,
+                     name="control-dispatch").start()
+    return barrier_q
+
+
 # ---------------------------------------------------------------------------
-# multi-host execution: N shard-group processes connected only by sockets
+# the coordinator loop shared by every mesh engine
+# ---------------------------------------------------------------------------
+
+class _MeshState:
+    """Frontier/quiescence bookkeeping the replay's round restarts must
+    be able to reset mid-drive (``restart`` is called from inside the
+    ``on_chunk`` replay, on the drive thread)."""
+
+    def __init__(self, num_groups: int):
+        self.num_groups = num_groups
+        self.gen = 0                 # restarts sent (matches worker idles)
+        self.stopped = False
+        self.reset()
+
+    def reset(self) -> None:
+        self.frontiers = {g: 0.0 for g in range(self.num_groups)}
+        self.idle: set = set()
+        self.replay_frontier = 0.0
+
+
+def _drive_mesh(get: Callable[[float], Tuple[str, int, Dict[str, Any]]],
+                state: _MeshState, on_chunk, stop_all: Callable[[], None],
+                *, timeout_s: float = _BARRIER_TIMEOUT_S
+                ) -> Tuple[Dict[int, Dict[str, Any]],
+                           Dict[int, Dict[str, Any]]]:
+    """Consume ``(type, src, msg)`` record-plane messages until every
+    group reported ``done``; buffer/replay records below the advancing
+    safe frontier via ``on_chunk`` (exactly the PeerShardedEngine
+    contract of PR 2/4). When every group is idle at the current
+    generation, the pending replay runs to completion; if it triggered a
+    round restart (sync mode — ``state.gen`` advanced and the idle set
+    was reset) the mesh resumes, otherwise the session is over and
+    ``stop_all`` is sent. Returns (per-shard final stats, per-group
+    trainer stats)."""
+    finals: Dict[int, Dict[str, Any]] = {}
+    trainers: Dict[int, Dict[str, Any]] = {}
+    done: set = set()
+    while len(done) < state.num_groups:
+        try:
+            kind, src, msg = get(timeout_s)
+        except queue.Empty:
+            raise RuntimeError(
+                f"shard-group mesh made no progress for {timeout_s}s "
+                "(group stalled?)") from None
+        if kind == "err":
+            raise RuntimeError(f"shard group {src} failed:\n"
+                               f"{msg['traceback']}")
+        if kind == "lost":
+            if src in done:
+                continue          # clean close after its done message
+            raise RuntimeError(
+                f"shard group {src} died mid-run ({msg['err']})")
+        gen_before = state.gen
+        if kind == "records":
+            on_chunk(None, {src: msg["records"]})
+            if math.isfinite(msg["bound"]):
+                state.frontiers[src] = msg["bound"]
+        elif kind == "frontier":
+            state.frontiers[src] = msg["bound"]
+        elif kind == "idle":
+            if int(msg.get("gen", 0)) != state.gen:
+                continue          # pre-resume quiescence, already handled
+            state.idle.add(src)
+            state.frontiers[src] = _INF
+        elif kind == "done":
+            done.add(src)
+            finals.update(msg["stats"])
+            if msg.get("trainer"):
+                trainers[src] = msg["trainer"]
+            state.frontiers[src] = _INF
+        while True:
+            new = min(state.frontiers.values())
+            if new <= state.replay_frontier:
+                break
+            state.replay_frontier = new
+            on_chunk(new, {})     # a sync commit may restart() in here
+        if (kind == "idle" and len(state.idle) == state.num_groups
+                and state.gen == gen_before and not state.stopped):
+            state.stopped = True
+            stop_all()
+    on_chunk(_INF, {})
+    return finals, trainers
+
+
+class _MeshEngineBase:
+    """Control-plane plumbing shared by the pipe and socket engines."""
+
+    num_groups: int
+    owner: Dict[int, int]
+    state: _MeshState
+
+    def control_send(self, group: int, msg: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+    def restart(self, mail: Sequence[Mail]) -> None:
+        """Inject coordinator mail into a quiescent (or quiescing) mesh —
+        the sync round restart. Resets the frontier state and advances
+        the generation BEFORE sending, so idles from the previous round
+        can never be mistaken for the next one."""
+        by_group: Dict[int, List[Mail]] = {g: []
+                                           for g in range(self.num_groups)}
+        for m in mail:
+            by_group[self.owner[m.dst_shard]].append(m)
+        self.state.reset()
+        self.state.gen += 1
+        for g in range(self.num_groups):
+            self.control_send(g, {"type": "resume", "mail": by_group[g]})
+
+    def stop_all(self) -> None:
+        for g in range(self.num_groups):
+            try:
+                self.control_send(g, {"type": "stop"})
+            except (OSError, RuntimeError):
+                pass              # a group that already died stays dead
+
+
+# ---------------------------------------------------------------------------
+# pipe-transport mesh: N worker-group processes on one machine
+# ---------------------------------------------------------------------------
+
+def _pipe_group_main(conn, peers, lookahead) -> None:
+    """Entry point of one pipe-mesh group process. The parent pipe
+    carries the bootstrap in, control mail in, and records/updates out;
+    window traffic rides the direct peer pipes."""
+    import traceback
+    sink = None
+    try:
+        group, owner, trainer_blob = conn.recv()
+        sink = PipeRecordSink(conn)
+        trainer = GroupTrainer(trainer_blob, sink)
+        source: "queue.Queue" = queue.Queue()
+
+        def pump():               # parent pipe -> control source queue
+            while True:
+                try:
+                    msg = conn.recv()
+                except (EOFError, OSError):
+                    source.put({"type": "stop"})
+                    return
+                source.put(msg)
+                if msg["type"] == "stop":
+                    return
+
+        threading.Thread(target=pump, daemon=True,
+                         name="control-pump").start()
+        barrier_q = _dispatch_control(source, trainer)
+        run_host_windows(group, PipeMailbox(peers), lookahead, sink,
+                         owner, control=barrier_q, trainer=trainer)
+    except BaseException:
+        try:
+            if sink is not None:
+                sink.err(traceback.format_exc())
+            else:
+                conn.send({"type": "err",
+                           "traceback": traceback.format_exc()})
+        except (BrokenPipeError, OSError):
+            pass
+    finally:
+        conn.close()
+
+
+class PeerShardedEngine(_MeshEngineBase):
+    """Pipe-transport group mesh: ``groups`` worker processes, each
+    owning ``shards/groups`` shard engines plus the cohort trainer for
+    the cohorts it hosts. Workers self-synchronize (the all-to-all pipe
+    exchange is the window barrier — no shared-memory primitives, so
+    sandboxes without named semaphores run this fine); the coordinator
+    trails behind, replaying record shipments below the fleet-wide safe
+    frontier and steering the mesh over the control plane (round
+    restarts, model broadcasts, train directives). Bit-identical to the
+    serial path: same arithmetic, same mail times, same replay order."""
+
+    def __init__(self, shards: Sequence[Any], *, lookahead: float,
+                 groups: Optional[int] = None,
+                 trainer_blobs: Optional[Dict[int, bytes]] = None):
+        if lookahead is None or lookahead <= 0:
+            raise ValueError("peer sharded execution needs a positive "
+                             "lookahead")
+        ctx = mp.get_context("spawn")
+        shards = sorted(shards, key=lambda s: s.shard_id)
+        self.shard_ids = [s.shard_id for s in shards]
+        self.num_groups = max(1, min(groups or len(shards), len(shards)))
+        self.owner = {sid: sid % self.num_groups for sid in self.shard_ids}
+        self.state = _MeshState(self.num_groups)
+        self.on_update: Optional[Callable] = None
+        self.on_abort: Optional[Callable[[str], None]] = None
+        # peer mesh: one duplex pipe per group pair, passed at Process
+        # creation (fds must be inherited, not sent later)
+        mesh: Dict[Tuple[int, int], Any] = {}
+        for i in range(self.num_groups):
+            for j in range(i + 1, self.num_groups):
+                mesh[(i, j)] = ctx.Pipe()
+        self._conns: Dict[int, Any] = {}
+        self._procs = []
+        blobs = trainer_blobs or {}
+        for g in range(self.num_groups):
+            parent, child = ctx.Pipe()
+            peers = {}
+            for (i, j), (a, b) in mesh.items():
+                if i == g:
+                    peers[j] = a
+                elif j == g:
+                    peers[i] = b
+            proc = ctx.Process(target=_pipe_group_main,
+                               args=(child, peers, lookahead), daemon=True)
+            proc.start()
+            parent.send(([s for s in shards if self.owner[s.shard_id] == g],
+                         self.owner, blobs.get(g)))
+            self._conns[g] = parent
+            self._procs.append(proc)
+        for (a, b) in mesh.values():          # parent keeps no mesh ends
+            a.close()
+            b.close()
+        self._final: Dict[int, Dict[str, Any]] = {}
+        self._trainers: Dict[int, Dict[str, Any]] = {}
+        self.wall_s = 0.0
+        self.windows = 0
+
+    def control_send(self, group: int, msg: Dict[str, Any]) -> None:
+        self._conns[group].send(msg)
+
+    def run(self, on_chunk) -> "PeerShardedEngine":
+        """Drain record shipments (in a thread, so a slow replay can
+        never fill the worker pipes and stall the all-to-all mesh) and
+        drive the shared coordinator loop on this thread."""
+        from multiprocessing.connection import wait as conn_wait
+        wall0 = time.perf_counter()
+        g_of = {conn: g for g, conn in self._conns.items()}
+        q: "queue.Queue" = queue.Queue()
+
+        def drain():
+            live = dict(self._conns)
+            while live:
+                ready = conn_wait(list(live.values()),
+                                  timeout=_BARRIER_TIMEOUT_S)
+                if not ready:
+                    q.put(("err", -1, {"traceback":
+                                       "record drain made no progress "
+                                       f"for {_BARRIER_TIMEOUT_S}s"}))
+                    return
+                for conn in ready:
+                    g = g_of[conn]
+                    try:
+                        msg = conn.recv()
+                    except (EOFError, OSError) as e:
+                        # a killed worker surfaces as EOF or ECONNRESET
+                        # depending on how the pipe died — both mean the
+                        # group is gone, never let them kill the drain
+                        del live[g]
+                        if self.on_abort is not None:
+                            self.on_abort(f"shard group {g} died")
+                        q.put(("lost", g,
+                               {"err": f"worker process died ({e or 'EOF'})"}))
+                        continue
+                    kind = msg["type"]
+                    if kind == "update":
+                        if self.on_update is not None:
+                            self.on_update(msg)
+                        continue
+                    if kind == "err" and self.on_abort is not None:
+                        self.on_abort(msg["traceback"])
+                    if kind == "done":
+                        del live[g]
+                    q.put((kind, g, msg))
+
+        th = threading.Thread(target=drain, daemon=True)
+        th.start()
+        try:
+            self._final, self._trainers = _drive_mesh(
+                lambda t: q.get(timeout=t), self.state, on_chunk,
+                self.stop_all)
+        finally:
+            self.wall_s = time.perf_counter() - wall0
+        th.join(timeout=5)
+        self.windows = max((f["engine"].get("windows", 0)
+                            for f in self._final.values()), default=0)
+        return self
+
+    def stats(self) -> Dict[str, Any]:
+        out = _merge_shard_stats(self._final, wall_s=self.wall_s,
+                                 windows=self.windows,
+                                 num_shards=len(self.shard_ids))
+        out["num_groups"] = self.num_groups
+        if self._trainers:
+            out["trainers"] = self._trainers
+        return out
+
+    def close(self) -> None:
+        for conn in self._conns.values():
+            try:
+                conn.close()
+            except (BrokenPipeError, OSError):
+                pass
+        for proc in self._procs:
+            proc.join(timeout=5)
+            if proc.is_alive():
+                proc.terminate()
+
+
+# ---------------------------------------------------------------------------
+# socket-transport mesh: N group processes connected only by TCP
 # ---------------------------------------------------------------------------
 
 def _host_proc_main(conn) -> None:
     """Entry point of one host process (localhost harness). Bootstrap
     rides the spawn pipe — (rank, shard group, owner map, lookahead,
-    record address) in, bound mail port out, peer directory in — and
-    every byte of the window protocol after that rides TCP."""
+    record address, trainer blob, host count) in, bound mail port out,
+    peer directory in — and every byte of the window protocol after
+    that rides TCP (mail mesh + records out + control in)."""
     import traceback
     sink = None
     mailbox = None
     try:
-        rank, group, owner, lookahead, record_addr = conn.recv()
-        mailbox = SocketMailbox(rank)
+        (rank, group, owner, lookahead, record_addr, trainer_blob,
+         num_hosts) = conn.recv()
+        # listener backlog: hosts-1 incoming mail peers + the control
+        # stream + slack for connect-storm retries
+        mailbox = SocketMailbox(rank, backlog=num_hosts + 4)
         conn.send(("port", mailbox.port))
         directory = conn.recv()
         sink = SocketRecordSink(record_addr, rank)
         mailbox.connect(directory)
         conn.send(("ready",))
-        run_host_windows(group, mailbox, lookahead, sink, owner)
+        trainer = GroupTrainer(trainer_blob, sink, group_id=rank)
+        barrier_q = _dispatch_control(mailbox.control, trainer)
+        run_host_windows(group, mailbox, lookahead, sink, owner,
+                         control=barrier_q, trainer=trainer)
     except BaseException:
         tb = traceback.format_exc()
         try:
@@ -520,56 +961,10 @@ def _host_proc_main(conn) -> None:
         conn.close()
 
 
-def drain_host_records(records: "queue.Queue", num_hosts: int,
-                       on_chunk: Callable[[Optional[float],
-                                           Dict[int, Dict[str, list]]], None],
-                       *, timeout_s: float = _BARRIER_TIMEOUT_S
-                       ) -> Dict[int, Dict[str, Any]]:
-    """Coordinator side of the record protocol: consume ``(type, src,
-    msg)`` tuples from ``records`` (a ``SocketMailbox.records`` queue)
-    until every host reported ``done``; call ``on_chunk`` exactly like
-    ``PeerShardedEngine.run`` does. Raises if a host errors, dies (its
-    record stream closes before ``done``), or the mesh stalls. Returns
-    the per-shard final stats."""
-    inf = float("inf")
-    frontiers = {r: 0.0 for r in range(num_hosts)}
-    done: set = set()
-    finals: Dict[int, Dict[str, Any]] = {}
-    replay_frontier = 0.0
-    while len(done) < num_hosts:
-        try:
-            kind, src, msg = records.get(timeout=timeout_s)
-        except queue.Empty:
-            raise RuntimeError(
-                f"multi-host mesh made no progress for {timeout_s}s "
-                "(host stalled?)") from None
-        if kind == "err":
-            raise RuntimeError(f"shard host {src} failed:\n"
-                               f"{msg['traceback']}")
-        if kind == "lost":
-            if src in done:
-                continue          # clean close after its done message
-            raise RuntimeError(
-                f"shard host {src} died mid-run ({msg['err']})")
-        if kind == "records":
-            frontiers[src] = msg["bound"]
-            on_chunk(None, {src: msg["records"]})
-        elif kind == "frontier":
-            frontiers[src] = msg["bound"]
-        elif kind == "done":
-            finals.update(msg["stats"])
-            done.add(src)
-            frontiers[src] = inf
-        new_frontier = min(frontiers.values())
-        if new_frontier > replay_frontier:
-            replay_frontier = new_frontier
-            on_chunk(replay_frontier, {})
-    on_chunk(inf, {})
-    return finals
-
-
 def merge_host_finals(finals: Dict[int, Dict[str, Any]], *, wall_s: float,
-                      num_shards: int, num_hosts: int) -> Dict[str, Any]:
+                      num_shards: int, num_hosts: int,
+                      trainers: Optional[Dict[int, Dict[str, Any]]] = None
+                      ) -> Dict[str, Any]:
     """Fold per-shard final stats from a multi-host run into one
     engine-stats dict (shared by ``HostShardedEngine.stats`` and
     ``FleetSimulator.run_multihost`` so the stats shape cannot
@@ -579,38 +974,84 @@ def merge_host_finals(finals: Dict[int, Dict[str, Any]], *, wall_s: float,
     stats = _merge_shard_stats(finals, wall_s=wall_s, windows=windows,
                                num_shards=num_shards)
     stats["num_hosts"] = num_hosts
+    if trainers:
+        stats["trainers"] = trainers
     return stats
 
 
-class HostShardedEngine:
+class MultihostControl(_MeshEngineBase):
+    """Rank 0's control plane in a distributed run: one ``ctrl`` stream
+    to every rank's mail listener (its own included — rank 0 is both
+    coordinator and host). Gives ``FleetSimulator.run_multihost`` the
+    same restart/stop/trainer-steering surface the localhost engines
+    have."""
+
+    def __init__(self, addresses: Dict[int, Tuple[str, int]],
+                 owner_of_shard: Dict[int, int]):
+        self.num_groups = len(addresses)
+        self.owner = owner_of_shard
+        self.state = _MeshState(self.num_groups)
+        self.on_update: Optional[Callable] = None
+        self.on_abort: Optional[Callable[[str], None]] = None
+        self._ctrl: Dict[int, FrameStream] = {}
+        for r in sorted(addresses):
+            self._ctrl[r] = _connect_retry(addresses[r])
+            self._ctrl[r].send(encode_message(
+                {"type": "hello", "channel": "ctrl", "src": -1}))
+
+    def control_send(self, group: int, msg: Dict[str, Any]) -> None:
+        self._ctrl[group].send(encode_message(msg))
+
+    def close(self) -> None:
+        for s in self._ctrl.values():
+            try:
+                s.close()
+            except OSError:
+                pass
+
+
+class HostShardedEngine(_MeshEngineBase):
     """Multi-host executor: N OS processes, each owning a group of
-    ``EdgeShard`` engines, connected **only by TCP sockets** — the
-    localhost harness for the protocol that runs across machines. The
-    window barrier rides the ``SocketMailbox`` all-to-all exchange
-    exactly as ``PeerShardedEngine``'s rides its pipes, and the parent
-    drains record frames from its own listener, so ``on_chunk`` sees the
-    same contract (and the replay stays bit-identical to
-    ``SerialExecutor`` for any host count)."""
+    ``EdgeShard`` engines plus the cohort trainer for the cohorts it
+    hosts, connected **only by TCP sockets** — the localhost harness for
+    the protocol that runs across machines. The window barrier rides the
+    ``SocketMailbox`` all-to-all exchange exactly as
+    ``PeerShardedEngine``'s rides its pipes; the parent drains record
+    frames from its own listener and steers the mesh over per-host
+    ``ctrl`` streams, so ``on_chunk`` sees the same contract (and the
+    replay stays bit-identical to ``SerialExecutor`` for any host count,
+    sync or async).
+
+    Context-manage it (``with HostShardedEngine(...) as eng``) or call
+    ``close()`` — idempotent — so an abort never leaks listener sockets,
+    spawn pipes, or child processes into the next run."""
 
     def __init__(self, shards: Sequence[Any], *, lookahead: float,
-                 hosts: int):
+                 hosts: int,
+                 trainer_blobs: Optional[Dict[int, bytes]] = None):
         if lookahead is None or lookahead <= 0:
             raise ValueError("multi-host execution needs a positive "
                              "lookahead")
         shards = sorted(shards, key=lambda s: s.shard_id)
-        self.num_hosts = max(1, min(hosts, len(shards)))
+        self.num_hosts = self.num_groups = max(1, min(hosts, len(shards)))
         self.shard_ids = [s.shard_id for s in shards]
         self.owner = {sid: sid % self.num_hosts for sid in self.shard_ids}
-        # the parent's listener doubles as the record collector; it never
-        # joins the mail mesh (no connect), so rank is out-of-band
-        self._collector = SocketMailbox(-1)
+        self.state = _MeshState(self.num_hosts)
         self._final: Dict[int, Dict[str, Any]] = {}
+        self._trainers: Dict[int, Dict[str, Any]] = {}
         self.windows = 0
         self.wall_s = 0.0
+        self._closed = False
+        self._procs: List[Any] = []
+        self._boots: List[Any] = []
+        self._ctrl: Dict[int, FrameStream] = {}
+        # the parent's listener doubles as the record collector; it never
+        # joins the mail mesh (no connect), so rank is out-of-band. Its
+        # backlog must absorb every host's records stream at once.
+        self._collector = SocketMailbox(-1, backlog=self.num_hosts + 4)
         ctx = mp.get_context("spawn")
-        self._procs = []
-        self._boots = []
         record_addr = ("127.0.0.1", self._collector.port)
+        blobs = trainer_blobs or {}
         try:
             for rank in range(self.num_hosts):
                 group = [s for s in shards
@@ -620,7 +1061,7 @@ class HostShardedEngine:
                                    daemon=True)
                 proc.start()
                 parent.send((rank, group, self.owner, lookahead,
-                             record_addr))
+                             record_addr, blobs.get(rank), self.num_hosts))
                 self._procs.append(proc)
                 self._boots.append(parent)
             directory = {rank: ("127.0.0.1", self._boot_recv(rank)[1])
@@ -629,12 +1070,32 @@ class HostShardedEngine:
                 parent.send(directory)
             for rank in range(self.num_hosts):
                 self._boot_recv(rank)             # ("ready",)
+            for rank in range(self.num_hosts):
+                self._ctrl[rank] = _connect_retry(directory[rank])
+                self._ctrl[rank].send(encode_message(
+                    {"type": "hello", "channel": "ctrl", "src": -1}))
         except BaseException:
-            # a failed bootstrap must not leak the collector listener or
-            # the already-spawned host processes (the caller never gets
-            # an engine to close)
+            # a failed bootstrap must not leak the collector listener,
+            # the spawn pipes, or the already-spawned host processes (the
+            # caller never gets an engine to close)
             self.close()
             raise
+
+    @property
+    def on_update(self):
+        return self._collector.on_update
+
+    @on_update.setter
+    def on_update(self, fn):
+        self._collector.on_update = fn
+
+    @property
+    def on_abort(self):
+        return self._collector.on_abort
+
+    @on_abort.setter
+    def on_abort(self, fn):
+        self._collector.on_abort = fn
 
     def _boot_recv(self, rank: int):
         conn = self._boots[rank]
@@ -651,22 +1112,47 @@ class HostShardedEngine:
                                f"startup:\n{msg[1]}")
         return msg
 
+    def control_send(self, group: int, msg: Dict[str, Any]) -> None:
+        self._ctrl[group].send(encode_message(msg))
+
     def run(self, on_chunk) -> "HostShardedEngine":
         wall0 = time.perf_counter()
-        self._final = drain_host_records(self._collector.records,
-                                         self.num_hosts, on_chunk)
-        self.wall_s = time.perf_counter() - wall0
+        try:
+            self._final, self._trainers = _drive_mesh(
+                lambda t: self._collector.records.get(timeout=t),
+                self.state, on_chunk, self.stop_all)
+        finally:
+            self.wall_s = time.perf_counter() - wall0
         return self
 
     def stats(self) -> Dict[str, Any]:
         out = merge_host_finals(self._final, wall_s=self.wall_s,
                                 num_shards=len(self.shard_ids),
-                                num_hosts=self.num_hosts)
+                                num_hosts=self.num_hosts,
+                                trainers=self._trainers)
         self.windows = out["windows"]
         return out
 
+    def __enter__(self) -> "HostShardedEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     def close(self) -> None:
+        """Idempotent teardown, safe mid-bootstrap: listener sockets,
+        control streams, and spawn pipes close BEFORE any child is
+        terminated, so an abort path never leaves a bound port behind
+        for the next run to trip over."""
+        if self._closed:
+            return
+        self._closed = True
         self._collector.close()
+        for stream in self._ctrl.values():
+            try:
+                stream.close()
+            except OSError:
+                pass
         for conn in self._boots:
             try:
                 conn.close()
@@ -676,3 +1162,4 @@ class HostShardedEngine:
             proc.join(timeout=5)
             if proc.is_alive():
                 proc.terminate()
+                proc.join(timeout=5)

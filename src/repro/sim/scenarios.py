@@ -41,6 +41,7 @@ class ScenarioSpec:
     mode: str = "async"          # async shows the interesting dynamics
     batch_size: int = 16
     num_batches: int = 2
+    num_cohorts: int = 1         # >1 spreads clients over cohort signatures
     max_replicas: int = 4
     slots: int = 8
     lr: float = 0.01
@@ -130,7 +131,8 @@ def build_scenario(spec: ScenarioSpec) -> FleetSimulator:
     edges = _build_edges(spec)
     specs = make_fleet_specs(spec.num_clients, [e.edge_id for e in edges],
                              batch_size=spec.batch_size,
-                             num_batches=spec.num_batches)
+                             num_batches=spec.num_batches,
+                             cohorts=spec.num_cohorts)
     fleet = Fleet(VGG5(), sgd(momentum=0.9), specs, split_point=2,
                   lr_schedule=constant(spec.lr),
                   max_replicas=spec.max_replicas, seed=spec.seed)

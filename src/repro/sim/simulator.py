@@ -3,11 +3,17 @@
 Architecture (this is the sharded rewrite — see README.md):
 
   engine     — ``SimEngine`` heaps + ``ShardedEngine`` conservative-
-               window coordinator (+ serial / multiprocessing executors)
+               window coordinator (the in-process reference path)
   shard      — JAX-free per-edge ``EdgeShard`` timing engines: batch
                compute with *re-priced* congestion, moves, checkpoint
                packing, backhaul FIFOs, churn
   fleet      — cohort-vectorized client numerics (vmap over replicas)
+  trainer    — WHERE the numerics run: inline on the coordinator
+               (serial) or in the shard-group worker processes
+               (``workers=``/``hosts=``), driven by control mail and
+               shipping ``update`` records back
+  mailbox    — the group mesh: pipe/socket transports, the control
+               plane, and the shared coordinator drive loop
   async_agg  — sync FedAvg barrier or FedAsync *batched* staleness-
                weighted mixing (one fedavg_agg kernel dispatch per flush)
   metrics    — per-round JSON records
@@ -18,11 +24,15 @@ transfers, so cross-shard traffic is exactly the migrations whose
 destination edge lives elsewhere), precomputes the static per-cohort
 timing tables the shards need, and then *replays* the records shards
 emit — epoch starts, update arrivals, migrations — in global simulated-
-time order, running cohort training and aggregation at the recorded
-times. Timing never depends on numerics, so the replay is exact and
-per-round metrics are bit-identical for any shard count (and for any
-worker count: shard arithmetic is per-edge and tie-breaks use client
-ids, not heap insertion order).
+time order. The replay itself is pure timing + aggregation: at an epoch
+start it *requests* training (from its own fleet in serial mode, from
+the owning shard group's trainer otherwise, broadcasting each global-
+model version at most once per group), and at an update arrival it
+consumes the trained snapshot. Timing never depends on numerics, so the
+replay is exact and per-round metrics are bit-identical for any shard
+count, worker count, and host count (shard arithmetic is per-edge,
+tie-breaks use client ids, updates ship raw/bit-exact, and training
+consumes the identical broadcast bytes wherever it runs).
 
 Aggregation: in async mode arriving updates are *buffered* and flushed
 on a fixed simulated-time grid (``flush_interval_s``, default = the
@@ -38,7 +48,7 @@ from __future__ import annotations
 
 import bisect
 import math
-import queue
+import pickle
 import threading
 import time
 from dataclasses import dataclass
@@ -52,14 +62,16 @@ from repro.core.mobility import MobilityTrace
 from repro.sim.async_agg import (AsyncAggregator, StalenessFn, SyncAggregator,
                                  poly_staleness)
 from repro.sim.edge import SimEdge
-from repro.sim.engine import (EventKind, Mail, PeerShardedEngine,
-                              ProcessExecutor, SerialExecutor, ShardedEngine)
+from repro.sim.engine import (EventKind, Mail, SerialExecutor, ShardedEngine)
 from repro.sim.fleet import Fleet
-from repro.sim.mailbox import (HostShardedEngine, SocketMailbox,
-                               SocketRecordSink, drain_host_records,
+from repro.sim.mailbox import (HostShardedEngine, MultihostControl,
+                               PeerShardedEngine, SocketMailbox,
+                               SocketRecordSink, _dispatch_control,
+                               _drive_mesh, _MeshEngineBase,
                                merge_host_finals, run_host_windows)
 from repro.sim.metrics import FleetMetrics, MigrationRecord
 from repro.sim.shard import EdgeShard, ShardClient, ShardEdge, batch_parts
+from repro.sim.trainer import GroupTrainer, LocalTrainer, TrainerProxy
 
 Params = Any
 
@@ -93,12 +105,16 @@ class FleetResult:
 class FleetSimulator:
     """Sharded discrete-event FedFly simulation over a ``Fleet`` and
     ``SimEdge``s. ``shards=1`` (default) is the degenerate single-heap
-    case; ``workers=N`` runs the shard engines in N parallel processes
-    over pipes; ``hosts=N`` runs N shard-group processes connected only
-    by TCP sockets — the localhost harness of the multi-host protocol
+    case; ``workers=N`` runs N shard-group processes over pipes;
+    ``hosts=N`` runs N shard-group processes connected only by TCP
+    sockets — the localhost harness of the multi-host protocol
     (``run_multihost`` spreads the same protocol over separate
-    machines). Both require ``measure_pack=False`` — workers and hosts
-    are JAX-free."""
+    machines). Both support sync AND async mode (the sync round restart
+    rides the coordinator→mesh control channel), both move the cohort
+    XLA training into the group processes (each group owns the cohorts
+    whose clients it hosts), and both require ``measure_pack=False`` —
+    group timing engines price migrations from the cached cohort
+    tables."""
 
     def __init__(self, fleet: Fleet, edges: Sequence[SimEdge], *,
                  trace: Optional[MobilityTrace] = None,
@@ -121,24 +137,23 @@ class FleetSimulator:
                              "clients")
         if shards < 1:
             raise ValueError(f"shards must be >= 1, got {shards}")
-        if workers is not None and measure_pack:
-            raise ValueError("workers (multiprocessing shards) require "
-                             "measure_pack=False: shard processes are "
-                             "JAX-free and cannot serialize checkpoints")
+        if workers is not None:
+            if workers < 1:
+                raise ValueError(f"workers must be >= 1, got {workers}")
+            if measure_pack:
+                raise ValueError("workers (multiprocessing shards) require "
+                                 "measure_pack=False: shard processes "
+                                 "price migrations from the cached cohort "
+                                 "tables, not real checkpoint packs")
         if hosts is not None:
             if hosts < 1:
                 raise ValueError(f"hosts must be >= 1, got {hosts}")
-            if mode != "async":
-                raise ValueError(
-                    "multi-host execution (hosts=) is async-only: the "
-                    "sync round restart is control mail the coordinator "
-                    "injects mid-run, which the self-synchronizing host "
-                    "mesh has no channel for")
             if measure_pack:
                 raise ValueError("hosts (socket-sharded execution) "
                                  "requires measure_pack=False: host "
-                                 "processes are JAX-free and cannot "
-                                 "serialize checkpoints")
+                                 "processes price migrations from the "
+                                 "cached cohort tables, not real "
+                                 "checkpoint packs")
             if workers is not None:
                 raise ValueError("hosts and workers are mutually "
                                  "exclusive (sockets vs pipes)")
@@ -183,7 +198,11 @@ class FleetSimulator:
         self._round_last_arrival = 0.0
         self._consumed: Dict[Tuple, int] = {}   # (cohort, epoch) -> count
         self._prune_floor: Dict[Tuple, int] = {k: 0 for k in fleet.cohorts}
-        self.coordinator: Optional[ShardedEngine] = None
+        self.coordinator: Optional[Any] = None
+        # numerics engine: the serial default trains inline; the mesh
+        # paths swap in a TrainerProxy over the control channel
+        self._trainer: Any = LocalTrainer(fleet)
+        self._mesh: Optional[_MeshEngineBase] = None
 
     # -- static timing inputs -------------------------------------------
 
@@ -235,9 +254,40 @@ class FleetSimulator:
 
     # -- shard construction ---------------------------------------------
 
+    def _shard_of_edge(self) -> Dict[str, int]:
+        return {eid: i % self.num_shards
+                for i, eid in enumerate(self.edge_order)}
+
+    def _cohort_owners(self, owner_of_shard: Dict[int, int]
+                       ) -> Dict[Tuple, int]:
+        """Group that owns each cohort's replica stack under worker
+        training: the group of the shard hosting most of the cohort's
+        clients (initial placement; ties to the lowest shard id). The
+        mapping is a pure function of the fleet + shard layout, so every
+        rank of a multi-host run computes the same one."""
+        shard_of_edge = self._shard_of_edge()
+        counts: Dict[Tuple, Dict[int, int]] = {}
+        for cid in sorted(self.fleet.clients):
+            c = self.fleet.clients[cid]
+            per = counts.setdefault(c.spec.cohort_key, {})
+            sid = shard_of_edge[c.edge_id]
+            per[sid] = per.get(sid, 0) + 1
+        return {key: owner_of_shard[min(per, key=lambda s: (-per[s], s))]
+                for key, per in counts.items()}
+
+    def _trainer_blobs(self, cohort_owner: Dict[Tuple, int]
+                       ) -> Dict[int, bytes]:
+        """Pickled ``CohortSpec`` lists per owner group — the trainer
+        bootstrap payload. Kept as opaque bytes so a group that owns no
+        cohorts (or never trains) never pays the JAX import."""
+        specs = self.fleet.cohort_specs()
+        by_group: Dict[int, list] = {}
+        for key in sorted(cohort_owner):
+            by_group.setdefault(cohort_owner[key], []).append(specs[key])
+        return {g: pickle.dumps(lst) for g, lst in by_group.items()}
+
     def _build_shards(self, rounds: int) -> List[EdgeShard]:
-        shard_of_edge = {eid: i % self.num_shards
-                         for i, eid in enumerate(self.edge_order)}
+        shard_of_edge = self._shard_of_edge()
         attached: Dict[str, int] = {eid: 0 for eid in self.edge_order}
         clients_by_shard: Dict[int, List[ShardClient]] = {
             s: [] for s in range(self.num_shards)}
@@ -282,8 +332,11 @@ class FleetSimulator:
         return self._flush_versions[i - 1] if i else 0
 
     def _train(self, cohort_key, epoch: int):
-        self.fleet.cohorts[cohort_key].run_epoch(
-            self.fleet.global_params, epoch, self.fleet.lr_schedule(epoch))
+        """Request (cohort, epoch): trains inline in serial mode, sends
+        a control-mail train directive to the owning shard group
+        otherwise (broadcasting the current global version first if that
+        group hasn't synced it)."""
+        self._trainer.request(cohort_key, epoch)
 
     def _fire_flush(self, t: float):
         """Apply all buffered updates (arrival < t) in one kernel call."""
@@ -324,13 +377,19 @@ class FleetSimulator:
             self._maybe_prune(cohort_key)
 
     def _maybe_prune(self, cohort_key):
-        floor = self._prune_floor[cohort_key]
+        floor0 = self._prune_floor[cohort_key]
+        floor = floor0
         size = self._cohort_sizes[cohort_key]
         while self._consumed.get((cohort_key, floor), 0) >= size:
             floor += 1
-        if floor != self._prune_floor[cohort_key]:
+        if floor != floor0:
             self._prune_floor[cohort_key] = floor
-            self.fleet.cohorts[cohort_key].prune(floor)
+            # drop the fully-consumed counters with the snapshots they
+            # tracked — otherwise ``_consumed`` grows one key per
+            # (cohort, epoch) for the life of the run
+            for e in range(floor0, floor):
+                self._consumed.pop((cohort_key, e), None)
+            self._trainer.prune(cohort_key, floor)
 
     def _on_window(self, bound: float,
                    all_records: Dict[int, Dict[str, list]]) -> List[Mail]:
@@ -363,9 +422,9 @@ class FleetSimulator:
                 continue
             (arrival, cid, cohort_key, replica, epoch, epoch_start_s,
              pulled_s, num_samples) = action[1]
-            cohort = self.fleet.cohorts[cohort_key]
-            tree = cohort.snapshots[epoch][replica]
-            loss = float(cohort.losses[epoch][replica])
+            trees, losses = self._trainer.update_for(cohort_key, epoch)
+            tree = trees[replica]
+            loss = float(losses[replica])
             record = self.metrics.record_contribution(
                 client_id=cid, round_idx=epoch, arrival_s=arrival,
                 duration_s=arrival - epoch_start_s, staleness=0,
@@ -398,8 +457,8 @@ class FleetSimulator:
         else:
             for (cohort_key, replica), weight in sorted(
                     self._round_weights.items()):
-                tree = self.fleet.cohorts[cohort_key].snapshots[r][replica]
-                self.agg.submit(tree, weight)
+                trees, _ = self._trainer.update_for(cohort_key, r)
+                self.agg.submit(trees[replica], weight)
             self._round_weights.clear()
             self.fleet.set_global(self.agg.commit())
             self.metrics.record_barrier(r, t)
@@ -407,11 +466,17 @@ class FleetSimulator:
                 self._maybe_prune(cohort_key)
         self._arrived = 0
         self._round_idx = r + 1
-        if r + 1 < self.num_rounds:
-            return [Mail(dst_shard=s, time=t, kind=EventKind.ROUND_START,
-                         key="", payload={"round_idx": r + 1})
-                    for s in range(self.num_shards)]
-        return []
+        mail = ([Mail(dst_shard=s, time=t, kind=EventKind.ROUND_START,
+                      key="", payload={"round_idx": r + 1})
+                 for s in range(self.num_shards)]
+                if r + 1 < self.num_rounds else [])
+        if self._mesh is not None:
+            # mesh path: the restart is control mail to the (quiescing)
+            # group processes, not engine mail — sync-mode multi-host
+            if mail:
+                self._mesh.restart(mail)
+            return []
+        return mail
 
     # -- entry point -----------------------------------------------------
 
@@ -442,52 +507,6 @@ class FleetSimulator:
                 "migrations": migs}})
         return on_chunk
 
-    def _run_overlapped(self) -> None:
-        """Async + worker processes: shard timing runs in the workers, so
-        the coordinator thread spends its time blocked on pipes (GIL
-        released) — the numerics replay can trail one window behind in a
-        thread and overlap almost completely. The replay order is the
-        same window FIFO the inline path uses, so results are
-        bit-identical."""
-        q: "queue.Queue" = queue.Queue(maxsize=32)
-        errs: List[BaseException] = []
-
-        def consume():
-            while True:
-                item = q.get()
-                if item is None:
-                    return
-                try:
-                    self._on_window(*item)
-                except BaseException as e:   # surfaced by _put / at join
-                    errs.append(e)
-                    return
-
-        th = threading.Thread(target=consume, daemon=True)
-        th.start()
-
-        def _put(item):
-            # never block forever on a full queue whose consumer died —
-            # re-check for a consumer error between bounded put attempts
-            while True:
-                if errs:
-                    raise errs[0]
-                try:
-                    q.put(item, timeout=1.0)
-                    return
-                except queue.Full:
-                    continue
-
-        def enqueue(bound, records):
-            _put((bound, records))
-            return []
-
-        self.coordinator.run(enqueue)
-        _put(None)
-        th.join()
-        if errs:
-            raise errs[0]
-
     def _drain_async_tail(self) -> None:
         """Flush any buffered async updates past the last grid point."""
         if self.mode == "async" and self._buffer:
@@ -507,6 +526,41 @@ class FleetSimulator:
             final_params=self.agg.params,
             metrics=self.metrics)
 
+    def _round0_mail(self) -> List[Mail]:
+        return [Mail(dst_shard=s, time=0.0, kind=EventKind.ROUND_START,
+                     key="", payload={"round_idx": 0})
+                for s in range(self.num_shards)]
+
+    def _attach_proxy(self, mesh: _MeshEngineBase,
+                      cohort_owner: Dict[Tuple, int]) -> TrainerProxy:
+        """Swap the inline trainer for the control-mail proxy and wire
+        the mesh's reader threads to it (updates routed around the
+        replay queue; group deaths poison blocked waiters)."""
+        proxy = TrainerProxy(
+            mesh.control_send, cohort_owner,
+            lr_of=self.fleet.lr_schedule,
+            params_of=lambda: self.agg.params,
+            version_of=lambda: self.agg.version)
+        self._trainer = proxy
+        self._mesh = mesh
+        mesh.on_update = proxy.on_update
+        mesh.on_abort = proxy.abort
+        return proxy
+
+    def _finish_run(self, engine: Any, wall0: float) -> FleetResult:
+        """Shared tail of every executor path: drain the async flush
+        buffer, stamp uniform wall accounting (windows + replay + flush
+        drain — engine construction is deliberately excluded, so mesh
+        bring-up cost never deflates the events/sec comparison), and
+        fold the result."""
+        self._drain_async_tail()
+        stats = engine.stats()
+        stats["wall_s"] = time.perf_counter() - wall0
+        stats["events_per_sec"] = (stats["events_processed"]
+                                   / stats["wall_s"]
+                                   if stats["wall_s"] > 0 else 0.0)
+        return self._build_result(stats)
+
     def run(self, rounds: int) -> FleetResult:
         self.num_rounds = rounds
         self._expected = self.fleet.num_clients
@@ -517,51 +571,50 @@ class FleetSimulator:
         if self.mode == "async":
             for s in shards:
                 s.bootstrap_async()
-        # peer-driven mesh when every shard gets its own worker (async):
-        # one semaphore barrier per window instead of parent roundtrips
-        use_hosts = self.hosts is not None
-        use_peer = (not use_hosts
-                    and self.workers is not None and self.mode == "async"
-                    and self.num_shards > 1
-                    and self.workers >= self.num_shards)
-        if use_hosts:
-            # socket-sharded host groups (localhost harness of the
-            # multi-host protocol); same record contract as the peer mesh
-            self.coordinator = HostShardedEngine(
-                shards, lookahead=self._lookahead(), hosts=self.hosts)
-        elif use_peer:
-            self.coordinator = PeerShardedEngine(
-                shards, lookahead=self._lookahead())
-        else:
-            executor = (ProcessExecutor(shards, self.workers)
-                        if self.workers else SerialExecutor(shards))
+        if self.workers is None and self.hosts is None:
+            # serial reference path: inline replay, inline training
+            self._trainer = LocalTrainer(self.fleet)
+            self._mesh = None
             lookahead = self._lookahead() if self.num_shards > 1 else None
-            self.coordinator = ShardedEngine(shards, lookahead=lookahead,
-                                             executor=executor)
+            self.coordinator = ShardedEngine(
+                shards, lookahead=lookahead,
+                executor=SerialExecutor(shards))
             if self.mode == "sync":
-                for s in range(self.num_shards):
-                    self.coordinator.post(Mail(
-                        dst_shard=s, time=0.0, kind=EventKind.ROUND_START,
-                        key="", payload={"round_idx": 0}))
+                for m in self._round0_mail():
+                    self.coordinator.post(m)
+            wall0 = time.perf_counter()
+            try:
+                self.coordinator.run(self._on_window)
+                return self._finish_run(self.coordinator, wall0)
+            finally:
+                self.coordinator.close()
+        # group mesh (pipes or sockets), sync or async: shard-group
+        # processes own both the timing engines AND the cohort training;
+        # this coordinator replays records, aggregates, and steers the
+        # mesh over the control channel
+        groups = max(1, min(self.workers or self.hosts, self.num_shards))
+        owner_of_shard = {s.shard_id: s.shard_id % groups for s in shards}
+        cohort_owner = self._cohort_owners(owner_of_shard)
+        blobs = self._trainer_blobs(cohort_owner)
+        if self.hosts is not None:
+            engine: Any = HostShardedEngine(
+                shards, lookahead=self._lookahead(), hosts=groups,
+                trainer_blobs=blobs)
+        else:
+            engine = PeerShardedEngine(
+                shards, lookahead=self._lookahead(), groups=groups,
+                trainer_blobs=blobs)
+        self.coordinator = engine
+        self._attach_proxy(engine, cohort_owner)
         wall0 = time.perf_counter()
         try:
-            if use_hosts or use_peer:
-                self.coordinator.run(self._peer_on_chunk())
-            elif self.workers and self.mode == "async":
-                self._run_overlapped()
-            else:
-                self.coordinator.run(self._on_window)
-            self._drain_async_tail()
-            stats = self.coordinator.stats()
-            # uniform wall accounting: windows + replay + flush drain,
-            # whichever path ran them
-            stats["wall_s"] = time.perf_counter() - wall0
-            stats["events_per_sec"] = (stats["events_processed"]
-                                       / stats["wall_s"]
-                                       if stats["wall_s"] > 0 else 0.0)
+            if self.mode == "sync":
+                engine.restart(self._round0_mail())
+            engine.run(self._peer_on_chunk())
+            return self._finish_run(engine, wall0)
         finally:
-            self.coordinator.close()
-        return self._build_result(stats)
+            engine.close()
+            self._mesh = None
 
     def run_multihost(self, rounds: int, *, rank: int,
                       listen: Tuple[str, int],
@@ -572,14 +625,15 @@ class FleetSimulator:
         construct an *identical* FleetSimulator (same fleet, edges, seed,
         spec) and call this with the same ``addresses`` directory
         ``{rank: (host, port)}``; ``listen`` is the (host, port) this
-        rank binds. Rank 0 is the coordinator — it replays the numerics
-        and returns the ``FleetResult`` — and every rank, 0 included,
-        runs one shard-group host loop. The window barrier, cross-shard
-        mail, and record shipments all ride TCP frames
+        rank binds. Rank 0 is the coordinator — it replays the numerics,
+        steers the mesh over per-rank ``ctrl`` streams (sync round
+        restarts, model broadcasts, train directives), and returns the
+        ``FleetResult`` — and every rank, 0 included, runs one
+        shard-group host loop plus the cohort trainer for the cohorts it
+        owns. The window barrier, cross-shard mail, record shipments,
+        control mail, and update snapshots all ride TCP frames
         (docs/ARCHITECTURE.md); results are bit-identical to a
-        single-process ``SerialExecutor`` run."""
-        if self.mode != "async":
-            raise ValueError("run_multihost requires mode='async'")
+        single-process ``SerialExecutor`` run, sync or async."""
         if self.measure_pack:
             raise ValueError("run_multihost requires measure_pack=False")
         hosts = len(addresses)
@@ -598,25 +652,38 @@ class FleetSimulator:
         shards = self._build_shards(rounds)
         owner = {s.shard_id: s.shard_id % hosts for s in shards}
         group = [s for s in shards if owner[s.shard_id] == rank]
-        for s in group:
-            s.bootstrap_async()
+        if self.mode == "async":
+            for s in group:
+                s.bootstrap_async()
         lookahead = self._lookahead()
-        mailbox = SocketMailbox(rank, host=listen[0], port=listen[1])
+        cohort_owner = self._cohort_owners(owner)
+        specs = self.fleet.cohort_specs()
+        mailbox = SocketMailbox(rank, host=listen[0], port=listen[1],
+                                backlog=hosts + 4)
         sink = SocketRecordSink(addresses[0], rank)
         mailbox.connect(addresses)
+        # this rank's trainer: the cohorts it owns, rebuilt from the
+        # locally-constructed fleet (nothing JAX-flavored on the wire)
+        trainer = GroupTrainer(
+            [specs[k] for k in sorted(cohort_owner)
+             if cohort_owner[k] == rank], sink, group_id=rank)
+        barrier_q = _dispatch_control(mailbox.control, trainer)
+        ctrl: Optional[Any] = None
         wall0 = time.perf_counter()
         try:
             if rank != 0:
-                run_host_windows(group, mailbox, lookahead, sink, owner)
+                run_host_windows(group, mailbox, lookahead, sink, owner,
+                                 control=barrier_q, trainer=trainer)
                 return None
             # rank 0: drive our own shard group in a thread (it is
-            # JAX-free) while this thread drains records and replays the
-            # numerics — the same split HostShardedEngine gets from its
-            # child processes
+            # JAX-free; the trainer runs on its own thread either way)
+            # while this thread drains records and replays the numerics
+            # — the same split HostShardedEngine gets from its children
             def host_loop():
                 try:
                     run_host_windows(group, mailbox, lookahead, sink,
-                                     owner)
+                                     owner, control=barrier_q,
+                                     trainer=trainer)
                 except BaseException:
                     import traceback
                     try:
@@ -625,14 +692,32 @@ class FleetSimulator:
                         pass
             th = threading.Thread(target=host_loop, daemon=True)
             th.start()
-            finals = drain_host_records(mailbox.records, hosts,
-                                        self._peer_on_chunk())
+            ctrl = MultihostControl(addresses, owner)
+            proxy = self._attach_proxy(ctrl, cohort_owner)
+            mailbox.on_update = proxy.on_update
+            mailbox.on_abort = proxy.abort
+            if self.mode == "sync":
+                ctrl.restart(self._round0_mail())
+            finals, trainers = _drive_mesh(
+                lambda t: mailbox.records.get(timeout=t), ctrl.state,
+                self._peer_on_chunk(), ctrl.stop_all)
             th.join()
             self._drain_async_tail()
             stats = merge_host_finals(
                 finals, wall_s=time.perf_counter() - wall0,
-                num_shards=len(shards), num_hosts=hosts)
+                num_shards=len(shards), num_hosts=hosts,
+                trainers=trainers)
             return self._build_result(stats)
         finally:
+            # unblock this process's control dispatcher (and through it
+            # the trainer thread) even on an abort path — run_multihost
+            # is a library call in a long-lived process, and a retry
+            # after a failed run must not accumulate blocked threads.
+            # Redundant after a clean stop: the dispatcher has already
+            # exited and nothing consumes the extra message.
+            mailbox.control.put({"type": "stop"})
             mailbox.close()
             sink.close()
+            if ctrl is not None:
+                ctrl.close()
+            self._mesh = None

@@ -1,0 +1,265 @@
+"""Worker-owned cohort training: the numerics side of the shard mesh.
+
+Until PR 5 every cohort's vmapped split-train step ran on the
+*coordinator*, so ``--workers``/``--hosts`` only parallelized the
+discrete-event timing work and the XLA-dominated regime (10k devices,
+many cohorts) was bounded by one process. This module moves the
+training where the parallelism is (the FedAdapt/floating-aggregation-
+point lesson): each shard group owns the ``Cohort`` replica stacks for
+the cohorts whose clients it hosts and runs ``run_epoch`` locally; the
+coordinator keeps aggregation and the global-model broadcast.
+
+Three roles:
+
+``LocalTrainer``   — the serial path: the coordinator trains its own
+                     fleet's cohorts inline (exactly the pre-PR-5
+                     behavior; the bit-identity reference).
+``GroupTrainer``   — worker side: a thread fed control mail
+                     (``bcast`` = a new global-model version, ``train``
+                     = run one (cohort, epoch) from a named base
+                     version). It rebuilds its cohorts from pickled
+                     ``CohortSpec``s lazily — a group that owns no
+                     cohorts never imports JAX — and ships each trained
+                     epoch back as an FFLY-encoded ``update`` record
+                     through its record sink.
+``TrainerProxy``   — coordinator side: the replay requests training via
+                     control mail (broadcasting each global version at
+                     most once per group, lazily, only when a train
+                     directive needs it) and blocks on ``update_for``
+                     until the owner group's update record arrives.
+
+Ordering contract (docs/ARCHITECTURE.md §3.5): control mail is FIFO per
+group, and a ``train`` directive is always preceded by the ``bcast`` of
+its base version, so the worker trains immediately on receipt — no
+waiting, no version negotiation. Base versions referenced by directives
+are non-decreasing, so the worker drops bases below each directive's.
+Updates ship raw (bit-exact), which is what keeps per-round metrics and
+final parameters bit-identical across worker and host counts.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+Params = Any
+CohortKey = Tuple[int, int]
+
+_UPDATE_TIMEOUT_S = 600.0
+
+
+class LocalTrainer:
+    """Serial-path trainer: the coordinator's own fleet cohorts."""
+
+    def __init__(self, fleet):
+        self.fleet = fleet
+
+    def request(self, cohort_key: CohortKey, epoch: int) -> None:
+        self.fleet.cohorts[cohort_key].run_epoch(
+            self.fleet.global_params, epoch, self.fleet.lr_schedule(epoch))
+
+    def update_for(self, cohort_key: CohortKey, epoch: int):
+        cohort = self.fleet.cohorts[cohort_key]
+        return cohort.snapshots[epoch], cohort.losses[epoch]
+
+    def prune(self, cohort_key: CohortKey, floor: int) -> None:
+        self.fleet.cohorts[cohort_key].prune(floor)
+
+
+class GroupTrainer:
+    """One shard group's cohort trainer (worker side).
+
+    Fed protocol messages through ``post`` (from the group's control
+    dispatcher); does all JAX work on its own thread so the group's
+    window loop never blocks on training. ``specs`` may be a pickled
+    blob (localhost harness bootstrap) or a list of ``CohortSpec``
+    (multi-host ranks, which rebuild the fleet locally); either way
+    nothing JAX-flavored is touched until the first directive arrives,
+    so a group that owns no cohorts stays JAX-free."""
+
+    def __init__(self, specs: Any, sink, group_id: int = 0):
+        self._specs = specs
+        self._sink = sink
+        self.group_id = group_id
+        self._q: "queue.Queue" = queue.Queue()
+        self._th: Optional[threading.Thread] = None
+        self.epochs_trained = 0
+        self._trained_cohorts: set = set()
+
+    # -- message intake (dispatcher thread) ------------------------------
+
+    def post(self, msg: Dict[str, Any]) -> None:
+        if self._th is None:
+            if msg["type"] == "stop":
+                return                      # never started, nothing to do
+            self._th = threading.Thread(target=self._main, daemon=True,
+                                        name=f"trainer-{self.group_id}")
+            self._th.start()
+        self._q.put(msg)
+
+    def finish(self) -> Optional[Dict[str, Any]]:
+        """Join the trainer (after the stop message) and return its
+        stats — the proof-of-ownership record the bench artifact keys
+        on (pid + cohorts actually trained in this process)."""
+        if self._th is not None:
+            self._th.join()
+        if not self._trained_cohorts:
+            return None
+        return {"pid": os.getpid(),
+                "epochs_trained": self.epochs_trained,
+                "cohorts": sorted(self._trained_cohorts)}
+
+    # -- the trainer thread ----------------------------------------------
+
+    def _cohorts(self) -> Dict[CohortKey, Any]:
+        if isinstance(self._specs, (bytes, bytearray)):
+            import pickle
+            self._specs = pickle.loads(self._specs)
+        return {s.key: s for s in self._specs or []}
+
+    def _main(self) -> None:
+        import traceback
+        try:
+            specs = self._cohorts()
+            built: Dict[CohortKey, Any] = {}
+            bases: Dict[int, Params] = {}
+            from repro.runtime.serialization import (pack_pytree,
+                                                     unpack_pytree)
+            while True:
+                msg = self._q.get()
+                kind = msg["type"]
+                if kind == "stop":
+                    return
+                if kind == "bcast":
+                    bases[int(msg["version"])] = unpack_pytree(msg["params"])
+                    continue
+                assert kind == "train", f"unexpected trainer msg {kind!r}"
+                key = tuple(msg["cohort"])
+                version = int(msg["version"])
+                epoch = int(msg["epoch"])
+                cohort = built.get(key)
+                if cohort is None:
+                    cohort = built[key] = specs[key].build()
+                # FIFO guarantees the base broadcast preceded us
+                cohort.run_epoch(bases[version], epoch, float(msg["lr"]))
+                payload = pack_pytree({"trees": cohort.snapshots[epoch],
+                                       "losses": cohort.losses[epoch]})
+                self._sink.update(key, epoch, payload)
+                # the update is shipped; the coordinator owns it now.
+                # Directive base versions are non-decreasing, so older
+                # bases can never be referenced again.
+                cohort.prune(epoch + 1)
+                for v in [v for v in bases if v < version]:
+                    del bases[v]
+                self.epochs_trained += 1
+                self._trained_cohorts.add(key)
+        except BaseException:
+            try:
+                self._sink.err(traceback.format_exc())
+            except OSError:
+                pass
+
+
+class TrainerProxy:
+    """Coordinator-side handle to the worker-owned trainers.
+
+    ``request`` sends control mail to the owner group (broadcasting the
+    current global version first if that group hasn't seen it);
+    ``update_for`` blocks until the owner's update record arrives (it is
+    routed here directly from the transport's reader thread, bypassing
+    the replay queue, so the blocked replay can never deadlock on a
+    message stuck behind it). ``abort`` poisons every waiter when a
+    group dies."""
+
+    def __init__(self, send: Callable[[int, Dict[str, Any]], None],
+                 owner_of_cohort: Dict[CohortKey, int],
+                 lr_of: Callable[[int], float],
+                 params_of: Callable[[], Params],
+                 version_of: Callable[[], int], *,
+                 timeout_s: float = _UPDATE_TIMEOUT_S):
+        self._send = send
+        self._owner = owner_of_cohort
+        self._lr_of = lr_of
+        self._params_of = params_of
+        self._version_of = version_of
+        self._timeout_s = timeout_s
+        self._requested: set = set()
+        self._group_version: Dict[int, int] = {}
+        self._packed: Tuple[int, Optional[bytes]] = (-1, None)
+        self._store: Dict[Tuple[CohortKey, int],
+                          Tuple[List[Params], Any]] = {}
+        self._cond = threading.Condition()
+        self._abort: Optional[str] = None
+
+    # -- replay side -----------------------------------------------------
+
+    def request(self, cohort_key: CohortKey, epoch: int) -> None:
+        if (cohort_key, epoch) in self._requested:
+            return
+        self._requested.add((cohort_key, epoch))
+        group = self._owner[cohort_key]
+        version = self._version_of()
+        if self._group_version.get(group) != version:
+            if self._packed[0] != version:
+                from repro.runtime.serialization import pack_pytree
+                self._packed = (version, pack_pytree(self._params_of()))
+            self._send(group, {"type": "bcast", "version": version,
+                               "params": self._packed[1]})
+            self._group_version[group] = version
+        self._send(group, {"type": "train", "cohort": cohort_key,
+                           "epoch": epoch, "version": version,
+                           "lr": float(self._lr_of(epoch))})
+
+    def update_for(self, cohort_key: CohortKey, epoch: int):
+        key = (cohort_key, epoch)
+        deadline = time.monotonic() + self._timeout_s
+        with self._cond:
+            while key not in self._store:
+                if self._abort is not None:
+                    raise RuntimeError(
+                        f"cohort trainer aborted while waiting for "
+                        f"{cohort_key} epoch {epoch}: {self._abort}")
+                if key not in self._requested:
+                    raise RuntimeError(
+                        f"update for {cohort_key} epoch {epoch} consumed "
+                        "before any train directive was sent — replay "
+                        "ordering bug")
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise RuntimeError(
+                        f"no update for cohort {cohort_key} epoch {epoch} "
+                        f"after {self._timeout_s}s (trainer stalled?)")
+                self._cond.wait(timeout=min(remaining, 1.0))
+            return self._store[key]
+
+    def prune(self, cohort_key: CohortKey, floor: int) -> None:
+        with self._cond:
+            for (ck, e) in [k for k in self._store
+                            if k[0] == cohort_key and k[1] < floor]:
+                del self._store[(ck, e)]
+            # the request-dedup set must shrink with the floor too, or it
+            # grows one key per (cohort, epoch) for the life of the run —
+            # the same leak class _maybe_prune fixes for _consumed. A
+            # pruned epoch is fully consumed, so no replay can re-request
+            # or re-await it.
+            for k in [k for k in self._requested
+                      if k[0] == cohort_key and k[1] < floor]:
+                self._requested.discard(k)
+
+    # -- transport side (reader threads) ---------------------------------
+
+    def on_update(self, msg: Dict[str, Any]) -> None:
+        from repro.runtime.serialization import unpack_pytree
+        tree = unpack_pytree(msg["payload"])
+        key = (tuple(msg["cohort"]), int(msg["epoch"]))
+        with self._cond:
+            self._store[key] = (tree["trees"], tree["losses"])
+            self._cond.notify_all()
+
+    def abort(self, why: str) -> None:
+        with self._cond:
+            if self._abort is None:
+                self._abort = why
+            self._cond.notify_all()

@@ -214,6 +214,7 @@ os._exit(0)                             # then the host is killed
 """
 
 
+@pytest.mark.slow
 def test_killed_peer_process_aborts_exchange():
     """Regression for the hang the disconnect abort prevents: a peer
     host process that dies mid-window must turn the blocked barrier into

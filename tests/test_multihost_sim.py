@@ -37,6 +37,7 @@ def make_sim(*, shards=4, hosts=None, num_clients=16, num_edges=4,
                           measure_pack=kw.pop("measure_pack", False), **kw)
 
 
+@pytest.mark.slow
 def test_host_count_invariance():
     """1 vs 2 vs 4 socket hosts on localhost: per-round metrics, final
     params, migration summary, and per-edge stats all bit-identical to
@@ -55,14 +56,30 @@ def test_host_count_invariance():
 
 
 def test_hosts_validation():
-    with pytest.raises(ValueError, match="async-only"):
-        make_sim(mode="sync", hosts=2)
     with pytest.raises(ValueError, match="measure_pack=False"):
         make_sim(hosts=2, measure_pack=True)
     with pytest.raises(ValueError, match="mutually exclusive"):
         make_sim(hosts=2, workers=2)
     with pytest.raises(ValueError, match="hosts must be"):
         make_sim(hosts=0)
+
+
+@pytest.mark.slow
+def test_sync_multihost_matches_serial():
+    """Sync mode over socket hosts (the control-mail round restart):
+    bit-identical to the serial sync run, with cohort training running
+    in the host processes."""
+    base = make_sim(mode="sync").run(3)
+    other = make_sim(mode="sync", hosts=2).run(3)
+    assert other.rounds == base.rounds
+    assert other.migration_summary == base.migration_summary
+    assert other.edge_stats == base.edge_stats
+    assert (flat_params(other.final_params)
+            == flat_params(base.final_params)).all()
+    trainers = other.engine_stats["trainers"]
+    assert sum(t["epochs_trained"] for t in trainers.values()) > 0
+    import os
+    assert all(t["pid"] != os.getpid() for t in trainers.values())
 
 
 def test_hosts_clamped_to_shards():
@@ -79,6 +96,7 @@ def test_run_multihost_rejects_gapped_directory():
                           addresses={0: ("127.0.0.1", 1), 2: ("127.0.0.1", 2)})
 
 
+@pytest.mark.slow
 def test_killed_host_process_aborts_run():
     """A host process killed after the mesh handshake must abort the
     coordinator's run with a clear error (via the surviving hosts'

@@ -66,6 +66,7 @@ def test_shard_count_invariance(mode):
             protocol_events(base.engine_stats)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("mode", ["sync", "async"])
 def test_worker_processes_match_serial(mode):
     """The multiprocessing shard executors (windowed for sync, peer mesh
@@ -235,6 +236,7 @@ def test_sync_snapshots_pruned_each_round():
         assert len(cohort.snapshots) <= 1       # old epochs pruned
 
 
+@pytest.mark.slow
 def test_shard_sweep_cli_small_fleet(tmp_path):
     """Regression: the sweep used to mix measure_pack settings between
     shard counts at <=128 clients, tripping its own bit-identity check."""

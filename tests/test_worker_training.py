@@ -1,0 +1,266 @@
+"""Worker-owned cohort training: bit-identity of the control-mail /
+update-record protocol across worker counts and modes, the pruned-epoch
+straggler guard, trainer-proxy unit behavior, the bounded ``_consumed``
+regression, and mesh bring-up robustness (backlog + retry + clean
+close)."""
+from __future__ import annotations
+
+import os
+import pickle
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.mobility import MobilityTrace, poisson_moves
+from repro.models.vgg import VGG5
+from repro.optim.optimizers import adamw, sgd
+from repro.optim.schedules import constant
+from repro.sim.edge import make_edges
+from repro.sim.fleet import Cohort, Fleet, PrunedEpochError, make_fleet_specs
+from repro.sim.mailbox import HostShardedEngine
+from repro.sim.simulator import FleetSimulator
+from repro.sim.trainer import TrainerProxy
+
+
+def flat_params(tree):
+    return np.concatenate([np.asarray(x).ravel()
+                           for x in jax.tree.leaves(tree)])
+
+
+def make_sim(mode, *, shards=4, workers=None, hosts=None, num_clients=8,
+             num_edges=4, rounds=2, seed=1, rate=0.3, cohorts=2,
+             max_replicas=4, trace=True, **kw):
+    edges = make_edges(num_edges, slots=8)
+    specs = make_fleet_specs(num_clients, [e.edge_id for e in edges],
+                             batch_size=8, num_batches=2, cohorts=cohorts)
+    fleet = Fleet(VGG5(), sgd(momentum=0.9), specs, split_point=2,
+                  lr_schedule=constant(0.01), max_replicas=max_replicas,
+                  seed=seed)
+    mt = MobilityTrace(poisson_moves([s.client_id for s in specs],
+                                     [e.edge_id for e in edges],
+                                     rounds, rate, seed=seed)) \
+        if trace else None
+    return FleetSimulator(fleet, edges, mode=mode, shards=shards,
+                          workers=workers, hosts=hosts, trace=mt,
+                          measure_pack=False, **kw)
+
+
+def assert_equivalent(a, b):
+    assert b.rounds == a.rounds
+    assert b.migration_summary == a.migration_summary
+    assert b.edge_stats == a.edge_stats
+    assert (flat_params(b.final_params) == flat_params(a.final_params)).all()
+
+
+def assert_worker_trained(res):
+    trainers = res.engine_stats["trainers"]
+    assert trainers, "no trainer stats — cohort training stayed local?"
+    assert sum(t["epochs_trained"] for t in trainers.values()) > 0
+    assert all(t["pid"] != os.getpid() for t in trainers.values()), \
+        "cohort training ran in the coordinator process"
+
+
+# -- the equivalence matrix (acceptance: workers 1/2/4, sync + async) --------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["sync", "async"])
+@pytest.mark.parametrize("workers", [1, 2, 4])
+def test_worker_counts_match_serial(mode, workers):
+    """max_replicas=4 on 8 clients x 2 cohorts = the exact per-client
+    numerics path; every worker count must reproduce the serial run
+    bit-for-bit while training in the worker processes."""
+    serial = make_sim(mode).run(2)
+    mesh = make_sim(mode, workers=workers).run(2)
+    assert_equivalent(serial, mesh)
+    assert_worker_trained(mesh)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["sync", "async"])
+@pytest.mark.parametrize("hosts", [1, 2])
+def test_host_counts_match_serial(mode, hosts):
+    serial = make_sim(mode).run(2)
+    mesh = make_sim(mode, hosts=hosts).run(2)
+    assert_equivalent(serial, mesh)
+    assert_worker_trained(mesh)
+    assert mesh.engine_stats["num_hosts"] == hosts
+
+
+def test_single_worker_single_cohort_matches_serial():
+    """The cheap always-on sentinel for the mesh numerics path (one
+    worker, one cohort, sync)."""
+    serial = make_sim("sync", shards=2, num_clients=4, cohorts=1,
+                      rate=0.0, trace=False).run(2)
+    mesh = make_sim("sync", shards=2, num_clients=4, cohorts=1,
+                    rate=0.0, trace=False, workers=1).run(2)
+    assert_equivalent(serial, mesh)
+    assert_worker_trained(mesh)
+
+
+# -- pruned-epoch straggler guard (satellite) --------------------------------
+
+def test_run_epoch_idempotent_then_pruned_raises():
+    cohort = Cohort((8, 2), VGG5(), sgd(momentum=0.9), sp=2, replicas=2,
+                    seed=0)
+    g = VGG5().init(jax.random.PRNGKey(0))
+    cohort.run_epoch(g, 0, 0.01)
+    snap = cohort.snapshots[0]
+    cohort.run_epoch(g, 0, 0.01)               # idempotent: same objects
+    assert cohort.snapshots[0] is snap
+    cohort.run_epoch(g, 1, 0.01)
+    cohort.prune(1)
+    assert 0 not in cohort.snapshots and 1 in cohort.snapshots
+    cohort.run_epoch(g, 1, 0.01)               # cached epoch still fine
+    with pytest.raises(PrunedEpochError, match="pruned"):
+        cohort.run_epoch(g, 0, 0.01)           # straggler re-request
+
+
+def test_cohort_spec_rebuild_matches_original():
+    """CohortSpec -> pickle -> build reproduces the original cohort's
+    training bit-for-bit (the worker bootstrap contract)."""
+    cohort = Cohort((8, 2), VGG5(), sgd(momentum=0.9), sp=2, replicas=2,
+                    seed=3)
+    rebuilt = pickle.loads(pickle.dumps(cohort.spec())).build()
+    g = VGG5().init(jax.random.PRNGKey(3))
+    cohort.run_epoch(g, 0, 0.01)
+    rebuilt.run_epoch(g, 0, 0.01)
+    np.testing.assert_array_equal(
+        flat_params(cohort.snapshots[0]), flat_params(rebuilt.snapshots[0]))
+    np.testing.assert_array_equal(cohort.losses[0], rebuilt.losses[0])
+
+
+def test_optimizer_pickles_via_conf():
+    for opt in (sgd(momentum=0.8, weight_decay=0.1), adamw(b1=0.85)):
+        back = pickle.loads(pickle.dumps(opt))
+        assert back.name == opt.name and back.conf == opt.conf
+
+
+# -- trainer proxy unit behavior ---------------------------------------------
+
+def test_proxy_broadcasts_each_version_once_per_group():
+    sent = []
+    proxy = TrainerProxy(lambda g, m: sent.append((g, m["type"])),
+                         owner_of_cohort={("a"): 0, ("b"): 1},
+                         lr_of=lambda e: 0.01,
+                         params_of=lambda: {"w": np.zeros(4, np.float32)},
+                         version_of=lambda: 7)
+    proxy.request("a", 0)
+    proxy.request("a", 0)                       # deduped
+    proxy.request("a", 1)                       # same version: no bcast
+    proxy.request("b", 0)                       # new group: bcast again
+    assert sent == [(0, "bcast"), (0, "train"), (0, "train"),
+                    (1, "bcast"), (1, "train")]
+
+
+def test_proxy_abort_poisons_blocked_waiter():
+    proxy = TrainerProxy(lambda g, m: None, {("a"): 0},
+                         lr_of=lambda e: 0.01, params_of=lambda: {},
+                         version_of=lambda: 0, timeout_s=30.0)
+    proxy.request("a", 0)
+    import threading
+    threading.Timer(0.2, proxy.abort, args=("worker died",)).start()
+    with pytest.raises(RuntimeError, match="worker died"):
+        proxy.update_for("a", 0)
+
+
+def test_proxy_prune_bounds_requested_and_store():
+    """Regression: prune dropped only stored updates, so the
+    request-dedup set grew one key per (cohort, epoch) forever — the
+    proxy-side twin of the ``_consumed`` leak."""
+    from repro.runtime.serialization import pack_pytree
+    a, b = (8, 1), (8, 2)
+    proxy = TrainerProxy(lambda g, m: None, {a: 0, b: 0},
+                         lr_of=lambda e: 0.01,
+                         params_of=lambda: {"w": np.zeros(2, np.float32)},
+                         version_of=lambda: 0)
+    for e in range(20):
+        proxy.request(a, e)
+        proxy.on_update({"cohort": a, "epoch": e,
+                         "payload": pack_pytree({"trees": [],
+                                                 "losses": []})})
+        proxy.request(b, e)
+    proxy.prune(a, 18)
+    assert len(proxy._store) == 2
+    assert len([k for k in proxy._requested if k[0] == a]) == 2
+    assert len([k for k in proxy._requested if k[0] == b]) == 20
+
+
+def test_proxy_unrequested_update_is_a_replay_bug():
+    proxy = TrainerProxy(lambda g, m: None, {("a"): 0},
+                         lr_of=lambda e: 0.01, params_of=lambda: {},
+                         version_of=lambda: 0)
+    with pytest.raises(RuntimeError, match="replay ordering"):
+        proxy.update_for("a", 5)
+
+
+# -- bounded _consumed (satellite regression) --------------------------------
+
+def test_consumed_dict_stays_bounded_over_long_async_run():
+    """Regression: ``_maybe_prune`` advanced the floor but never popped
+    the fully-consumed (cohort, epoch) counters, so ``_consumed`` grew
+    one key per epoch forever. Over 50 async rounds it must stay
+    O(live epochs), not O(total epochs)."""
+    sim = make_sim("async", shards=1, num_clients=4, num_edges=2,
+                   cohorts=1, max_replicas=2, rate=0.0, trace=False)
+    sim.run(50)
+    n_cohorts = len(sim.fleet.cohorts)
+    assert len(sim._consumed) <= 2 * n_cohorts, \
+        f"_consumed grew to {len(sim._consumed)} keys over 50 rounds"
+    for cohort in sim.fleet.cohorts.values():
+        assert len(cohort.snapshots) <= 2
+
+
+# -- mesh bring-up robustness (satellite: backlog, retry, clean close) -------
+
+@pytest.mark.slow
+def test_repeated_4host_bringup_never_leaks(tmp_path):
+    """20/20 bring-up + teardown cycles of a 4-host socket mesh: the
+    sized accept backlog + connect backoff must survive the
+    hosts×(hosts-1) connect storm every time, and the idempotent close
+    must release every listener/pipe so the next cycle never trips over
+    a leaked resource."""
+    for i in range(20):
+        sim = make_sim("async", shards=4, num_clients=4, cohorts=1,
+                       rate=0.0, trace=False, seed=i)
+        shards = sim._build_shards(1)
+        with HostShardedEngine(shards, lookahead=sim._lookahead(),
+                               hosts=4) as engine:
+            assert len(engine._procs) == 4
+            assert all(p.is_alive() for p in engine._procs)
+        engine.close()                           # idempotent second close
+
+
+@pytest.mark.slow
+def test_killed_pipe_worker_aborts_run():
+    """Regression: a killed pipe-mesh worker raised ConnectionResetError
+    (not EOFError) in the coordinator's drain thread, which died
+    silently and left the drive loop hanging until the barrier timeout.
+    The kill must abort the run promptly with a clear error."""
+    from repro.sim.mailbox import PeerShardedEngine
+    sim = make_sim("async", shards=4, num_clients=8, cohorts=1, rate=0.0,
+                   trace=False)
+    shards = sim._build_shards(2)
+    for s in shards:
+        s.bootstrap_async()
+    engine = PeerShardedEngine(shards, lookahead=sim._lookahead(),
+                               groups=2)
+    try:
+        engine._procs[1].kill()
+        with pytest.raises(RuntimeError, match="died|disconnected"):
+            engine.run(lambda *a: None)
+    finally:
+        engine.close()
+
+
+def test_host_engine_close_idempotent_after_failed_boot():
+    """Closing twice (and closing an engine whose children were killed)
+    must not raise or hang."""
+    sim = make_sim("async", shards=2, num_clients=4, cohorts=1,
+                   rate=0.0, trace=False)
+    shards = sim._build_shards(1)
+    engine = HostShardedEngine(shards, lookahead=sim._lookahead(), hosts=2)
+    for proc in engine._procs:
+        proc.kill()
+    engine.close()
+    engine.close()
