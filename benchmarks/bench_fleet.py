@@ -36,6 +36,13 @@ per-round metrics, and writes a per-executor artifact
       --edges 32 --shard-sweep 1 4 --scenarios poisson
   PYTHONPATH=src python -m benchmarks.bench_fleet --devices 2000 \
       --edges 8 --hosts 2 --scenarios poisson
+
+Telemetry: ``--trace [PATH]`` runs the first selected scenario twice —
+telemetry off (the throughput baseline) and telemetry on writing the
+merged Chrome/Perfetto trace (docs/OBSERVABILITY.md) — verifies the
+per-round metrics are bit-identical (spans observe wall clocks only,
+never the simulation), and records both events/sec figures plus the
+overhead percentage in the artifact (default bench_fleet_trace.json).
 """
 from __future__ import annotations
 
@@ -182,6 +189,57 @@ def _host_sweep(args, name: str, n_clients: int, n_edges: int,
     return sweep
 
 
+def _trace_mode(args, name: str, n_clients: int, n_edges: int,
+                rounds: int) -> dict:
+    """Telemetry on vs off on the same scenario: bit-identical rounds
+    (spans read wall clocks, never sim state), a merged Chrome trace on
+    disk, and both throughputs in the artifact so the disabled-telemetry
+    overhead is a recorded number, not a claim."""
+    workers = args.workers if args.workers is not None else \
+        (args.shards if args.shards > 1 else None)
+    spec = _scenario_spec(name, args, n_clients, n_edges, rounds,
+                          args.shards, workers).replace(measure_pack=False)
+    off = _run_one(name, spec)
+    t1 = time.time()
+    rep_on = run_scenario(spec.replace(telemetry=True,
+                                       trace_path=args.trace))
+    on_wall = time.time() - t1
+    identical = rep_on["rounds"] == off["rounds"]
+    if not identical:
+        raise AssertionError(
+            "per-round metrics differ with telemetry on — spans must "
+            "observe wall time only, never the simulation")
+    eps_off = off["events_per_sec"]
+    eps_on = round(rep_on["engine"]["events_per_sec"], 1)
+    overhead_pct = round(100.0 * (eps_off - eps_on) / eps_off, 2) \
+        if eps_off else 0.0
+    obs_report = rep_on["summary"].get("obs") or {}
+    result = {
+        "scenario": name, "devices": n_clients, "edges": n_edges,
+        "rounds_n": rounds, "shards": args.shards, "workers": workers,
+        "cpu_count": os.cpu_count(), "trace_path": args.trace,
+        "rounds": off["rounds"],
+        "telemetry_overhead": {
+            "events_per_sec_off": eps_off,
+            "events_per_sec_on": eps_on,
+            "wall_s_off": off["wall_s"],
+            "wall_s_on": round(on_wall, 3),
+            "overhead_pct": overhead_pct,
+            "rounds_bit_identical": True,
+        },
+        "obs": {"ranks": obs_report.get("ranks"),
+                "num_snapshots": obs_report.get("num_snapshots"),
+                "dropped_events": obs_report.get("dropped_events"),
+                "spans": {k: v["count"]
+                          for k, v in obs_report.get("spans", {}).items()}},
+    }
+    print(f"  telemetry off: {eps_off:9.0f} ev/s   "
+          f"on: {eps_on:9.0f} ev/s   overhead {overhead_pct:+.2f}%")
+    print(f"  trace: {args.trace}  ranks={obs_report.get('ranks')}  "
+          f"spans={sorted(obs_report.get('spans', {}))}")
+    return result
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--clients", "--devices", dest="clients", type=int,
@@ -206,10 +264,17 @@ def main(argv=None) -> None:
                          "host processes, compare vs serial and pipe "
                          "executors, verify bit-identity, emit the "
                          "artifact")
+    ap.add_argument("--trace", nargs="?", const="fleet_trace.json",
+                    default=None, metavar="PATH",
+                    help="run the first scenario with telemetry off then "
+                         "on, write the merged Chrome/Perfetto trace to "
+                         "PATH (default fleet_trace.json), verify "
+                         "bit-identity, record overhead in the artifact")
     ap.add_argument("--artifact", default=None,
-                    help="where --shard-sweep / --hosts write their JSON "
-                         "artifact (default bench_fleet_shards.json / "
-                         "bench_fleet_hosts.json)")
+                    help="where --shard-sweep / --hosts / --trace write "
+                         "their JSON artifact (default "
+                         "bench_fleet_shards.json / bench_fleet_hosts.json"
+                         " / bench_fleet_trace.json)")
     ap.add_argument("--scenarios", nargs="*", default=sorted(SCENARIOS),
                     choices=sorted(SCENARIOS))
     ap.add_argument("--quick", action="store_true",
@@ -231,6 +296,19 @@ def main(argv=None) -> None:
             json.dump(sweep, f)
         print(f"# artifact: {artifact}")
         print(json.dumps(sweep["per_shards"]))
+        return
+
+    if args.trace:
+        name = args.scenarios[0]
+        artifact = args.artifact or "bench_fleet_trace.json"
+        print(f"# telemetry trace: {name}, {n_clients} devices, "
+              f"{n_edges} edges, {rounds} rounds, {args.shards} shards "
+              f"-> {args.trace}")
+        result = _trace_mode(args, name, n_clients, n_edges, rounds)
+        with open(artifact, "w") as f:
+            json.dump(result, f)
+        print(f"# artifact: {artifact}")
+        print(json.dumps(result["telemetry_overhead"]))
         return
 
     if args.hosts:

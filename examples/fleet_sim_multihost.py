@@ -62,7 +62,11 @@ def build_sim(args) -> FleetSimulator:
     return FleetSimulator(
         fleet, edges, trace=trace, mode=args.mode, **async_kw,
         shards=max(args.shards, args.hosts), measure_pack=False,
-        hosts=args.hosts if args.rank is None else None)
+        hosts=args.hosts if args.rank is None else None,
+        # telemetry observes wall clocks only — results stay
+        # bit-identical; rank 0 merges every rank's spans into the trace
+        telemetry=args.trace is not None,
+        trace_path=args.trace if args.rank in (None, 0) else None)
 
 
 def report(result, args, wall: float) -> None:
@@ -112,6 +116,10 @@ def main():
     ap.add_argument("--shards", type=int, default=4)
     ap.add_argument("--max-replicas", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable telemetry; rank 0 writes the merged "
+                         "Chrome/Perfetto trace here "
+                         "(docs/OBSERVABILITY.md)")
     args = ap.parse_args()
 
     t0 = time.time()

@@ -36,6 +36,7 @@ import jax
 import numpy as np
 
 from repro.core.checkpoint import EdgeCheckpoint
+from repro.obs import telemetry as obs
 from repro.runtime import serialization
 from repro.runtime.checkpoint_manager import BaseVersionRegistry
 from repro.runtime.transport import LinkModel
@@ -98,24 +99,31 @@ class MigrationExecutor:
         if overlapped:
             # chunked pipeline: serialization overlaps the socket send,
             # so there is no separate pack phase to clock
-            nbytes = self._stream_send(
-                dst_edge, ckpt.pack_chunks(self.codec, base=base,
-                                           base_version=base_version))
-            t1 = time.perf_counter()
-            payload_rx = self._recv(dst_edge)
+            with obs.span("mig.transfer", client=ckpt.client_id,
+                          codec=self.codec, overlapped=True):
+                nbytes = self._stream_send(
+                    dst_edge, ckpt.pack_chunks(self.codec, base=base,
+                                               base_version=base_version))
+                t1 = time.perf_counter()
+                payload_rx = self._recv(dst_edge)
         else:
-            payload = ckpt.pack(self.codec, base=base,
-                                base_version=base_version)
+            with obs.span("mig.pack", client=ckpt.client_id,
+                          codec=self.codec):
+                payload = ckpt.pack(self.codec, base=base,
+                                    base_version=base_version)
             nbytes = len(payload)
             t1 = time.perf_counter()
             if self._send is not None and self._recv is not None:
-                self._send(dst_edge, payload)
-                payload_rx = self._recv(dst_edge)
+                with obs.span("mig.transfer", client=ckpt.client_id,
+                              nbytes=nbytes):
+                    self._send(dst_edge, payload)
+                    payload_rx = self._recv(dst_edge)
             else:
                 payload_rx = payload
         t2 = time.perf_counter()
 
-        restored = EdgeCheckpoint.unpack(payload_rx, base=base)
+        with obs.span("mig.unpack", client=ckpt.client_id):
+            restored = EdgeCheckpoint.unpack(payload_rx, base=base)
         t3 = time.perf_counter()
 
         hops = 2 if route == "device_relay" else 1

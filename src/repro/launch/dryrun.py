@@ -46,7 +46,10 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.plans import ExecPlan, apply_plan, plan_for
 from repro.models import hints
 from repro.models.registry import ARCH_IDS, build_model, get_config
+from repro.obs import log as obs_log
 from repro.optim.optimizers import sgd
+
+log = obs_log.get_logger("launch.dryrun")
 
 SDS = jax.ShapeDtypeStruct
 
@@ -292,12 +295,13 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     result["memory"]["tpu_corrected_peak_gb"] = round(
         max(float(floor), peak - upcast / 2) / 1e9, 3)
     if verbose:
-        print(f"[dryrun] {arch:18s} {shape_name:12s} "
-              f"mesh={result['mesh']:8s} "
-              f"mem/dev={result['memory']['peak_per_device_gb']:7.3f}GB "
-              f"flops/dev={corrected['flops']:.3e} "
-              f"coll/dev={corrected['coll']['total_wire_bytes']/1e9:9.2f}GB "
-              f"compile={result['compile_s']:6.1f}s")
+        log.info("%18s %12s mesh=%8s mem/dev=%7.3fGB flops/dev=%.3e "
+                 "coll/dev=%9.2fGB compile=%6.1fs",
+                 arch, shape_name, result["mesh"],
+                 result["memory"]["peak_per_device_gb"],
+                 corrected["flops"],
+                 corrected["coll"]["total_wire_bytes"] / 1e9,
+                 result["compile_s"])
     return result
 
 
@@ -313,7 +317,9 @@ def main() -> None:
     ap.add_argument("--save-hlo", action="store_true")
     ap.add_argument("--flags", default="",
                     help="comma-separated opt flags (zero1,moe_ep_data,...)")
+    obs_log.add_verbosity_flags(ap)
     args = ap.parse_args()
+    obs_log.setup(verbosity=obs_log.verbosity_from_args(args))
 
     archs = list(ARCH_IDS) if (args.all or not args.arch) else [args.arch]
     shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
@@ -344,9 +350,9 @@ def main() -> None:
                 with open(path, "w") as f:
                     json.dump(res, f, indent=1)
     if failures:
-        print(f"\nFAILED ({len(failures)}): {failures}")
+        log.error("FAILED (%d): %s", len(failures), failures)
         raise SystemExit(1)
-    print("\nall dry-runs passed")
+    log.info("all dry-runs passed")
 
 
 if __name__ == "__main__":

@@ -19,6 +19,9 @@ import numpy as np
 from repro.data.datasets import synthetic_tokens
 from repro.launch import steps as steps_lib
 from repro.models.registry import build_model, get_config, make_reduced
+from repro.obs import log as obs_log
+
+log = obs_log.get_logger("launch.serve")
 
 
 def build_cache_from_prefill(model, cfg, params, batch, prompt_len: int,
@@ -57,7 +60,9 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    obs_log.add_verbosity_flags(ap)
     args = ap.parse_args()
+    obs_log.setup(verbosity=obs_log.verbosity_from_args(args))
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -79,7 +84,8 @@ def main() -> None:
     t0 = time.perf_counter()
     logits, cache = build_cache_from_prefill(model, cfg, params, batch, S,
                                              total)
-    print(f"prefill: {B}x{S} tokens in {time.perf_counter()-t0:.2f}s")
+    log.info("prefill: %dx%d tokens in %.2fs",
+             B, S, time.perf_counter() - t0)
 
     serve = jax.jit(steps_lib.make_serve_step(model))
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
@@ -91,12 +97,12 @@ def main() -> None:
         out_tokens.append(tok)
     dt = time.perf_counter() - t0
     gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
-    print(f"decode: {args.gen-1} steps x {B} seqs in {dt:.2f}s "
-          f"({(args.gen-1)*B/max(dt,1e-9):.1f} tok/s)")
+    log.info("decode: %d steps x %d seqs in %.2fs (%.1f tok/s)",
+             args.gen - 1, B, dt, (args.gen - 1) * B / max(dt, 1e-9))
     for b in range(min(B, 2)):
-        print(f"  seq{b}: {gen[b].tolist()}")
+        log.info("  seq%d: %s", b, gen[b].tolist())
     assert np.isfinite(np.asarray(logits)).all(), "non-finite logits"
-    print("ok")
+    log.info("ok")
 
 
 if __name__ == "__main__":

@@ -36,11 +36,14 @@ from repro.launch import sharding as sh
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_host_mesh
 from repro.models.registry import build_model, get_config, make_reduced
+from repro.obs import log as obs_log
 from repro.models.vgg import VGG5
 from repro.optim.optimizers import sgd
 from repro.optim.schedules import constant
 from repro.runtime.cluster import (WIFI_75MBPS, make_testbed_devices,
                                    make_testbed_edges)
+
+log = obs_log.get_logger("launch.train")
 
 
 def run_testbed(args) -> None:
@@ -88,14 +91,14 @@ def run_testbed(args) -> None:
                       f"{m.nbytes/1e6:.1f}MB {m.sim_total_s:.2f}s]"
                       for m in r.migrations)
         rst = f" [restarted {r.restarted}]" if r.restarted else ""
-        print(f"round {r.round_idx:3d}  sim={r.round_time_sim:7.2f}s  "
-              f"wall={r.round_time_wall:6.2f}s  "
-              f"loss={np.mean(list(r.client_losses.values())):.4f}"
-              f"{mig}{rst}")
+        log.info("round %3d  sim=%7.2fs  wall=%6.2fs  loss=%.4f%s%s",
+                 r.round_idx, r.round_time_sim, r.round_time_wall,
+                 np.mean(list(r.client_losses.values())), mig, rst)
         if r.round_idx in hist.eval_acc:
-            print(f"          eval acc: {hist.eval_acc[r.round_idx]:.3f}")
-    print(f"total simulated training time: {hist.total_time_sim():.1f}s  "
-          f"migration overhead: {sched.migrator.total_overhead_s():.2f}s")
+            log.info("          eval acc: %.3f", hist.eval_acc[r.round_idx])
+    log.info("total simulated training time: %.1fs  "
+             "migration overhead: %.2fs",
+             hist.total_time_sim(), sched.migrator.total_overhead_s())
 
 
 def run_spmd(args) -> None:
@@ -131,8 +134,8 @@ def run_spmd(args) -> None:
             params, opt_state, metrics = jitted(params, opt_state, batch,
                                                 jnp.float32(args.lr))
             loss = float(metrics["loss"])
-            print(f"step {i:4d}  loss={loss:.4f}  "
-                  f"({time.perf_counter() - t0:.2f}s)")
+            log.info("step %4d  loss=%.4f  (%.2fs)",
+                     i, loss, time.perf_counter() - t0)
             assert np.isfinite(loss), "loss diverged"
 
 
@@ -158,7 +161,9 @@ def main() -> None:
     ap.add_argument("--move-round", type=int, default=2)
     ap.add_argument("--move-fraction", type=float, default=0.5)
     ap.add_argument("--eval-every", type=int, default=0)
+    obs_log.add_verbosity_flags(ap)
     args = ap.parse_args()
+    obs_log.setup(verbosity=obs_log.verbosity_from_args(args))
     if args.mode == "testbed":
         run_testbed(args)
     else:

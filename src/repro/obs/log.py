@@ -1,0 +1,75 @@
+"""Rank-tagged logging shared by the launchers and worker processes.
+
+One call — ``setup(rank=..., verbosity=...)`` — configures the
+``repro`` logger hierarchy with a compact, rank-tagged line format, so
+output from a multi-process mesh (coordinator + N shard groups, or N
+``run_multihost`` ranks) stays attributable::
+
+    14:02:31 [rank 1] I repro.sim.mailbox: group loop finished (42 windows)
+
+The launchers expose it as ``--verbose``/``--quiet``
+(``add_verbosity_flags``/``verbosity_from_args``); shard-group worker
+processes call ``setup`` from their entry points, inheriting the same
+format with their own rank tag. Idempotent: repeated calls replace the
+handler instead of stacking duplicates.
+"""
+from __future__ import annotations
+
+import logging
+import os
+import sys
+from typing import Optional
+
+_FMT = "%(asctime)s %(ranktag)s %(levelname).1s %(name)s: %(message)s"
+_DATEFMT = "%H:%M:%S"
+
+
+class _RankTag(logging.Filter):
+    def __init__(self, tag: str):
+        super().__init__()
+        self._tag = tag
+
+    def filter(self, record: logging.LogRecord) -> bool:
+        record.ranktag = self._tag
+        return True
+
+
+def setup(rank: Optional[int] = None, verbosity: int = 0,
+          stream=None) -> logging.Logger:
+    """Configure the ``repro`` logger tree. ``verbosity``: -1 = quiet
+    (warnings only), 0 = progress (INFO), >=1 = DEBUG. ``rank`` tags
+    every line; None tags with the pid (the single-process default)."""
+    level = (logging.WARNING if verbosity < 0
+             else logging.INFO if verbosity == 0 else logging.DEBUG)
+    tag = f"[rank {rank}]" if rank is not None else f"[pid {os.getpid()}]"
+    handler = logging.StreamHandler(stream or sys.stderr)
+    handler.setFormatter(logging.Formatter(_FMT, datefmt=_DATEFMT))
+    handler.addFilter(_RankTag(tag))
+    root = logging.getLogger("repro")
+    root.setLevel(level)
+    root.handlers[:] = [handler]
+    root.propagate = False
+    return root
+
+
+def get_logger(name: str) -> logging.Logger:
+    """A child of the ``repro`` tree (``get_logger("launch.train")`` ->
+    ``repro.launch.train``). Safe before ``setup``: un-setup loggers
+    fall through to Python's lastResort WARNING handler."""
+    return logging.getLogger(name if name.startswith("repro")
+                             else f"repro.{name}")
+
+
+def add_verbosity_flags(parser) -> None:
+    """Attach the standard ``--verbose``/``--quiet`` pair to an
+    argparse parser."""
+    g = parser.add_mutually_exclusive_group()
+    g.add_argument("-v", "--verbose", action="count", default=0,
+                   help="more logging (-v debug)")
+    g.add_argument("-q", "--quiet", action="store_true",
+                   help="warnings and errors only")
+
+
+def verbosity_from_args(args) -> int:
+    return -1 if getattr(args, "quiet", False) else int(
+        getattr(args, "verbose", 0))

@@ -1,0 +1,172 @@
+"""Merge telemetry snapshots into one Chrome-trace/Perfetto JSON.
+
+Input: the ``stats`` snapshots produced by ``repro.obs.telemetry
+.snapshot()`` — one or more per process, collected by the coordinator
+over the record plane (shard groups) plus its own local drain.
+
+Clock alignment: span timestamps are per-process ``monotonic_ns``
+readings, which share no epoch across processes. Every snapshot carries
+a paired ``(mono_ns, wall_ns)`` reading taken at drain time, so
+``offset = wall_ns - mono_ns`` maps that process's monotonic axis onto
+unix time; after applying per-snapshot offsets all spans live on one
+shared timeline (alignment error = the wall-clock sampling jitter,
+microseconds on one machine — fine for trace inspection, and reading
+the two clocks back to back keeps it small).
+
+Output: the Chrome trace-event JSON object format —
+``{"traceEvents": [...]}`` with one ``pid`` lane per rank (coordinator
+= pid 0, shard group/host ``r`` = pid ``r + 1``), ``tid`` lanes per
+real thread (window loop, trainer, transport readers), "X" complete
+events for spans, "C" events for counters (sampled at each snapshot
+drain), and "M" metadata naming every lane. Open it at
+https://ui.perfetto.dev or chrome://tracing. ``scripts/check_trace.py``
+validates the schema in CI.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.obs.telemetry import COORDINATOR_RANK
+
+
+def _pid_of(rank: int) -> int:
+    return int(rank) + 1          # coordinator (-1) -> pid 0
+
+
+def iter_spans(snaps: Iterable[Dict[str, Any]]):
+    """Yield every span of every snapshot as a flat dict on the shared
+    unix-ns timeline (see module docstring for the alignment)."""
+    for snap in snaps:
+        offset = int(snap["clock"]["wall_ns"]) - int(snap["clock"]["mono_ns"])
+        ev = snap["events"]
+        names = list(ev["names"])
+        attrs = ev.get("attrs", {})
+        n = len(ev["name_idx"])
+        for i in range(n):
+            yield {
+                "rank": int(snap["rank"]),
+                "pid": int(snap["pid"]),
+                "name": names[int(ev["name_idx"][i])],
+                "tid": int(ev["tid"][i]),
+                "ts_ns": int(ev["t0_ns"][i]) + offset,
+                "dur_ns": int(ev["dur_ns"][i]),
+                "attrs": attrs.get(str(i)),
+            }
+
+
+def build_chrome_trace(snaps: Iterable[Dict[str, Any]]) -> Dict[str, Any]:
+    """Fold snapshots into a Chrome trace-event JSON object."""
+    snaps = [s for s in snaps if s]
+    spans = list(iter_spans(snaps))
+    t0 = min((s["ts_ns"] for s in spans),
+             default=min((int(s["clock"]["wall_ns"]) for s in snaps),
+                         default=0))
+    events: List[Dict[str, Any]] = []
+    seen_procs: set = set()
+    seen_threads: set = set()
+    for snap in snaps:
+        pid = _pid_of(snap["rank"])
+        if pid not in seen_procs:
+            seen_procs.add(pid)
+            events.append({"ph": "M", "name": "process_name", "pid": pid,
+                           "tid": 0,
+                           "args": {"name": str(snap["process_name"])}})
+        for tid, tname in snap.get("threads", {}).items():
+            if (pid, int(tid)) not in seen_threads:
+                seen_threads.add((pid, int(tid)))
+                events.append({"ph": "M", "name": "thread_name", "pid": pid,
+                               "tid": int(tid), "args": {"name": str(tname)}})
+    for s in spans:
+        ev = {"ph": "X", "name": s["name"], "cat": s["name"].split(".")[0],
+              "pid": _pid_of(s["rank"]), "tid": s["tid"],
+              "ts": (s["ts_ns"] - t0) / 1000.0,
+              "dur": s["dur_ns"] / 1000.0}
+        if s["attrs"]:
+            ev["args"] = dict(s["attrs"])
+        events.append(ev)
+    for snap in snaps:
+        pid = _pid_of(snap["rank"])
+        ts = (int(snap["clock"]["wall_ns"]) - t0) / 1000.0
+        for cname, val in sorted(snap.get("counters", {}).items()):
+            events.append({"ph": "C", "name": cname, "pid": pid, "tid": 0,
+                           "ts": ts, "args": {"value": float(val)}})
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(path: str,
+                       snaps: Iterable[Dict[str, Any]]) -> str:
+    with open(path, "w") as f:
+        json.dump(build_chrome_trace(snaps), f)
+    return path
+
+
+def _percentile(sample: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(sample, np.float64), q))
+
+
+def summarize(snaps: Iterable[Dict[str, Any]]) -> Optional[Dict[str, Any]]:
+    """The ``obs`` section of ``FleetResult.summary()``: per-span-name
+    totals, summed counters, and histogram digests, aggregated over
+    every process. Compact by construction — JSON-dumpable, no raw
+    event lists."""
+    snaps = [s for s in snaps if s]
+    if not snaps:
+        return None
+    span_agg: Dict[str, Dict[str, float]] = {}
+    counters: Dict[str, float] = {}
+    gauges: Dict[str, float] = {}
+    hist_samples: Dict[str, List[float]] = {}
+    hist_agg: Dict[str, Dict[str, float]] = {}
+    ranks: set = set()
+    dropped = 0
+    for snap in snaps:
+        ranks.add(int(snap["rank"]))
+        dropped += int(snap.get("dropped", 0))
+        ev = snap["events"]
+        names = list(ev["names"])
+        idx = np.asarray(ev["name_idx"], np.int64)
+        dur = np.asarray(ev["dur_ns"], np.int64)
+        for i, name in enumerate(names):
+            mask = idx == i
+            a = span_agg.setdefault(name, {"count": 0, "total_s": 0.0,
+                                           "max_s": 0.0})
+            a["count"] += int(mask.sum())
+            a["total_s"] += float(dur[mask].sum()) / 1e9
+            if mask.any():
+                a["max_s"] = max(a["max_s"], float(dur[mask].max()) / 1e9)
+        for k, v in snap.get("counters", {}).items():
+            counters[k] = counters.get(k, 0) + v
+        for k, v in snap.get("gauges", {}).items():
+            gauges[k] = v
+        for k, h in snap.get("hists", {}).items():
+            a = hist_agg.setdefault(k, {"count": 0, "sum": 0.0,
+                                        "min": float("inf"),
+                                        "max": float("-inf")})
+            a["count"] += int(h["count"])
+            a["sum"] += float(h["sum"])
+            a["min"] = min(a["min"], float(h["min"]))
+            a["max"] = max(a["max"], float(h["max"]))
+            hist_samples.setdefault(k, []).extend(
+                float(x) for x in h["sample"])
+    hists = {}
+    for k, a in hist_agg.items():
+        sample = hist_samples[k]
+        hists[k] = {
+            "count": int(a["count"]),
+            "mean": a["sum"] / a["count"] if a["count"] else 0.0,
+            "min": a["min"], "max": a["max"],
+            "p50": _percentile(sample, 50) if sample else 0.0,
+            "p95": _percentile(sample, 95) if sample else 0.0,
+        }
+    return {
+        "ranks": sorted(ranks),
+        "num_snapshots": len(snaps),
+        "dropped_events": dropped,
+        "spans": {k: span_agg[k] for k in sorted(span_agg)},
+        "counters": {k: counters[k] for k in sorted(counters)},
+        "gauges": {k: gauges[k] for k in sorted(gauges)},
+        "hists": {k: hists[k] for k in sorted(hists)},
+    }

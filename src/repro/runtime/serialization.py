@@ -41,6 +41,7 @@ from typing import Any, Iterator, List, Optional, Tuple
 import numpy as np
 
 from repro.kernels.int8_codec import ops as codec_ops
+from repro.obs import telemetry as obs
 
 MAGIC = b"FFLY"
 VERSION = 2
@@ -217,9 +218,10 @@ def pack_pytree_chunks(tree: Any, codec: str = "raw", *,
 
     if codec == "delta" and packed_idx:
         # the fused one-dispatch quantization of the whole payload
-        q, scales, _ = codec_ops.quantize_leaves(
-            packed_leaves, packed_bases, use_pallas=use_pallas,
-            interpret=interpret)
+        with obs.span("mig.quantize", n=int(offsets[-1])):
+            q, scales, _ = codec_ops.quantize_leaves(
+                packed_leaves, packed_bases, use_pallas=use_pallas,
+                interpret=interpret)
         yield from _chunks_of(q.tobytes())
         yield scales.astype("<f4").tobytes()
 

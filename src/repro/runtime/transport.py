@@ -27,6 +27,8 @@ import threading
 from dataclasses import dataclass
 from typing import Callable, Dict, Iterable, Optional, Tuple
 
+from repro.obs import telemetry as obs
+
 
 @dataclass(frozen=True)
 class LinkModel:
@@ -73,6 +75,9 @@ class FrameStream:
     def send(self, payload: bytes) -> int:
         self._conn.sendall(_LEN.pack(len(payload)))
         self._conn.sendall(payload)
+        if obs.is_enabled():
+            obs.count("wire.frames_out")
+            obs.count("wire.bytes_out", len(payload) + _LEN.size)
         return len(payload)
 
     def send_chunked(self, chunks: Iterable[bytes]) -> int:
@@ -81,6 +86,10 @@ class FrameStream:
         a bounded queue while this thread writes to the socket — chunk
         production (checkpoint serialization) overlaps the transfer.
         Returns the payload byte count (excluding framing)."""
+        with obs.span("wire.send_chunked"):
+            return self._send_chunked(chunks)
+
+    def _send_chunked(self, chunks: Iterable[bytes]) -> int:
         q: "queue.Queue[Optional[bytes]]" = queue.Queue(_SEND_QUEUE_DEPTH)
         errs: list = []
 
@@ -100,6 +109,8 @@ class FrameStream:
             self._conn.sendall(_LEN.pack(CHUNKED))
             while True:
                 c = q.get()
+                if obs.is_enabled():
+                    obs.gauge("wire.chunk_queue_depth", q.qsize())
                 if c is None:
                     break
                 if not c:
@@ -130,6 +141,9 @@ class FrameStream:
             self._conn.close()
             raise errs[0]
         self._conn.sendall(_CLEN.pack(0))
+        if obs.is_enabled():
+            obs.count("wire.frames_out")
+            obs.count("wire.bytes_out", total)
         return total
 
     def close(self):
@@ -186,6 +200,9 @@ class SocketTransport:
                     state = "chead" if need == CHUNKED else "body"
                 elif state == "body" and len(buf) >= need:
                     deliver(bytes(buf[:need]))
+                    if obs.is_enabled():
+                        obs.count("wire.frames_in")
+                        obs.count("wire.bytes_in", need)
                     del buf[:need]
                     state = "head"
                 elif state == "chead" and len(buf) >= _CLEN.size:
@@ -193,6 +210,9 @@ class SocketTransport:
                     del buf[:_CLEN.size]
                     if need == 0:           # terminator: frame complete
                         deliver(bytes(assembly))
+                        if obs.is_enabled():
+                            obs.count("wire.frames_in")
+                            obs.count("wire.bytes_in", len(assembly))
                         assembly = bytearray()
                         state = "head"
                     else:

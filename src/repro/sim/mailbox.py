@@ -61,6 +61,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import log as obs_log
+from repro.obs import telemetry as obs
 from repro.runtime.serialization import pack_pytree, unpack_pytree
 from repro.runtime.transport import FrameStream, SocketTransport
 from repro.sim.engine import (EventKind, Mail, _check_mail_within_lookahead,
@@ -195,6 +197,7 @@ class PipeMailbox(Mailbox):
     def exchange(self, my_time, outbox):
         for p in self.peer_ids:                      # send to all ...
             self._peers[p].send((my_time, outbox.get(p, [])))
+        wait0 = time.monotonic() if obs.is_enabled() else 0.0
         times = [my_time]
         incoming: List[Mail] = []
         for p in self.peer_ids:                      # ... then drain all
@@ -206,6 +209,8 @@ class PipeMailbox(Mailbox):
                     "process died?) — aborting run") from None
             times.append(pt)
             incoming.extend(mail)
+        if wait0:
+            obs.observe("mailbox.barrier_wait_s", time.monotonic() - wait0)
         return min(times), incoming
 
 
@@ -343,12 +348,15 @@ class SocketMailbox(Mailbox):
                 raise RuntimeError(
                     f"mailbox peer {p} unreachable ({e}) — aborting run"
                 ) from None
+        wait0 = time.monotonic() if obs.is_enabled() else 0.0
         times = [my_time]
         incoming: List[Mail] = []
         for p in self.peer_ids:
             msg = self._pop(p)
             times.append(msg["time"])
             incoming.extend(msg["mail"])
+        if wait0:
+            obs.observe("mailbox.barrier_wait_s", time.monotonic() - wait0)
         return min(times), incoming
 
     def _pop(self, p: int) -> Dict[str, Any]:
@@ -396,6 +404,7 @@ def _connect_retry(addr: Tuple[str, int],
         except OSError:
             if time.monotonic() >= deadline:
                 raise
+            obs.count("wire.connect_retries")
             time.sleep(min(delay, max(deadline - time.monotonic(), 0.0)))
             delay = min(delay * 2.0, 1.0)
 
@@ -430,6 +439,9 @@ class PipeRecordSink:
 
     def idle(self, gen: int) -> None:
         self._send({"type": "idle", "gen": gen})
+
+    def stats(self, snap: Dict[str, Any]) -> None:
+        self._send({"type": "stats", "snap": snap})
 
     def done(self, finals: Dict[int, Dict[str, Any]],
              trainer: Optional[Dict[str, Any]] = None) -> None:
@@ -468,6 +480,9 @@ class SocketRecordSink:
 
     def idle(self, gen):
         self._send({"type": "idle", "gen": gen})
+
+    def stats(self, snap):
+        self._send({"type": "stats", "snap": snap})
 
     def done(self, finals, trainer=None):
         self._send({"type": "done", "stats": finals, "trainer": trainer})
@@ -522,6 +537,15 @@ def run_host_windows(shards: Sequence[Any], mailbox: Mailbox,
                 acc[k] = []
         elif math.isfinite(bound):
             sink.frontier(bound)
+        ship_stats()
+
+    def ship_stats() -> None:
+        # telemetry rides the record plane at the same cadence as the
+        # records themselves (and once more right before ``done``)
+        if obs.is_enabled():
+            snap = obs.snapshot()
+            if snap is not None:
+                sink.stats(snap)
 
     def peek_min() -> float:
         return min((_INF if (t := s.peek()) is None else t
@@ -545,7 +569,8 @@ def run_host_windows(shards: Sequence[Any], mailbox: Mailbox,
                 break
             sink.idle(gen)
             try:
-                msg = control.get(timeout=control_timeout_s)
+                with obs.span("window.idle", gen=gen):
+                    msg = control.get(timeout=control_timeout_s)
             except queue.Empty:
                 raise RuntimeError(
                     f"no control mail for {control_timeout_s}s at "
@@ -561,20 +586,22 @@ def run_host_windows(shards: Sequence[Any], mailbox: Mailbox,
         bound = T + lookahead
         local: List[Mail] = []
         mail_min = _INF
-        for sid in sorted(group):
-            res = group[sid].run_window(bound, [])
-            for k, v in res.records.items():
-                acc[k].extend(v)
-            for m in res.mail:
-                _check_mail_within_lookahead(m, bound)
-                if m.dst_shard in group:
-                    local.append(m)       # delivered below => covered by
-                else:                     # the next peek_min()
-                    outbox.setdefault(owner.get(m.dst_shard, m.dst_shard),
-                                      []).append(m)
-                    mail_min = min(mail_min, m.time)
-        if local:
-            deliver(local)
+        with obs.span("window.compute"):
+            for sid in sorted(group):
+                res = group[sid].run_window(bound, [])
+                for k, v in res.records.items():
+                    acc[k].extend(v)
+                for m in res.mail:
+                    _check_mail_within_lookahead(m, bound)
+                    if m.dst_shard in group:
+                        local.append(m)   # delivered below => covered by
+                    else:                 # the next peek_min()
+                        outbox.setdefault(
+                            owner.get(m.dst_shard, m.dst_shard),
+                            []).append(m)
+                        mail_min = min(mail_min, m.time)
+            if local:
+                deliver(local)
         my_t = min(peek_min(), mail_min)
         windows += 1
         if windows % _SHIP_EVERY_WINDOWS == 0:
@@ -585,6 +612,7 @@ def run_host_windows(shards: Sequence[Any], mailbox: Mailbox,
         f = group[sid].final_stats()
         f["engine"]["windows"] = windows
         finals[sid] = f
+    ship_stats()              # final drain (catches the trainer's tail)
     sink.done(finals, tstats)
     return windows
 
@@ -629,6 +657,9 @@ class _MeshState:
         self.num_groups = num_groups
         self.gen = 0                 # restarts sent (matches worker idles)
         self.stopped = False
+        #: telemetry snapshots per group rank — accumulated for the whole
+        #: run, so deliberately NOT cleared by reset() (round restarts)
+        self.obs: Dict[int, List[Dict[str, Any]]] = {}
         self.reset()
 
     def reset(self) -> None:
@@ -656,7 +687,10 @@ def _drive_mesh(get: Callable[[float], Tuple[str, int, Dict[str, Any]]],
     done: set = set()
     while len(done) < state.num_groups:
         try:
+            wait0 = time.monotonic() if obs.is_enabled() else 0.0
             kind, src, msg = get(timeout_s)
+            if wait0:
+                obs.observe("coord.drain_wait_s", time.monotonic() - wait0)
         except queue.Empty:
             raise RuntimeError(
                 f"shard-group mesh made no progress for {timeout_s}s "
@@ -669,6 +703,11 @@ def _drive_mesh(get: Callable[[float], Tuple[str, int, Dict[str, Any]]],
                 continue          # clean close after its done message
             raise RuntimeError(
                 f"shard group {src} died mid-run ({msg['err']})")
+        if kind == "stats":
+            # telemetry snapshots ride the record plane but never touch
+            # frontier/idle bookkeeping — pure observation
+            state.obs.setdefault(src, []).append(msg["snap"])
+            continue
         gen_before = state.gen
         if kind == "records":
             on_chunk(None, {src: msg["records"]})
@@ -692,12 +731,14 @@ def _drive_mesh(get: Callable[[float], Tuple[str, int, Dict[str, Any]]],
             if new <= state.replay_frontier:
                 break
             state.replay_frontier = new
-            on_chunk(new, {})     # a sync commit may restart() in here
+            with obs.span("coord.replay"):
+                on_chunk(new, {})  # a sync commit may restart() in here
         if (kind == "idle" and len(state.idle) == state.num_groups
                 and state.gen == gen_before and not state.stopped):
             state.stopped = True
             stop_all()
-    on_chunk(_INF, {})
+    with obs.span("coord.replay"):
+        on_chunk(_INF, {})
     return finals, trainers
 
 
@@ -737,14 +778,17 @@ class _MeshEngineBase:
 # pipe-transport mesh: N worker-group processes on one machine
 # ---------------------------------------------------------------------------
 
-def _pipe_group_main(conn, peers, lookahead) -> None:
+def _pipe_group_main(conn, peers, lookahead, group_id) -> None:
     """Entry point of one pipe-mesh group process. The parent pipe
     carries the bootstrap in, control mail in, and records/updates out;
     window traffic rides the direct peer pipes."""
     import traceback
+    log = obs_log.setup(rank=group_id)
     sink = None
     try:
-        group, owner, trainer_blob = conn.recv()
+        group, owner, trainer_blob, telemetry = conn.recv()
+        if telemetry:
+            obs.enable(rank=group_id, process_name=f"group {group_id}")
         sink = PipeRecordSink(conn)
         trainer = GroupTrainer(trainer_blob, sink)
         source: "queue.Queue" = queue.Queue()
@@ -766,6 +810,8 @@ def _pipe_group_main(conn, peers, lookahead) -> None:
         run_host_windows(group, PipeMailbox(peers), lookahead, sink,
                          owner, control=barrier_q, trainer=trainer)
     except BaseException:
+        log.error("shard group %d failed:\n%s", group_id,
+                  traceback.format_exc())
         try:
             if sink is not None:
                 sink.err(traceback.format_exc())
@@ -791,7 +837,8 @@ class PeerShardedEngine(_MeshEngineBase):
 
     def __init__(self, shards: Sequence[Any], *, lookahead: float,
                  groups: Optional[int] = None,
-                 trainer_blobs: Optional[Dict[int, bytes]] = None):
+                 trainer_blobs: Optional[Dict[int, bytes]] = None,
+                 telemetry: bool = False):
         if lookahead is None or lookahead <= 0:
             raise ValueError("peer sharded execution needs a positive "
                              "lookahead")
@@ -821,10 +868,11 @@ class PeerShardedEngine(_MeshEngineBase):
                 elif j == g:
                     peers[i] = b
             proc = ctx.Process(target=_pipe_group_main,
-                               args=(child, peers, lookahead), daemon=True)
+                               args=(child, peers, lookahead, g),
+                               daemon=True)
             proc.start()
             parent.send(([s for s in shards if self.owner[s.shard_id] == g],
-                         self.owner, blobs.get(g)))
+                         self.owner, blobs.get(g), telemetry))
             self._conns[g] = parent
             self._procs.append(proc)
         for (a, b) in mesh.values():          # parent keeps no mesh ends
@@ -929,9 +977,13 @@ def _host_proc_main(conn) -> None:
     import traceback
     sink = None
     mailbox = None
+    log = obs_log.setup()
     try:
         (rank, group, owner, lookahead, record_addr, trainer_blob,
-         num_hosts) = conn.recv()
+         num_hosts, telemetry) = conn.recv()
+        log = obs_log.setup(rank=rank)
+        if telemetry:
+            obs.enable(rank=rank, process_name=f"host {rank}")
         # listener backlog: hosts-1 incoming mail peers + the control
         # stream + slack for connect-storm retries
         mailbox = SocketMailbox(rank, backlog=num_hosts + 4)
@@ -946,6 +998,7 @@ def _host_proc_main(conn) -> None:
                          control=barrier_q, trainer=trainer)
     except BaseException:
         tb = traceback.format_exc()
+        log.error("shard host failed:\n%s", tb)
         try:
             if sink is not None:
                 sink.err(tb)
@@ -1028,7 +1081,8 @@ class HostShardedEngine(_MeshEngineBase):
 
     def __init__(self, shards: Sequence[Any], *, lookahead: float,
                  hosts: int,
-                 trainer_blobs: Optional[Dict[int, bytes]] = None):
+                 trainer_blobs: Optional[Dict[int, bytes]] = None,
+                 telemetry: bool = False):
         if lookahead is None or lookahead <= 0:
             raise ValueError("multi-host execution needs a positive "
                              "lookahead")
@@ -1061,7 +1115,8 @@ class HostShardedEngine(_MeshEngineBase):
                                    daemon=True)
                 proc.start()
                 parent.send((rank, group, self.owner, lookahead,
-                             record_addr, blobs.get(rank), self.num_hosts))
+                             record_addr, blobs.get(rank), self.num_hosts,
+                             telemetry))
                 self._procs.append(proc)
                 self._boots.append(parent)
             directory = {rank: ("127.0.0.1", self._boot_recv(rank)[1])

@@ -130,10 +130,13 @@ class FleetMetrics:
         return records
 
     def migration_summary(self) -> Dict[str, Any]:
+        # the empty and non-empty schemas must stay identical (same keys,
+        # same order) — consumers diff/aggregate these dicts across runs
         if not self.migrations:
             return {"count": 0, "total_overhead_s": 0.0,
-                    "mean_overhead_s": 0.0, "max_overhead_s": 0.0,
-                    "total_queue_s": 0.0, "total_bytes": 0}
+                    "mean_overhead_s": 0.0, "p95_overhead_s": 0.0,
+                    "max_overhead_s": 0.0, "total_queue_s": 0.0,
+                    "total_bytes": 0}
         migs = sorted(self.migrations,
                       key=lambda m: (m.start_s, m.client_id))
         ov = np.array([m.overhead_s for m in migs])

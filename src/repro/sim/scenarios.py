@@ -62,6 +62,10 @@ class ScenarioSpec:
     workers: Optional[int] = None     # process-parallel shard engines (pipes)
     hosts: Optional[int] = None       # socket-sharded host processes
     flush_interval_s: Optional[float] = None  # async batched-flush grid
+    # observability (docs/OBSERVABILITY.md): wall-clock spans/counters,
+    # merged into summary()["obs"] and (optionally) a Perfetto trace
+    telemetry: bool = False
+    trace_path: Optional[str] = None
 
     def replace(self, **kw) -> "ScenarioSpec":
         return dataclasses.replace(self, **kw)
@@ -142,7 +146,9 @@ def build_scenario(spec: ScenarioSpec) -> FleetSimulator:
                           measure_pack=spec.measure_pack,
                           shards=spec.shards, workers=spec.workers,
                           hosts=spec.hosts,
-                          flush_interval_s=spec.flush_interval_s)
+                          flush_interval_s=spec.flush_interval_s,
+                          telemetry=spec.telemetry,
+                          trace_path=spec.trace_path)
 
 
 def run_scenario(spec: ScenarioSpec) -> Dict[str, Any]:

@@ -59,6 +59,8 @@ import numpy as np
 from repro.core.checkpoint import EdgeCheckpoint
 from repro.core.migration import MigrationExecutor
 from repro.core.mobility import MobilityTrace
+from repro.obs import telemetry as obs
+from repro.obs import trace as obs_trace
 from repro.sim.async_agg import (AsyncAggregator, StalenessFn, SyncAggregator,
                                  poly_staleness)
 from repro.sim.edge import SimEdge
@@ -85,10 +87,13 @@ class FleetResult:
     edge_stats: List[Dict[str, Any]]
     final_params: Params
     metrics: FleetMetrics
+    #: merged telemetry (repro.obs.trace.summarize) — None unless the
+    #: run had telemetry=True
+    obs: Optional[Dict[str, Any]] = None
 
     def summary(self) -> Dict[str, Any]:
         timed = [r for r in self.rounds if "mean_round_time_s" in r]
-        return {
+        out = {
             "mode": self.mode,
             "num_rounds": len(self.rounds),
             "sim_time_s": self.engine_stats["sim_time_s"],
@@ -100,6 +105,9 @@ class FleetResult:
                 [r["mean_round_time_s"] for r in timed])) if timed else None,
             "migrations": self.migration_summary,
         }
+        if self.obs is not None:
+            out["obs"] = self.obs
+        return out
 
 
 class FleetSimulator:
@@ -128,7 +136,9 @@ class FleetSimulator:
                  workers: Optional[int] = None,
                  hosts: Optional[int] = None,
                  flush_interval_s: Optional[float] = None,
-                 reprice_tol: float = 0.05):
+                 reprice_tol: float = 0.05,
+                 telemetry: bool = False,
+                 trace_path: Optional[str] = None):
         if mode not in ("sync", "async"):
             raise ValueError(f"mode must be sync|async, got {mode!r}")
         if dropouts and mode == "sync":
@@ -175,6 +185,11 @@ class FleetSimulator:
                       else None)
         self.flush_interval_s = flush_interval_s
         self.reprice_tol = reprice_tol
+        # wall-clock observation only (docs/OBSERVABILITY.md): spans and
+        # counters never read simulated time, so enabling telemetry
+        # cannot perturb metrics or numerics
+        self.telemetry = telemetry
+        self.trace_path = trace_path
 
         self.metrics = FleetMetrics()
         if mode == "sync":
@@ -415,6 +430,8 @@ class FleetSimulator:
         items.sort(key=lambda it: it[:3])
 
         mail: List[Mail] = []
+        replay_span = obs.span("coord.window", items=len(items))
+        replay_span.__enter__()
         for t, _, _, action in items:
             self._advance_grid(t)
             if action[0] == "start":
@@ -446,6 +463,7 @@ class FleetSimulator:
             self._advance_grid(bound)
         if self.mode == "sync" and self._arrived == self._expected:
             mail.extend(self._commit_round())
+        replay_span.__exit__(None, None, None)
         return mail
 
     def _commit_round(self) -> List[Mail]:
@@ -547,6 +565,33 @@ class FleetSimulator:
         mesh.on_abort = proxy.abort
         return proxy
 
+    def _collect_obs(self, mesh_obs: Optional[Dict[int, List[dict]]]
+                     ) -> List[Dict[str, Any]]:
+        """Every telemetry snapshot of the run, ordered by rank with the
+        coordinator's own (local) drain last."""
+        snaps: List[Dict[str, Any]] = []
+        if mesh_obs:
+            for r in sorted(mesh_obs):
+                snaps.extend(mesh_obs[r])
+        if obs.is_enabled():
+            snap = obs.snapshot()
+            if snap is not None:
+                snaps.append(snap)
+        return snaps
+
+    def _obs_report(self, mesh_obs: Optional[Dict[int, List[dict]]]
+                    ) -> Optional[Dict[str, Any]]:
+        """Merge snapshots into the summary section, writing the Chrome
+        trace file alongside when a path is configured."""
+        snaps = self._collect_obs(mesh_obs)
+        if not snaps:
+            return None
+        report = obs_trace.summarize(snaps)
+        if self.trace_path:
+            obs_trace.write_chrome_trace(self.trace_path, snaps)
+            report["trace_path"] = self.trace_path
+        return report
+
     def _finish_run(self, engine: Any, wall0: float) -> FleetResult:
         """Shared tail of every executor path: drain the async flush
         buffer, stamp uniform wall accounting (windows + replay + flush
@@ -559,9 +604,22 @@ class FleetSimulator:
         stats["events_per_sec"] = (stats["events_processed"]
                                    / stats["wall_s"]
                                    if stats["wall_s"] > 0 else 0.0)
-        return self._build_result(stats)
+        result = self._build_result(stats)
+        state = getattr(engine, "state", None)
+        result.obs = self._obs_report(getattr(state, "obs", None))
+        return result
 
     def run(self, rounds: int) -> FleetResult:
+        if self.telemetry:
+            obs.enable(rank=obs.COORDINATOR_RANK,
+                       process_name="coordinator")
+        try:
+            return self._run(rounds)
+        finally:
+            if self.telemetry:
+                obs.disable()
+
+    def _run(self, rounds: int) -> FleetResult:
         self.num_rounds = rounds
         self._expected = self.fleet.num_clients
         self._flush_dt = (self.flush_interval_s
@@ -599,11 +657,11 @@ class FleetSimulator:
         if self.hosts is not None:
             engine: Any = HostShardedEngine(
                 shards, lookahead=self._lookahead(), hosts=groups,
-                trainer_blobs=blobs)
+                trainer_blobs=blobs, telemetry=self.telemetry)
         else:
             engine = PeerShardedEngine(
                 shards, lookahead=self._lookahead(), groups=groups,
-                trainer_blobs=blobs)
+                trainer_blobs=blobs, telemetry=self.telemetry)
         self.coordinator = engine
         self._attach_proxy(engine, cohort_owner)
         wall0 = time.perf_counter()
@@ -636,6 +694,11 @@ class FleetSimulator:
         single-process ``SerialExecutor`` run, sync or async."""
         if self.measure_pack:
             raise ValueError("run_multihost requires measure_pack=False")
+        if self.telemetry:
+            # every rank is a host; rank 0 is additionally the
+            # coordinator (its coordinator-side spans ship with — and
+            # under the lane of — its own host loop)
+            obs.enable(rank=rank, process_name=f"host {rank}")
         hosts = len(addresses)
         if sorted(addresses) != list(range(hosts)):
             raise ValueError(
@@ -707,8 +770,12 @@ class FleetSimulator:
                 finals, wall_s=time.perf_counter() - wall0,
                 num_shards=len(shards), num_hosts=hosts,
                 trainers=trainers)
-            return self._build_result(stats)
+            result = self._build_result(stats)
+            result.obs = self._obs_report(ctrl.state.obs)
+            return result
         finally:
+            if self.telemetry:
+                obs.disable()
             # unblock this process's control dispatcher (and through it
             # the trainer thread) even on an abort path — run_multihost
             # is a library call in a long-lived process, and a retry

@@ -44,6 +44,8 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.obs import telemetry as obs
+
 Params = Any
 CohortKey = Tuple[int, int]
 
@@ -57,8 +59,10 @@ class LocalTrainer:
         self.fleet = fleet
 
     def request(self, cohort_key: CohortKey, epoch: int) -> None:
-        self.fleet.cohorts[cohort_key].run_epoch(
-            self.fleet.global_params, epoch, self.fleet.lr_schedule(epoch))
+        with obs.span("trainer.train", cohort=str(cohort_key), epoch=epoch):
+            self.fleet.cohorts[cohort_key].run_epoch(
+                self.fleet.global_params, epoch,
+                self.fleet.lr_schedule(epoch))
 
     def update_for(self, cohort_key: CohortKey, epoch: int):
         cohort = self.fleet.cohorts[cohort_key]
@@ -133,7 +137,10 @@ class GroupTrainer:
                 if kind == "stop":
                     return
                 if kind == "bcast":
-                    bases[int(msg["version"])] = unpack_pytree(msg["params"])
+                    with obs.span("trainer.bcast",
+                                  version=int(msg["version"])):
+                        bases[int(msg["version"])] = unpack_pytree(
+                            msg["params"])
                     continue
                 assert kind == "train", f"unexpected trainer msg {kind!r}"
                 key = tuple(msg["cohort"])
@@ -143,9 +150,11 @@ class GroupTrainer:
                 if cohort is None:
                     cohort = built[key] = specs[key].build()
                 # FIFO guarantees the base broadcast preceded us
-                cohort.run_epoch(bases[version], epoch, float(msg["lr"]))
-                payload = pack_pytree({"trees": cohort.snapshots[epoch],
-                                       "losses": cohort.losses[epoch]})
+                with obs.span("trainer.train", cohort=str(key), epoch=epoch):
+                    cohort.run_epoch(bases[version], epoch, float(msg["lr"]))
+                with obs.span("trainer.pack", cohort=str(key), epoch=epoch):
+                    payload = pack_pytree({"trees": cohort.snapshots[epoch],
+                                           "losses": cohort.losses[epoch]})
                 self._sink.update(key, epoch, payload)
                 # the update is shipped; the coordinator owns it now.
                 # Directive base versions are non-decreasing, so older
@@ -186,6 +195,7 @@ class TrainerProxy:
         self._version_of = version_of
         self._timeout_s = timeout_s
         self._requested: set = set()
+        self._req_t: Dict[Tuple[CohortKey, int], float] = {}
         self._group_version: Dict[int, int] = {}
         self._packed: Tuple[int, Optional[bytes]] = (-1, None)
         self._store: Dict[Tuple[CohortKey, int],
@@ -199,6 +209,8 @@ class TrainerProxy:
         if (cohort_key, epoch) in self._requested:
             return
         self._requested.add((cohort_key, epoch))
+        if obs.is_enabled():
+            self._req_t[(cohort_key, epoch)] = time.monotonic()
         group = self._owner[cohort_key]
         version = self._version_of()
         if self._group_version.get(group) != version:
@@ -232,6 +244,12 @@ class TrainerProxy:
                         f"no update for cohort {cohort_key} epoch {epoch} "
                         f"after {self._timeout_s}s (trainer stalled?)")
                 self._cond.wait(timeout=min(remaining, 1.0))
+            # request -> first consume: how long the replay's numerics
+            # were in flight on (or in transit to/from) the owner group
+            t0 = self._req_t.pop(key, None)
+            if t0 is not None:
+                obs.observe("trainer.update_latency_s",
+                            time.monotonic() - t0)
             return self._store[key]
 
     def prune(self, cohort_key: CohortKey, floor: int) -> None:
@@ -247,6 +265,7 @@ class TrainerProxy:
             for k in [k for k in self._requested
                       if k[0] == cohort_key and k[1] < floor]:
                 self._requested.discard(k)
+                self._req_t.pop(k, None)
 
     # -- transport side (reader threads) ---------------------------------
 

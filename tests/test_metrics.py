@@ -1,0 +1,123 @@
+"""FleetMetrics edge cases: schema parity of the migration summary,
+single-sample percentiles, skipped rounds interleaved with migrations,
+and insertion-order invariance of ``build_rounds()`` (the property the
+sharded executors' bit-identity rests on)."""
+from __future__ import annotations
+
+import random
+
+from repro.sim.metrics import FleetMetrics, MigrationRecord
+
+
+def _mig(client="dev-0", round_idx=0, start=1.0, end=2.5, nbytes=1000):
+    return MigrationRecord(client_id=client, src_edge="edge-0",
+                           dst_edge="edge-1", round_idx=round_idx,
+                           start_s=start, end_s=end, nbytes=nbytes,
+                           pack_s=0.1, queue_s=0.2, transfer_s=0.3)
+
+
+def _contrib(m, client, round_idx, arrival, duration=1.0, staleness=0,
+             loss=0.5):
+    m.record_contribution(client_id=client, round_idx=round_idx,
+                          arrival_s=arrival, duration_s=duration,
+                          staleness=staleness, loss=loss)
+
+
+def test_migration_summary_schema_parity():
+    """The empty and non-empty summaries must expose the same keys in
+    the same order — consumers diff these dicts across runs, and a
+    key that appears only when migrations happened breaks them."""
+    empty = FleetMetrics().migration_summary()
+    full_m = FleetMetrics()
+    full_m.record_migration(_mig())
+    full = full_m.migration_summary()
+    assert list(empty) == list(full)
+    assert empty["count"] == 0 and full["count"] == 1
+    assert empty["p95_overhead_s"] == 0.0
+    assert full["p95_overhead_s"] == full["max_overhead_s"] == 1.5
+
+
+def test_single_contribution_round():
+    """A round with one update: every percentile collapses onto the
+    single sample (np.percentile of one value), staleness/loss means
+    are that sample, and nothing NaNs."""
+    m = FleetMetrics()
+    _contrib(m, "dev-0", 0, arrival=3.0, duration=2.25, staleness=2,
+             loss=0.75)
+    (rec,) = m.build_rounds()
+    assert rec["n_updates"] == 1
+    assert rec["mean_round_time_s"] == 2.25
+    assert rec["p95_round_time_s"] == 2.25
+    assert rec["max_round_time_s"] == 2.25
+    assert rec["mean_staleness"] == 2.0 and rec["max_staleness"] == 2
+    assert rec["mean_loss"] == 0.75
+    assert rec["sim_end_s"] == 3.0
+
+    one_mig = FleetMetrics()
+    one_mig.record_migration(_mig(start=1.0, end=1.8))
+    s = one_mig.migration_summary()
+    assert s["p95_overhead_s"] == s["mean_overhead_s"] == s["max_overhead_s"]
+
+
+def test_skipped_rounds_interleaved_with_migrations():
+    """Sync rounds that committed nothing (every client mid-migration)
+    produce a skipped record that still counts that round's migrations
+    and keeps the round sequence gap-free."""
+    m = FleetMetrics()
+    _contrib(m, "dev-0", 0, arrival=1.0)
+    m.record_barrier(0, 1.0)
+    # round 1: everyone was migrating — barrier carried forward
+    m.record_skipped_round(1, 2.0)
+    m.record_migration(_mig(client="dev-0", round_idx=1, start=1.2, end=1.9))
+    m.record_migration(_mig(client="dev-1", round_idx=1, start=1.3, end=2.0))
+    _contrib(m, "dev-0", 2, arrival=3.0)
+    m.record_barrier(2, 3.0)
+
+    recs = m.build_rounds()
+    assert [r["round_idx"] for r in recs] == [0, 1, 2]
+    skipped = recs[1]
+    assert skipped["skipped_round"] is True
+    assert skipped["n_updates"] == 0
+    assert skipped["n_migrations"] == 2
+    assert skipped["barrier_s"] == 2.0
+    assert "mean_loss" not in skipped          # nothing to average
+    assert recs[0]["barrier_s"] == 1.0 and recs[2]["barrier_s"] == 3.0
+    # skipped_rounds also lands in barrier_times (round restart bookkeeping)
+    assert m.barrier_times[1] == 2.0
+
+
+def test_build_rounds_insertion_order_invariance():
+    """Shards deliver contributions/migrations in arbitrary interleaved
+    order; build_rounds() must fold them identically regardless —
+    including the floating-point accumulations, which only commute
+    because the fold re-sorts by (round, time, client)."""
+    events = []
+    rng = random.Random(7)
+    for r in range(3):
+        for i in range(8):
+            events.append(("c", f"dev-{i:02d}", r,
+                           r * 10.0 + rng.random() * 5,
+                           0.5 + rng.random(), rng.randrange(3),
+                           rng.random()))
+        for i in range(3):
+            events.append(("m", f"dev-{i:02d}", r, r * 10.0 + i * 0.1))
+
+    def build(order):
+        m = FleetMetrics()
+        for ev in order:
+            if ev[0] == "c":
+                _, cid, r, arr, dur, st, loss = ev
+                _contrib(m, cid, r, arr, dur, st, loss)
+            else:
+                _, cid, r, start = ev
+                m.record_migration(_mig(client=cid, round_idx=r,
+                                        start=start, end=start + 0.7))
+        return m.build_rounds(), m.migration_summary()
+
+    base_rounds, base_summary = build(events)
+    for seed in range(3):
+        shuffled = events[:]
+        random.Random(seed).shuffle(shuffled)
+        rounds, summary = build(shuffled)
+        assert rounds == base_rounds        # bit-identical floats
+        assert summary == base_summary

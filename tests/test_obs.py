@@ -1,0 +1,277 @@
+"""Telemetry plane: recording/drain semantics, wire roundtrip of the
+``stats`` snapshot, Chrome-trace validity, and the invariant the whole
+design rests on — telemetry observes wall clocks only, so enabling it
+leaves every executor's results bit-identical."""
+from __future__ import annotations
+
+import importlib.util
+import json
+import multiprocessing as mp
+import socket
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.mobility import MobilityTrace, poisson_moves
+from repro.models.vgg import VGG5
+from repro.obs import telemetry as obs
+from repro.obs import trace as obs_trace
+from repro.optim.optimizers import sgd
+from repro.optim.schedules import constant
+from repro.sim.edge import make_edges
+from repro.sim.fleet import Fleet, make_fleet_specs
+from repro.sim.mailbox import _from_wire, _to_wire
+from repro.sim.simulator import FleetSimulator
+
+_REPO = Path(__file__).resolve().parents[1]
+
+
+def _load_check_trace():
+    spec = importlib.util.spec_from_file_location(
+        "check_trace", _REPO / "scripts" / "check_trace.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(autouse=True)
+def _telemetry_off_after():
+    yield
+    obs.disable()
+
+
+# -- unit: recording and drain ----------------------------------------------
+
+def test_disabled_is_noop():
+    obs.disable()
+    assert obs.span("x") is obs.span("y")      # shared no-op object
+    obs.count("c")
+    obs.observe("h", 1.0)
+    assert obs.snapshot() is None
+
+
+def test_span_counter_hist_snapshot_semantics():
+    obs.enable(rank=3, process_name="host 3")
+    with obs.span("outer", phase="a"):
+        with obs.span("inner"):
+            pass
+    obs.count("frames", 2)
+    obs.count("frames", 3)
+    obs.observe("wait_s", 0.5)
+    obs.observe("wait_s", 1.5)
+
+    snap = obs.snapshot()
+    assert snap["rank"] == 3 and snap["process_name"] == "host 3"
+    names = snap["events"]["names"]
+    spans = [names[i] for i in snap["events"]["name_idx"]]
+    assert sorted(spans) == ["inner", "outer"]
+    # inner exits first, so it lands first; the attr rides event idx 1
+    assert snap["events"]["attrs"] == {"1": {"phase": "a"}}
+    assert (snap["events"]["dur_ns"] >= 0).all()
+    assert snap["counters"] == {"frames": 5}
+    h = snap["hists"]["wait_s"]
+    assert h["count"] == 2 and h["min"] == 0.5 and h["max"] == 1.5
+    assert snap["dropped"] == 0
+
+    # counters and hists are deltas: drained by the snapshot
+    assert obs.snapshot() is None
+    obs.count("frames", 1)
+    assert obs.snapshot()["counters"] == {"frames": 1}
+
+    # gauges are last-value-wins and persist across drains
+    obs.gauge("depth", 4)
+    assert obs.snapshot()["gauges"] == {"depth": 4.0}
+    assert obs.snapshot()["gauges"] == {"depth": 4.0}
+
+
+def test_spans_merge_across_threads():
+    obs.enable(rank=0)
+    def work():
+        with obs.span("worker_span"):
+            pass
+    t = threading.Thread(target=work, name="worker-thread")
+    t.start()
+    t.join()
+    with obs.span("main_span"):
+        pass
+    snap = obs.snapshot()
+    assert set(snap["events"]["names"]) == {"worker_span", "main_span"}
+    assert "worker-thread" in snap["threads"].values()
+    assert len(set(snap["events"]["tid"])) == 2
+
+
+def test_snapshot_survives_wire_roundtrip():
+    """The snapshot must traverse the FFLY tagged wire tree unchanged —
+    it IS the `stats` message payload (ARCHITECTURE.md §3.6)."""
+    obs.enable(rank=1, process_name="group 1")
+    with obs.span("window.compute", gen=2):
+        pass
+    obs.count("wire.bytes_out", 4096)
+    obs.observe("mailbox.barrier_wait_s", 0.01)
+    snap = obs.snapshot()
+
+    rt = _from_wire(_to_wire({"type": "stats", "snap": snap}))
+    assert rt["type"] == "stats"
+    rts = rt["snap"]
+    assert rts["rank"] == 1 and rts["process_name"] == "group 1"
+    assert list(rts["events"]["names"]) == list(snap["events"]["names"])
+    np.testing.assert_array_equal(rts["events"]["t0_ns"],
+                                  snap["events"]["t0_ns"])
+    assert rts["events"]["attrs"] == {"0": {"gen": 2}}
+    assert rts["counters"]["wire.bytes_out"] == 4096
+    assert rts["hists"]["mailbox.barrier_wait_s"]["count"] == 1
+    assert rts["clock"]["wall_ns"] == snap["clock"]["wall_ns"]
+
+
+def test_chrome_trace_and_summary():
+    """Two ranks' snapshots merge into one valid Chrome trace with one
+    pid lane per rank (coordinator = pid 0) and a digest summary."""
+    obs.enable(rank=obs.COORDINATOR_RANK)
+    with obs.span("coord.window", items=3):
+        pass
+    obs.count("frames", 7)
+    coord_snap = obs.snapshot()
+    obs.enable(rank=1, process_name="group 1")
+    with obs.span("window.compute"):
+        pass
+    obs.observe("mailbox.barrier_wait_s", 0.25)
+    group_snap = obs.snapshot()
+
+    doc = obs_trace.build_chrome_trace([coord_snap, group_snap])
+    checker = _load_check_trace()
+    assert checker.check_trace(doc, require_ranks=2,
+                               require_spans=["coord.window",
+                                              "window.compute"]) == []
+    x_pids = {e["pid"] for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert x_pids == {0, 2}                    # rank -1 -> 0, rank 1 -> 2
+    assert any(e["ph"] == "C" and e["name"] == "frames"
+               for e in doc["traceEvents"])
+    # the checker rejects malformed traces
+    assert checker.check_trace({"traceEvents": [{"ph": "X"}]}) != []
+
+    summary = obs_trace.summarize([coord_snap, group_snap])
+    assert summary["ranks"] == [-1, 1]
+    assert summary["spans"]["coord.window"]["count"] == 1
+    assert summary["counters"] == {"frames": 7}
+    assert summary["hists"]["mailbox.barrier_wait_s"]["p95"] == 0.25
+
+
+# -- integration: the simulator under telemetry ------------------------------
+
+def flat_params(tree):
+    return np.concatenate([np.asarray(x).ravel()
+                           for x in jax.tree.leaves(tree)])
+
+
+def make_sim(*, shards=2, workers=None, hosts=None, num_clients=8,
+             num_edges=4, rounds=2, seed=1, telemetry=False,
+             trace_path=None):
+    edges = make_edges(num_edges, slots=8)
+    specs = make_fleet_specs(num_clients, [e.edge_id for e in edges],
+                             batch_size=8, num_batches=2)
+    fleet = Fleet(VGG5(), sgd(momentum=0.9), specs, split_point=2,
+                  lr_schedule=constant(0.01), max_replicas=4, seed=seed)
+    trace = MobilityTrace(poisson_moves([s.client_id for s in specs],
+                                        [e.edge_id for e in edges],
+                                        rounds, 0.3, seed=seed))
+    return FleetSimulator(fleet, edges, mode="async", shards=shards,
+                          workers=workers, hosts=hosts, trace=trace,
+                          measure_pack=False, telemetry=telemetry,
+                          trace_path=trace_path)
+
+
+def test_serial_telemetry_bit_identity(tmp_path):
+    """Telemetry on vs off on the serial executor: identical rounds and
+    final params, an `obs` summary section, and a valid trace file."""
+    base = make_sim().run(2)
+    assert base.summary().get("obs") is None
+    tp = str(tmp_path / "serial_trace.json")
+    on = make_sim(telemetry=True, trace_path=tp).run(2)
+    assert on.rounds == base.rounds
+    assert (flat_params(on.final_params)
+            == flat_params(base.final_params)).all()
+    rep = on.summary()["obs"]
+    assert rep["ranks"] == [-1]
+    assert {"coord.window", "trainer.train"} <= set(rep["spans"])
+    assert rep["trace_path"] == tp
+    checker = _load_check_trace()
+    with open(tp) as f:
+        assert checker.check_trace(json.load(f), require_ranks=1) == []
+    # telemetry is scoped to the run: collection is off again
+    assert not obs.is_enabled()
+
+
+@pytest.mark.slow
+def test_worker_mesh_telemetry_bit_identity(tmp_path):
+    """2-worker pipe mesh with telemetry: bit-identical to the serial
+    telemetry-off run, with snapshots shipped from every rank over the
+    `stats` record message and merged into one trace."""
+    base = make_sim().run(2)
+    tp = str(tmp_path / "worker_trace.json")
+    on = make_sim(workers=2, telemetry=True, trace_path=tp).run(2)
+    assert on.rounds == base.rounds
+    assert on.migration_summary == base.migration_summary
+    assert (flat_params(on.final_params)
+            == flat_params(base.final_params)).all()
+    rep = on.summary()["obs"]
+    assert rep["ranks"] == [-1, 0, 1]          # coordinator + both groups
+    assert {"window.compute", "coord.window"} <= set(rep["spans"])
+    assert "mailbox.barrier_wait_s" in rep["hists"]
+    checker = _load_check_trace()
+    with open(tp) as f:
+        doc = json.load(f)
+    assert checker.check_trace(
+        doc, require_ranks=3,
+        require_spans=["window.compute", "coord.window"]) == []
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def _mh_rank_main(rank, addresses, trace_path):
+    sim = make_sim(telemetry=True,
+                   trace_path=trace_path if rank == 0 else None)
+    sim.run_multihost(2, rank=rank, listen=addresses[rank],
+                      addresses=addresses)
+
+
+@pytest.mark.slow
+def test_run_multihost_merged_trace(tmp_path):
+    """2-host run_multihost smoke: rank 0 writes one merged trace JSON
+    containing spans from every rank, valid Chrome trace-event format,
+    and results stay bit-identical to the telemetry-off serial run."""
+    base = make_sim().run(2)
+    addresses = {0: ("127.0.0.1", _free_port()),
+                 1: ("127.0.0.1", _free_port())}
+    tp = str(tmp_path / "mh_trace.json")
+    ctx = mp.get_context("spawn")
+    peer = ctx.Process(target=_mh_rank_main, args=(1, addresses, tp),
+                       daemon=True)
+    peer.start()
+    try:
+        sim = make_sim(telemetry=True, trace_path=tp)
+        result = sim.run_multihost(2, rank=0, listen=addresses[0],
+                                   addresses=addresses)
+    finally:
+        peer.join(timeout=120)
+        if peer.is_alive():
+            peer.kill()
+            pytest.fail("rank-1 host did not exit")
+    assert result.rounds == base.rounds
+    assert (flat_params(result.final_params)
+            == flat_params(base.final_params)).all()
+    rep = result.summary()["obs"]
+    assert rep["ranks"] == [0, 1]              # every rank is a host lane
+    checker = _load_check_trace()
+    with open(tp) as f:
+        doc = json.load(f)
+    assert checker.check_trace(
+        doc, require_ranks=2, require_spans=["window.compute"]) == []
