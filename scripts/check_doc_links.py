@@ -1,62 +1,24 @@
 #!/usr/bin/env python3
 """Fail on broken intra-repo links in Markdown docs.
 
-Scans every ``*.md`` under the repo (skipping .git and caches) for
-inline links/images ``[text](target)``, resolves relative targets
-against the containing file, and exits 1 listing any target that does
-not exist. External links (``http(s)://``, ``mailto:``) and pure
-fragments (``#...``) are ignored; a ``path#fragment`` target is checked
-for the path only.
+Thin shim over :mod:`repro.analysis.doclinks` (the doc-link rule of the
+repo's static-analysis pass) so CI invocations and
+``tests/test_docs_links.py`` keep working unchanged.
 
   python scripts/check_doc_links.py [root]
 """
 from __future__ import annotations
 
-import re
 import sys
 from pathlib import Path
 
-# inline [text](target) — target up to the first unescaped ')'; markdown
-# reference-style links are not used in this repo
-_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
-_SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules"}
-_EXTERNAL = ("http://", "https://", "mailto:")
+_REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_REPO / "src"))
 
-
-def iter_md_files(root: Path):
-    for path in sorted(root.rglob("*.md")):
-        if not _SKIP_DIRS.intersection(p.name for p in path.parents):
-            yield path
-
-
-def broken_links(root: Path) -> list:
-    """[(md_file, raw_target), ...] for every unresolvable link."""
-    bad = []
-    for md in iter_md_files(root):
-        for raw in _LINK.findall(md.read_text(encoding="utf-8")):
-            if raw.startswith(_EXTERNAL) or raw.startswith("#"):
-                continue
-            target = raw.split("#", 1)[0]
-            if not target:
-                continue
-            if not (md.parent / target).exists():
-                bad.append((md.relative_to(root), raw))
-    return bad
-
-
-def main(argv=None) -> int:
-    root = Path(argv[1] if argv and len(argv) > 1
-                else Path(__file__).resolve().parent.parent)
-    bad = broken_links(root)
-    for md, raw in bad:
-        print(f"BROKEN LINK  {md}: ({raw})")
-    if bad:
-        print(f"{len(bad)} broken intra-repo link(s)")
-        return 1
-    n = sum(1 for _ in iter_md_files(root))
-    print(f"docs link check OK ({n} markdown files)")
-    return 0
-
+from repro.analysis.doclinks import broken_links, iter_md_files, main  # noqa: E402,F401
 
 if __name__ == "__main__":
-    sys.exit(main(sys.argv))
+    argv = list(sys.argv)
+    if len(argv) < 2:
+        argv.append(str(_REPO))      # default root: the repo itself
+    sys.exit(main(argv))

@@ -2,125 +2,21 @@
 """Validate a merged telemetry trace against the Chrome trace-event
 format (docs/OBSERVABILITY.md §Trace schema).
 
-Checks, exiting 1 with a per-violation listing on failure:
-
-  - top level is ``{"traceEvents": [...]}`` (object form)
-  - every event is an object with a ``ph`` phase field
-  - "X" complete events carry name/ts/dur/pid/tid, dur >= 0, ts is a
-    number (Perfetto rejects events missing any of these)
-  - "M" metadata events carry a known name (process_name / thread_name)
-    and an ``args`` object
-  - "C" counter events carry name/ts/pid and numeric ``args`` values
-  - with ``--require-ranks N``: the trace contains X spans from at
-    least N distinct pid lanes (each simulation rank maps to one pid —
-    a multi-host run missing a rank's spans fails here)
-  - with ``--require-span NAME`` (repeatable): at least one X event
-    with that exact name exists
+Thin shim over :mod:`repro.analysis.tracecheck` (also reachable as
+``python -m repro.analysis --trace FILE``) so CI invocations keep
+working unchanged.
 
   python scripts/check_trace.py fleet_trace.json --require-ranks 3 \
       --require-span window.compute
 """
 from __future__ import annotations
 
-import argparse
-import json
 import sys
+from pathlib import Path
 
-_META_NAMES = {"process_name", "thread_name", "process_sort_index",
-               "thread_sort_index"}
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-
-def _num(v) -> bool:
-    return isinstance(v, (int, float)) and not isinstance(v, bool)
-
-
-def check_trace(doc, require_ranks: int = 0,
-                require_spans=()) -> list:
-    """Return a list of violation strings (empty = valid)."""
-    errs = []
-    if not isinstance(doc, dict) or "traceEvents" not in doc:
-        return ["top level must be an object with a 'traceEvents' key"]
-    events = doc["traceEvents"]
-    if not isinstance(events, list):
-        return ["'traceEvents' must be a list"]
-
-    span_pids = set()
-    span_names = set()
-    n_x = n_m = n_c = 0
-    for i, ev in enumerate(events):
-        where = f"traceEvents[{i}]"
-        if not isinstance(ev, dict):
-            errs.append(f"{where}: not an object")
-            continue
-        ph = ev.get("ph")
-        if ph == "X":
-            n_x += 1
-            for k in ("name", "ts", "dur", "pid", "tid"):
-                if k not in ev:
-                    errs.append(f"{where}: X event missing {k!r}")
-            if not _num(ev.get("ts", 0)):
-                errs.append(f"{where}: ts must be a number")
-            if _num(ev.get("dur", 0)) and ev.get("dur", 0) < 0:
-                errs.append(f"{where}: negative dur {ev['dur']}")
-            if "pid" in ev:
-                span_pids.add(ev["pid"])
-            if "name" in ev:
-                span_names.add(ev["name"])
-        elif ph == "M":
-            n_m += 1
-            if ev.get("name") not in _META_NAMES:
-                errs.append(f"{where}: unknown metadata name "
-                            f"{ev.get('name')!r}")
-            if not isinstance(ev.get("args"), dict):
-                errs.append(f"{where}: M event needs an 'args' object")
-        elif ph == "C":
-            n_c += 1
-            for k in ("name", "ts", "pid"):
-                if k not in ev:
-                    errs.append(f"{where}: C event missing {k!r}")
-            args = ev.get("args")
-            if not isinstance(args, dict) or not all(
-                    _num(v) for v in args.values()):
-                errs.append(f"{where}: C event args must be numeric")
-        else:
-            errs.append(f"{where}: unknown phase {ph!r}")
-
-    if n_x == 0:
-        errs.append("trace contains no X (span) events")
-    if require_ranks and len(span_pids) < require_ranks:
-        errs.append(f"spans cover {len(span_pids)} pid lanes "
-                    f"({sorted(span_pids)}), need >= {require_ranks}")
-    for name in require_spans:
-        if name not in span_names:
-            errs.append(f"required span {name!r} absent "
-                        f"(have {sorted(span_names)})")
-    if not errs:
-        print(f"ok: {n_x} spans / {n_m} metadata / {n_c} counters, "
-              f"pid lanes {sorted(span_pids)}")
-    return errs
-
-
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("trace", help="path to the Chrome trace JSON")
-    ap.add_argument("--require-ranks", type=int, default=0,
-                    help="minimum distinct pid lanes with spans")
-    ap.add_argument("--require-span", action="append", default=[],
-                    metavar="NAME", help="span name that must appear")
-    args = ap.parse_args(argv)
-
-    try:
-        with open(args.trace) as f:
-            doc = json.load(f)
-    except (OSError, json.JSONDecodeError) as e:
-        print(f"{args.trace}: unreadable: {e}", file=sys.stderr)
-        return 1
-
-    errs = check_trace(doc, args.require_ranks, args.require_span)
-    for e in errs:
-        print(f"{args.trace}: {e}", file=sys.stderr)
-    return 1 if errs else 0
-
+from repro.analysis.tracecheck import check_trace, main  # noqa: E402,F401
 
 if __name__ == "__main__":
     sys.exit(main())

@@ -1,0 +1,54 @@
+"""``repro.analysis`` — the repo's own static-analysis pass.
+
+Every prose invariant in docs/ARCHITECTURE.md and docs/OBSERVABILITY.md
+that the test suite cannot economically exercise (import-time hygiene,
+wire-spec/doc sync, clock and lock discipline, deterministic iteration)
+is encoded here as an AST rule and gated in CI and tier-1 tests. Run
+it as ``python -m repro.analysis [--json] [paths]``; see
+docs/ANALYSIS.md for the rule catalogue and suppression syntax.
+
+Stdlib only — this package must import without JAX (it lints the
+modules that enforce that same property).
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Optional
+
+from repro.analysis.config import DEFAULT_CONFIG, make_config
+from repro.analysis.core import (Finding, Project, Rule, UNSUPPRESSABLE,
+                                 run_rules)
+from repro.analysis.doclinks import DocLinks
+from repro.analysis.docsync import WireSpecDrift
+from repro.analysis.rules import (ClockDiscipline, DeterministicIteration,
+                                  JaxImportHygiene, LockDiscipline,
+                                  NoPickleOnWire)
+
+__all__ = [
+    "DEFAULT_CONFIG", "Finding", "Project", "Rule", "UNSUPPRESSABLE",
+    "all_rules", "make_config", "run_analysis", "run_rules",
+]
+
+
+def all_rules() -> List[Rule]:
+    """One instance of every registered rule, in catalogue order."""
+    return [
+        JaxImportHygiene(),
+        NoPickleOnWire(),
+        ClockDiscipline(),
+        DeterministicIteration(),
+        WireSpecDrift(),
+        LockDiscipline(),
+        DocLinks(),
+    ]
+
+
+def run_analysis(root: Path, paths: Iterable[Path] = (),
+                 config: Optional[Dict[str, Any]] = None,
+                 rules: Optional[List[Rule]] = None) -> List[Finding]:
+    """Load the project rooted at ``root`` (its configured source root
+    plus any extra ``paths``) and run the rules. ``config`` holds
+    overrides merged onto :data:`DEFAULT_CONFIG`."""
+    cfg = make_config(config)
+    project = Project.load(Path(root), cfg, extra_paths=paths)
+    return run_rules(project, rules if rules is not None else all_rules())

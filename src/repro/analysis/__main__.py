@@ -1,0 +1,92 @@
+"""CLI: ``python -m repro.analysis [--json] [--json-out FILE] [paths]``.
+
+Exit status 0 = clean, 1 = findings (including parse errors and broken
+suppression markers — an unparseable file or a typo'd marker must fail
+the build, not silently disable nothing).
+
+``--trace FILE`` switches to the trace-schema validator (same engine as
+``scripts/check_trace.py``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis import all_rules, run_analysis
+from repro.analysis import tracecheck
+
+
+def _find_root(start: Path) -> Path:
+    """Nearest ancestor containing the source root (so the tool runs
+    from anywhere inside the repo)."""
+    start = start.resolve()
+    for cand in [start, *start.parents]:
+        if (cand / "src" / "repro").is_dir():
+            return cand
+    return start
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific static analysis "
+                    "(docs/ANALYSIS.md has the rule catalogue)")
+    ap.add_argument("paths", nargs="*",
+                    help="extra files/dirs to lint beyond the source "
+                         "root (e.g. scripts/ tests/)")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: nearest ancestor of cwd "
+                         "containing src/repro)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON on stdout")
+    ap.add_argument("--json-out", metavar="FILE", default=None,
+                    help="also write the JSON findings document to FILE")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    ap.add_argument("--trace", metavar="FILE", default=None,
+                    help="validate a Chrome trace JSON instead of "
+                         "linting source")
+    ap.add_argument("--require-ranks", type=int, default=0,
+                    help="(with --trace) minimum distinct pid lanes")
+    ap.add_argument("--require-span", action="append", default=[],
+                    metavar="NAME",
+                    help="(with --trace) span name that must appear")
+    args = ap.parse_args(argv)
+
+    if args.trace is not None:
+        errs = tracecheck.check_trace_file(
+            args.trace, args.require_ranks, args.require_span)
+        for e in errs:
+            print(f"{args.trace}: {e}", file=sys.stderr)
+        return 1 if errs else 0
+
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.name}: {rule.contract}")
+        return 0
+
+    root = Path(args.root) if args.root else _find_root(Path.cwd())
+    findings = run_analysis(root, paths=[Path(p) for p in args.paths])
+
+    doc = {"root": str(root), "count": len(findings),
+           "findings": [f.as_json() for f in findings]}
+    if args.json_out:
+        Path(args.json_out).write_text(json.dumps(doc, indent=2) + "\n",
+                                       encoding="utf-8")
+    if args.json:
+        print(json.dumps(doc, indent=2))
+    else:
+        for f in findings:
+            print(f.format())
+        if findings:
+            print(f"{len(findings)} finding(s)")
+        else:
+            print("repro-lint OK "
+                  f"({len(all_rules())} rules, no findings)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

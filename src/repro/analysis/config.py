@@ -1,0 +1,110 @@
+"""The one table that scopes every rule to the files whose contract it
+enforces. Paths are repo-root-relative with posix separators; a
+directory entry covers everything under it. Tests override single keys
+to point the rules at fixture trees (``run_analysis(root, config=...)``
+merges onto this table), so nothing here is hard-wired into the rules
+themselves.
+
+Contract sources: docs/ARCHITECTURE.md §1–3 (wire protocol, JAX-free
+shard state, pickle-free messages) and docs/OBSERVABILITY.md (wall
+clocks only, instrumented-name table). docs/ANALYSIS.md documents each
+rule against the contract it encodes.
+"""
+from __future__ import annotations
+
+import copy
+from typing import Any, Dict
+
+DEFAULT_CONFIG: Dict[str, Any] = {
+    # where Python modules live; module names derive from this root
+    "src_root": "src",
+
+    # -- jax-import-hygiene ------------------------------------------------
+    # Modules documented as importable without JAX (ARCHITECTURE §2:
+    # "JAX-free EdgeShard engines", §3.4 bootstrap: "a group only ...
+    # pays the JAX import when its first train directive arrives"; the
+    # telemetry plane is dependency-free by OBSERVABILITY invariant 3).
+    # A trailing ".*" covers every submodule of a package.
+    "jax_free_modules": [
+        "repro.sim.shard",
+        "repro.sim.engine",
+        "repro.sim.mailbox",
+        "repro.sim.trainer",
+        "repro.runtime.transport",
+        "repro.runtime.serialization",
+        "repro.obs",
+        "repro.obs.*",
+    ],
+    # import prefixes that count as "the JAX toolchain"
+    "jax_modules": ["jax", "jaxlib", "flax", "optax"],
+
+    # -- no-pickle-on-wire -------------------------------------------------
+    # pickle is banned in this whole scope; the only exceptions are the
+    # spawn-bootstrap sites carrying explicit allow markers (the wire
+    # protocol itself is pickle-free — ARCHITECTURE §3.3).
+    "pickle_scope": ["src/repro"],
+
+    # -- clock-discipline --------------------------------------------------
+    # within this scope, wall clocks (time.time / datetime.now) may be
+    # read only by the telemetry snapshot's paired (mono_ns, wall_ns)
+    # sample (ARCHITECTURE §3.6 rule 3); benchmarks/examples timing
+    # user-visible elapsed wall time sit outside the contract
+    "wall_clock_scope": ["src/repro"],
+    "wall_clock_allowed": ["src/repro/obs/telemetry.py"],
+    # numerics / replay-side modules where NO process clock of any kind
+    # may be read: timing must come from simulated time alone, or
+    # bit-identity across shard/worker/host counts dies.
+    "pure_sim_modules": [
+        "src/repro/sim/shard.py",
+        "src/repro/sim/fleet.py",
+        "src/repro/sim/async_agg.py",
+        "src/repro/core/fedavg.py",
+        "src/repro/kernels",
+    ],
+
+    # -- deterministic-iteration -------------------------------------------
+    # modules whose iteration order feeds the ordered replay or the
+    # aggregation pipeline (ARCHITECTURE §2 "Numerics replay")
+    "ordered_replay_modules": [
+        "src/repro/sim/simulator.py",
+        "src/repro/sim/fleet.py",
+        "src/repro/sim/async_agg.py",
+    ],
+    # stdlib random is banned everywhere under these scopes (seeded
+    # np.random.Generator / jax.random only)
+    "random_scope": ["src/repro"],
+
+    # -- wire-spec-drift ---------------------------------------------------
+    "architecture_doc": "docs/ARCHITECTURE.md",
+    "observability_doc": "docs/OBSERVABILITY.md",
+    # where the wire-tag codec lives (the closed "__w" tag set)
+    "wire_tag_files": ["src/repro/sim/mailbox.py"],
+    # files allowed to construct protocol messages ({"type": ...})
+    "wire_message_files": [
+        "src/repro/sim/mailbox.py",
+        "src/repro/sim/trainer.py",
+        "src/repro/sim/simulator.py",
+    ],
+    "serialization_file": "src/repro/runtime/serialization.py",
+    # instrumentation scope for the OBSERVABILITY name table
+    "obs_scope": ["src/repro"],
+
+    # -- lock-discipline ---------------------------------------------------
+    # threaded modules whose with-nesting defines the lock order
+    "lock_modules": [
+        "src/repro/runtime/transport.py",
+        "src/repro/sim/mailbox.py",
+        "src/repro/sim/trainer.py",
+        "src/repro/obs/telemetry.py",
+    ],
+
+    # -- doc-links ---------------------------------------------------------
+    "doc_link_root": ".",
+}
+
+
+def make_config(overrides: Dict[str, Any] = None) -> Dict[str, Any]:
+    cfg = copy.deepcopy(DEFAULT_CONFIG)
+    if overrides:
+        cfg.update(copy.deepcopy(overrides))
+    return cfg

@@ -1,0 +1,326 @@
+"""The rule-engine frame of ``repro.analysis``.
+
+A *project* is a parsed snapshot of the repo: every Python file under
+the configured source root (plus any extra paths) loaded once, with its
+AST, its raw lines, and its inline suppression markers. A *rule* walks
+the project and yields *findings*; the engine then drops findings whose
+line carries (or inherits, from a standalone comment line directly
+above) an ``allow`` marker naming that rule, and turns marker problems
+— an unknown rule name, a missing reason — into findings of their own,
+so a typo'd suppression fails the build instead of silently disabling
+nothing.
+
+Suppression syntax (one marker per comment)::
+
+    x = risky_thing()   # repro-lint: allow[rule-name] why this is safe
+    # repro-lint: allow[rule-a,rule-b] a marker line suppresses the
+    y = other_thing()   #                next statement line
+
+Finding IDs are stable across unrelated edits: they hash the rule name,
+the file path, and the *text* of the flagged line (not its number),
+with an occurrence counter for identical lines.
+"""
+from __future__ import annotations
+
+import ast
+import hashlib
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Tuple
+
+_MARKER = re.compile(
+    r"#\s*repro-lint:\s*allow\[([A-Za-z0-9_\-, ]*)\]\s*(.*?)\s*$")
+
+#: rules whose findings cannot be suppressed (a broken marker must not
+#: be able to wave itself through; an unparseable file has no readable
+#: markers at all)
+UNSUPPRESSABLE = {"parse-error", "bad-suppression"}
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str            # repo-root-relative, posix separators
+    line: int            # 1-based; 0 = whole file
+    message: str
+    fid: str = ""
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: {self.rule} [{self.fid}] {self.message}"
+
+    def as_json(self) -> Dict[str, Any]:
+        return {"id": self.fid, "rule": self.rule, "path": self.path,
+                "line": self.line, "message": self.message}
+
+
+@dataclass
+class Suppression:
+    line: int            # line the marker comment sits on
+    rules: Tuple[str, ...]
+    reason: str
+    used: bool = False
+
+
+@dataclass
+class PyFile:
+    path: str                          # repo-relative posix path
+    text: str
+    tree: Optional[ast.AST]
+    parse_error: Optional[str]
+    suppressions: List[Suppression] = field(default_factory=list)
+
+    @property
+    def lines(self) -> List[str]:
+        return self.text.splitlines()
+
+    def line_text(self, lineno: int) -> str:
+        lines = self.lines
+        return lines[lineno - 1] if 0 < lineno <= len(lines) else ""
+
+    def _covering(self, lineno: int) -> Iterator[Suppression]:
+        """Markers that apply to ``lineno``: one on the line itself, or
+        a chain of standalone comment lines ending directly above it."""
+        by_line = {s.line: s for s in self.suppressions}
+        if lineno in by_line:
+            yield by_line[lineno]
+        probe = lineno - 1
+        lines = self.lines
+        while probe >= 1 and probe <= len(lines) \
+                and lines[probe - 1].lstrip().startswith("#"):
+            if probe in by_line:
+                yield by_line[probe]
+            probe -= 1
+
+    def allows(self, rule: str, lineno: int) -> bool:
+        if rule in UNSUPPRESSABLE:
+            return False
+        hit = False
+        for s in self._covering(lineno):
+            if rule in s.rules:
+                s.used = True
+                hit = True
+        return hit
+
+
+def parse_suppressions(text: str) -> List[Suppression]:
+    """Markers live in *comments* only — tokenize (rather than a line
+    scan) so marker-shaped text inside string literals and docstrings
+    is never mistaken for a suppression."""
+    out = []
+    try:
+        tokens = list(tokenize.generate_tokens(
+            io.StringIO(text).readline))
+    except (tokenize.TokenError, SyntaxError, ValueError):
+        return out        # unparseable file => parse-error finding
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = _MARKER.search(tok.string)
+        if m:
+            rules = tuple(r.strip() for r in m.group(1).split(",")
+                          if r.strip())
+            out.append(Suppression(line=tok.start[0], rules=rules,
+                                   reason=m.group(2).strip()))
+    return out
+
+
+class Project:
+    """Everything a rule can look at, loaded once."""
+
+    def __init__(self, root: Path, config: Dict[str, Any]):
+        self.root = Path(root).resolve()
+        self.config = config
+        self.py: Dict[str, PyFile] = {}
+        self._texts: Dict[str, Optional[str]] = {}
+
+    # -- loading -----------------------------------------------------------
+
+    @classmethod
+    def load(cls, root: Path, config: Dict[str, Any],
+             extra_paths: Iterable[Path] = ()) -> "Project":
+        proj = cls(root, config)
+        roots = [proj.root / config["src_root"]]
+        for p in extra_paths:
+            p = Path(p)
+            roots.append(p if p.is_absolute() else proj.root / p)
+        seen = set()
+        for base in roots:
+            if base.is_file() and base.suffix == ".py":
+                files: Iterable[Path] = [base]
+            elif base.is_dir():
+                files = sorted(base.rglob("*.py"))
+            else:
+                continue
+            for f in files:
+                rel = proj._rel(f)
+                if rel in seen or "__pycache__" in rel:
+                    continue
+                seen.add(rel)
+                proj._load_py(f, rel)
+        return proj
+
+    def _rel(self, path: Path) -> str:
+        path = Path(path).resolve()
+        try:
+            return path.relative_to(self.root).as_posix()
+        except ValueError:
+            return path.as_posix()
+
+    def _load_py(self, path: Path, rel: str) -> None:
+        try:
+            text = path.read_text(encoding="utf-8")
+        except (OSError, UnicodeDecodeError) as e:
+            self.py[rel] = PyFile(rel, "", None, f"unreadable: {e}")
+            return
+        try:
+            tree: Optional[ast.AST] = ast.parse(text, filename=rel)
+            err = None
+        except SyntaxError as e:
+            tree, err = None, f"{e.msg} (line {e.lineno})"
+        self.py[rel] = PyFile(rel, text, tree, err,
+                              parse_suppressions(text))
+
+    # -- lookups -----------------------------------------------------------
+
+    def read_text(self, rel: str) -> Optional[str]:
+        """A non-Python file (docs, configs) by repo-relative path."""
+        if rel not in self._texts:
+            p = self.root / rel
+            try:
+                self._texts[rel] = p.read_text(encoding="utf-8")
+            except OSError:
+                self._texts[rel] = None
+        return self._texts[rel]
+
+    def files_under(self, scopes: Iterable[str]) -> List[PyFile]:
+        """Python files whose path sits under any of ``scopes`` (each a
+        repo-relative file or directory prefix)."""
+        out = []
+        for rel in sorted(self.py):
+            for scope in scopes:
+                scope = scope.rstrip("/")
+                if rel == scope or rel.startswith(scope + "/"):
+                    out.append(self.py[rel])
+                    break
+        return out
+
+
+class Rule:
+    """One named invariant. ``run`` yields raw findings; the engine
+    applies suppression filtering afterwards."""
+
+    name: str = ""
+    contract: str = ""          # one-line statement of the invariant
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+def _finding_ids(findings: List[Finding]) -> List[Finding]:
+    seen: Dict[str, int] = {}
+    out = []
+    for f in findings:
+        key = f"{f.rule}|{f.path}|{f.message}"
+        n = seen.get(key, 0)
+        seen[key] = n + 1
+        digest = hashlib.sha1(f"{key}|{n}".encode()).hexdigest()[:10]
+        out.append(Finding(f.rule, f.path, f.line, f.message, digest))
+    return out
+
+
+def run_rules(project: Project, rules: Iterable[Rule]) -> List[Finding]:
+    """Run every rule, apply suppressions, then police the markers
+    themselves (unknown rule name / missing reason => findings)."""
+    known = {r.name for r in rules} | UNSUPPRESSABLE
+    findings: List[Finding] = []
+
+    for pf in project.py.values():
+        if pf.parse_error is not None:
+            findings.append(Finding(
+                "parse-error", pf.path, 0,
+                f"file does not parse: {pf.parse_error}"))
+
+    for rule in rules:
+        for f in rule.run(project):
+            pf = project.py.get(f.path)
+            if pf is not None and pf.allows(f.rule, f.line):
+                continue
+            findings.append(f)
+
+    for pf in project.py.values():
+        for s in pf.suppressions:
+            unknown = [r for r in s.rules if r not in known]
+            for r in unknown:
+                findings.append(Finding(
+                    "bad-suppression", pf.path, s.line,
+                    f"suppression names unknown rule {r!r} — a typo here "
+                    "silently disables nothing; fix the rule name"))
+            if not s.rules:
+                findings.append(Finding(
+                    "bad-suppression", pf.path, s.line,
+                    "suppression with an empty rule list"))
+            if not s.reason:
+                findings.append(Finding(
+                    "bad-suppression", pf.path, s.line,
+                    "suppression without a reason — every allow marker "
+                    "must say why the exception is safe"))
+
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+    return _finding_ids(findings)
+
+
+# -- small AST helpers shared by the rules ---------------------------------
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def module_scope_nodes(tree: ast.AST) -> Iterator[ast.stmt]:
+    """Statements executed at import time: module body descended through
+    If/Try/With blocks, but never into function or class-method bodies
+    (class bodies DO run at import, so they are descended). ``if
+    TYPE_CHECKING:`` guards are skipped — they never run."""
+    def is_type_checking(test: ast.expr) -> bool:
+        return (isinstance(test, ast.Name) and test.id == "TYPE_CHECKING") \
+            or (isinstance(test, ast.Attribute)
+                and test.attr == "TYPE_CHECKING")
+
+    def walk(body: Iterable[ast.stmt]) -> Iterator[ast.stmt]:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            yield node
+            if isinstance(node, ast.If):
+                if not is_type_checking(node.test):
+                    yield from walk(node.body)
+                yield from walk(node.orelse)
+            elif isinstance(node, ast.Try):
+                yield from walk(node.body)
+                for h in node.handlers:
+                    yield from walk(h.body)
+                yield from walk(node.orelse)
+                yield from walk(node.finalbody)
+            elif isinstance(node, (ast.With, ast.ClassDef)):
+                yield from walk(node.body)
+
+    yield from walk(getattr(tree, "body", []))
+
+
+def parent_map(tree: ast.AST) -> Dict[ast.AST, ast.AST]:
+    parents: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents

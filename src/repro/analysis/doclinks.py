@@ -1,0 +1,93 @@
+"""doc-links: no broken intra-repo links in Markdown docs.
+
+Both a :class:`~repro.analysis.core.Rule` (so ``python -m
+repro.analysis`` and the tier-1 suite gate on it) and the engine behind
+``scripts/check_doc_links.py``, whose ``main`` lives here so the script
+is a shim.
+
+Scans every ``*.md`` under the configured root (skipping .git and
+caches) for inline links/images ``[text](target)``, resolves relative
+targets against the containing file, and reports any target that does
+not exist. External links (``http(s)://``, ``mailto:``) and pure
+fragments (``#...``) are ignored; a ``path#fragment`` target is checked
+for the path only.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import Iterator, List, Tuple
+
+from repro.analysis.core import Finding, Project, Rule
+
+# inline [text](target) — target up to the first unescaped ')'; markdown
+# reference-style links are not used in this repo
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules"}
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def iter_md_files(root: Path) -> Iterator[Path]:
+    for path in sorted(Path(root).rglob("*.md")):
+        if not _SKIP_DIRS.intersection(p.name for p in path.parents):
+            yield path
+
+
+def broken_links_with_lines(root: Path) -> List[Tuple[Path, str, int]]:
+    """[(md_file_rel, raw_target, line), ...] for every unresolvable
+    link."""
+    root = Path(root)
+    bad = []
+    for md in iter_md_files(root):
+        for i, line in enumerate(
+                md.read_text(encoding="utf-8").splitlines(), start=1):
+            for raw in _LINK.findall(line):
+                if raw.startswith(_EXTERNAL) or raw.startswith("#"):
+                    continue
+                target = raw.split("#", 1)[0]
+                if not target:
+                    continue
+                if not (md.parent / target).exists():
+                    bad.append((md.relative_to(root), raw, i))
+    return bad
+
+
+def broken_links(root: Path) -> list:
+    """[(md_file, raw_target), ...] — the original script API."""
+    return [(md, raw) for md, raw, _ in broken_links_with_lines(root)]
+
+
+class DocLinks(Rule):
+    name = "doc-links"
+    contract = ("every intra-repo Markdown link resolves to an existing "
+                "file — docs that point at moved/renamed files are "
+                "stale docs")
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        root = project.root / project.config["doc_link_root"]
+        for md, raw, line in broken_links_with_lines(root):
+            rel = (root / md).resolve()
+            try:
+                path = rel.relative_to(project.root).as_posix()
+            except ValueError:
+                path = str(md)
+            yield Finding(self.name, path, line,
+                          f"broken intra-repo link ({raw})")
+
+
+def main(argv=None) -> int:
+    """The ``scripts/check_doc_links.py`` entry point (output format is
+    load-bearing: tests/test_docs_links.py matches it)."""
+    if argv is None:
+        argv = sys.argv
+    root = Path(argv[1]) if len(argv) > 1 else Path.cwd()
+    bad = broken_links(root)
+    for md, raw in bad:
+        print(f"BROKEN LINK  {md}: ({raw})")
+    if bad:
+        print(f"{len(bad)} broken intra-repo link(s)")
+        return 1
+    n = sum(1 for _ in iter_md_files(root))
+    print(f"docs link check OK ({n} markdown files)")
+    return 0

@@ -1,0 +1,158 @@
+"""Module-level import graph over the project's own source tree.
+
+``build_graph`` maps every module under the source root to the set of
+*project-internal* modules its import triggers at load time, plus the
+set of external top-level imports it performs. Only module-scope
+imports count — a function-local ``import jax`` is the sanctioned lazy
+pattern (e.g. the trainer paying the JAX bill only when its first train
+directive arrives) and never taints the importer. ``if TYPE_CHECKING:``
+blocks are skipped.
+
+Importing ``a.b.c`` also executes ``a`` and ``a.b`` (their
+``__init__.py``), so package ancestors are edges too — that is exactly
+how an eager package ``__init__`` drags JAX into a leaf module that
+never asked for it.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.core import Project, module_scope_nodes
+
+
+@dataclass
+class ModuleInfo:
+    name: str
+    path: str                               # repo-relative posix path
+    #: internal dep -> first line importing it (package-ancestor edges
+    #: use the importer's line; a module's own ancestors use line 1)
+    deps: Dict[str, int] = field(default_factory=dict)
+    #: external dotted names imported at module scope -> first line
+    external: Dict[str, int] = field(default_factory=dict)
+
+
+def module_name(rel_path: str, src_root: str) -> Optional[str]:
+    """``src/repro/sim/shard.py`` -> ``repro.sim.shard``;
+    ``.../__init__.py`` names the package itself."""
+    prefix = src_root.rstrip("/") + "/"
+    if not rel_path.startswith(prefix) or not rel_path.endswith(".py"):
+        return None
+    parts = rel_path[len(prefix):-3].split("/")
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts) if parts else None
+
+
+def _ancestors(name: str) -> List[str]:
+    parts = name.split(".")
+    return [".".join(parts[:i]) for i in range(1, len(parts))]
+
+
+def build_graph(project: Project) -> Dict[str, ModuleInfo]:
+    src_root = project.config["src_root"]
+    modules: Dict[str, ModuleInfo] = {}
+    for rel, pf in project.py.items():
+        name = module_name(rel, src_root)
+        if name:
+            modules[name] = ModuleInfo(name=name, path=rel)
+
+    def add_dep(info: ModuleInfo, target: str, line: int) -> None:
+        """Record ``target`` plus every existing package ancestor whose
+        ``__init__`` will run on the way down."""
+        for anc in _ancestors(target) + [target]:
+            if anc in modules and anc != info.name:
+                info.deps.setdefault(anc, line)
+
+    for name, info in modules.items():
+        pf = project.py[info.path]
+        if pf.tree is None:
+            continue
+        # importing this module first runs its own package __init__s
+        for anc in _ancestors(name):
+            if anc in modules:
+                info.deps.setdefault(anc, 1)
+        for node in module_scope_nodes(pf.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    resolved = _resolvable_prefix(alias.name, modules)
+                    if resolved:
+                        add_dep(info, resolved, node.lineno)
+                    else:
+                        info.external.setdefault(alias.name, node.lineno)
+            elif isinstance(node, ast.ImportFrom):
+                base = _from_base(node, name)
+                if base is None:
+                    continue
+                resolved = _resolvable_prefix(base, modules)
+                if resolved:
+                    add_dep(info, resolved, node.lineno)
+                    for alias in node.names:
+                        sub = f"{base}.{alias.name}"
+                        if sub in modules:
+                            add_dep(info, sub, node.lineno)
+                else:
+                    info.external.setdefault(base, node.lineno)
+    return modules
+
+
+def _from_base(node: ast.ImportFrom, importer: str) -> Optional[str]:
+    if node.level == 0:
+        return node.module
+    parts = importer.split(".")
+    # ``from . import x`` in a module a.b.c: level 1 => package a.b
+    base_parts = parts[:len(parts) - node.level]
+    if node.module:
+        base_parts.append(node.module)
+    return ".".join(base_parts) if base_parts else None
+
+
+def _resolvable_prefix(name: str, modules: Dict[str, ModuleInfo]
+                       ) -> Optional[str]:
+    """Longest prefix of ``name`` that is a project module (``import
+    repro.sim.shard`` resolves even though ``repro.sim`` alone is also a
+    module)."""
+    parts = name.split(".")
+    for i in range(len(parts), 0, -1):
+        cand = ".".join(parts[:i])
+        if cand in modules:
+            return cand
+    return None
+
+
+def taints(info: ModuleInfo, jax_prefixes: List[str]
+           ) -> Optional[Tuple[str, int]]:
+    """(imported name, line) if this module imports the JAX toolchain at
+    module scope."""
+    for ext, line in sorted(info.external.items(), key=lambda kv: kv[1]):
+        top = ext.split(".")[0]
+        if top in jax_prefixes:
+            return ext, line
+    return None
+
+
+def find_taint_chain(start: str, modules: Dict[str, ModuleInfo],
+                     jax_prefixes: List[str]
+                     ) -> Optional[Tuple[List[str], str, int]]:
+    """BFS from ``start`` over module-level deps; returns the shortest
+    ``([start, ..., tainted_module], jax_name, line)`` chain to a module
+    that imports JAX at load time, or None if the subgraph is clean."""
+    if start not in modules:
+        return None
+    parent: Dict[str, Optional[str]] = {start: None}
+    queue = [start]
+    while queue:
+        cur = queue.pop(0)
+        info = modules[cur]
+        hit = taints(info, jax_prefixes)
+        if hit is not None:
+            chain = [cur]
+            while parent[chain[-1]] is not None:
+                chain.append(parent[chain[-1]])
+            return list(reversed(chain)), hit[0], hit[1]
+        for dep in sorted(info.deps):
+            if dep not in parent:
+                parent[dep] = cur
+                queue.append(dep)
+    return None

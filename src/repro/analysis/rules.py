@@ -1,0 +1,389 @@
+"""The AST rules: every prose invariant from the architecture docs as a
+machine-checked gate. Each rule's ``contract`` line points at the
+document that makes it normative; docs/ANALYSIS.md is the catalogue.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.analysis import imports as imports_lib
+from repro.analysis.core import (Finding, Project, Rule, dotted_name,
+                                 parent_map)
+
+
+# ---------------------------------------------------------------------------
+# jax-import-hygiene
+# ---------------------------------------------------------------------------
+
+class JaxImportHygiene(Rule):
+    name = "jax-import-hygiene"
+    contract = ("modules declared JAX-free (ARCHITECTURE §2/§3.4: shard "
+                "engines, mailbox, transport, serialization, telemetry) "
+                "must not transitively import jax at module load; "
+                "function-local lazy imports are the sanctioned pattern")
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        modules = imports_lib.build_graph(project)
+        declared: List[str] = []
+        for pat in project.config["jax_free_modules"]:
+            if pat.endswith(".*"):
+                prefix = pat[:-2]
+                declared.extend(m for m in modules
+                                if m.startswith(prefix + "."))
+            elif pat in modules:
+                declared.append(pat)
+        jax = list(project.config["jax_modules"])
+        for mod in sorted(set(declared)):
+            hit = imports_lib.find_taint_chain(mod, modules, jax)
+            if hit is None:
+                continue
+            chain, jax_name, jax_line = hit
+            tainted = modules[chain[-1]]
+            if len(chain) == 1:
+                where, line = tainted.path, jax_line
+                msg = (f"{mod} is declared JAX-free but imports "
+                       f"{jax_name!r} at module scope")
+            else:
+                # anchor at the first hop out of the declared module
+                where = modules[mod].path
+                line = modules[mod].deps.get(chain[1], 1)
+                msg = (f"{mod} is declared JAX-free but reaches "
+                       f"{jax_name!r} at import time via "
+                       f"{' -> '.join(chain)} "
+                       f"({tainted.path}:{jax_line})")
+            yield Finding(self.name, where, line, msg)
+
+
+# ---------------------------------------------------------------------------
+# no-pickle-on-wire
+# ---------------------------------------------------------------------------
+
+class NoPickleOnWire(Rule):
+    name = "no-pickle-on-wire"
+    contract = ("the wire protocol is pickle-free (ARCHITECTURE §3.3); "
+                "pickle appears only at spawn-bootstrap sites carrying an "
+                "allow marker with a reason")
+
+    _attrs = {"dumps", "loads", "dump", "load", "Pickler", "Unpickler"}
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        for pf in project.files_under(project.config["pickle_scope"]):
+            if pf.tree is None:
+                continue
+            for node in ast.walk(pf.tree):
+                if isinstance(node, ast.Import):
+                    for alias in node.names:
+                        if alias.name.split(".")[0] == "pickle":
+                            yield Finding(
+                                self.name, pf.path, node.lineno,
+                                "import of pickle — forbidden outside "
+                                "marker-allowed spawn-bootstrap sites")
+                elif isinstance(node, ast.ImportFrom):
+                    if node.level == 0 and node.module \
+                            and node.module.split(".")[0] == "pickle":
+                        yield Finding(
+                            self.name, pf.path, node.lineno,
+                            "import from pickle — forbidden outside "
+                            "marker-allowed spawn-bootstrap sites")
+                elif isinstance(node, ast.Call):
+                    dn = dotted_name(node.func)
+                    if dn and dn.split(".")[0] == "pickle" \
+                            and dn.split(".")[-1] in self._attrs:
+                        yield Finding(
+                            self.name, pf.path, node.lineno,
+                            f"call to {dn} — pickle bytes must never "
+                            "form a wire payload")
+
+
+# ---------------------------------------------------------------------------
+# clock-discipline
+# ---------------------------------------------------------------------------
+
+_WALL_CALLS = re.compile(
+    r"^(time\.(time|time_ns)"
+    r"|(datetime\.)?(datetime|date)\.(now|utcnow|today))$")
+_ANY_CLOCK = {"time", "time_ns", "monotonic", "monotonic_ns",
+              "perf_counter", "perf_counter_ns", "process_time",
+              "process_time_ns", "thread_time", "thread_time_ns"}
+
+
+class ClockDiscipline(Rule):
+    name = "clock-discipline"
+    contract = ("telemetry observes wall clocks only through the paired "
+                "(mono_ns, wall_ns) sample in obs/telemetry.py "
+                "(ARCHITECTURE §3.6 rule 3); pure-simulation modules may "
+                "read no process clock at all — simulated time is the "
+                "only time there")
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        allowed = set(project.config["wall_clock_allowed"])
+        pure = project.config["pure_sim_modules"]
+        pure_files = {pf.path for pf in project.files_under(pure)}
+        for pf in project.files_under(project.config["wall_clock_scope"]):
+            if pf.tree is None:
+                continue
+            is_pure = pf.path in pure_files
+            for node in ast.walk(pf.tree):
+                if isinstance(node, ast.ImportFrom) and node.module in (
+                        "time", "datetime") and node.level == 0:
+                    names = ", ".join(a.name for a in node.names)
+                    yield Finding(
+                        self.name, pf.path, node.lineno,
+                        f"'from {node.module} import {names}' hides clock "
+                        "reads from this checker — use the qualified "
+                        f"{node.module}.<fn>() form")
+                    continue
+                if not isinstance(node, ast.Call):
+                    continue
+                dn = dotted_name(node.func)
+                if dn is None:
+                    continue
+                if _WALL_CALLS.match(dn) and pf.path not in allowed:
+                    yield Finding(
+                        self.name, pf.path, node.lineno,
+                        f"wall-clock read {dn}() — only the telemetry "
+                        "snapshot's paired clock sample may read wall "
+                        "time; use time.monotonic*/perf_counter* for "
+                        "durations")
+                elif is_pure and dn.startswith("time.") \
+                        and dn.split(".", 1)[1] in _ANY_CLOCK:
+                    yield Finding(
+                        self.name, pf.path, node.lineno,
+                        f"process-clock read {dn}() in a pure-simulation "
+                        "module — timing must derive from simulated time "
+                        "or bit-identity across shard/worker/host counts "
+                        "breaks")
+
+
+# ---------------------------------------------------------------------------
+# deterministic-iteration
+# ---------------------------------------------------------------------------
+
+#: reducers whose result does not depend on iteration order (min/max
+#: over a total order, boolean any/all, counting, set/dict building)
+_ORDER_FREE_CALLS = {"sorted", "min", "max", "any", "all", "len", "set",
+                     "frozenset", "dict"}
+_LEGACY_NP_RANDOM = {"seed", "rand", "randn", "randint", "random",
+                     "random_sample", "choice", "shuffle", "permutation",
+                     "uniform", "normal", "standard_normal", "get_state",
+                     "set_state", "RandomState"}
+
+
+class DeterministicIteration(Rule):
+    name = "deterministic-iteration"
+    contract = ("replay and aggregation order must be a pure function of "
+                "simulated state (ARCHITECTURE §2 'Numerics replay'): no "
+                "iteration over sets, no un-sorted() dict iteration whose "
+                "order can reach ordered state, and no stdlib/legacy "
+                "global random anywhere — seeded np.random.Generator or "
+                "jax.random only")
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        yield from self._random_bans(project)
+        scopes = project.config["ordered_replay_modules"]
+        for pf in project.files_under(scopes):
+            if pf.tree is None:
+                continue
+            parents = parent_map(pf.tree)
+            for node in ast.walk(pf.tree):
+                if isinstance(node, ast.For):
+                    yield from self._check_iter(pf, node.iter,
+                                                "for-loop", node.lineno)
+                elif isinstance(node, (ast.ListComp, ast.GeneratorExp,
+                                       ast.SetComp, ast.DictComp)):
+                    yield from self._check_comp(pf, node, parents)
+
+    # -- helpers -----------------------------------------------------------
+
+    def _check_comp(self, pf, comp, parents) -> Iterator[Finding]:
+        # dict/set comprehensions build unordered mappings: the result
+        # is the same mapping whatever the iteration order, so only
+        # sequence-shaped comprehensions can leak order
+        ordered = isinstance(comp, (ast.ListComp, ast.GeneratorExp))
+        if isinstance(comp, ast.GeneratorExp):
+            parent = parents.get(comp)
+            if isinstance(parent, ast.Call):
+                fn = dotted_name(parent.func)
+                if fn and fn.split(".")[-1] in _ORDER_FREE_CALLS:
+                    ordered = False
+        for gen in comp.generators:
+            if ordered:
+                yield from self._check_iter(pf, gen.iter, "comprehension",
+                                            gen.iter.lineno)
+            else:
+                # set iteration is still flagged: even an order-free
+                # consumer of floats (sum) or ties (min key) can differ
+                yield from self._check_set_only(pf, gen.iter)
+
+    def _check_iter(self, pf, it, what: str, line: int) -> Iterator[Finding]:
+        yield from self._check_set_only(pf, it)
+        if isinstance(it, ast.Call) and isinstance(it.func, ast.Attribute) \
+                and it.func.attr in ("items", "keys", "values") \
+                and not it.args and not it.keywords:
+            yield Finding(
+                self.name, pf.path, line,
+                f"{what} over .{it.func.attr}() in an ordered-replay "
+                "module without sorted() — wrap in sorted(...) or carry "
+                "an allow marker explaining why insertion order is "
+                "deterministic here")
+
+    def _check_set_only(self, pf, it) -> Iterator[Finding]:
+        flagged = None
+        if isinstance(it, (ast.Set, ast.SetComp)):
+            flagged = "a set literal/comprehension"
+        elif isinstance(it, ast.Call):
+            fn = dotted_name(it.func)
+            if fn in ("set", "frozenset"):
+                flagged = f"{fn}(...)"
+        if flagged:
+            yield Finding(
+                self.name, pf.path, it.lineno,
+                f"iteration over {flagged} — set order is hash-seed "
+                "dependent and differs across processes; sort it or use "
+                "an ordered container")
+
+    def _random_bans(self, project: Project) -> Iterator[Finding]:
+        for pf in project.files_under(project.config["random_scope"]):
+            if pf.tree is None:
+                continue
+            for node in ast.walk(pf.tree):
+                if isinstance(node, ast.Import):
+                    for alias in node.names:
+                        if alias.name == "random":
+                            yield Finding(
+                                self.name, pf.path, node.lineno,
+                                "stdlib random is banned — use a seeded "
+                                "np.random.Generator or jax.random")
+                elif isinstance(node, ast.ImportFrom):
+                    if node.level == 0 and node.module == "random":
+                        yield Finding(
+                            self.name, pf.path, node.lineno,
+                            "stdlib random is banned — use a seeded "
+                            "np.random.Generator or jax.random")
+                elif isinstance(node, ast.Attribute):
+                    dn = dotted_name(node)
+                    if dn and re.match(
+                            r"^(np|numpy)\.random\.(\w+)$", dn) \
+                            and dn.split(".")[-1] in _LEGACY_NP_RANDOM:
+                        yield Finding(
+                            self.name, pf.path, node.lineno,
+                            f"legacy global {dn} — the global numpy RNG "
+                            "is cross-module shared state; use a seeded "
+                            "np.random.Generator")
+
+
+# ---------------------------------------------------------------------------
+# lock-discipline
+# ---------------------------------------------------------------------------
+
+class LockDiscipline(Rule):
+    name = "lock-discipline"
+    contract = ("locks are held via with-blocks only (no bare acquire/"
+                "release to leak on an exception path), and the lock-"
+                "ordering graph derived from with-nesting across the "
+                "threaded modules must be cycle-free")
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        edges: Dict[str, Dict[str, Tuple[str, int]]] = {}
+        for pf in project.files_under(project.config["lock_modules"]):
+            if pf.tree is None:
+                continue
+            yield from self._bare_calls(pf)
+            self._collect_edges(pf, edges)
+        yield from self._cycles(edges)
+
+    @staticmethod
+    def _is_lock_expr(expr: ast.expr) -> Optional[str]:
+        dn = dotted_name(expr)
+        if dn and "lock" in dn.split(".")[-1].lower():
+            return dn
+        return None
+
+    def _bare_calls(self, pf) -> Iterator[Finding]:
+        for node in ast.walk(pf.tree):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in ("acquire", "release") \
+                    and self._is_lock_expr(node.func.value):
+                yield Finding(
+                    self.name, pf.path, node.lineno,
+                    f"bare .{node.func.attr}() on "
+                    f"{dotted_name(node.func.value)} — hold locks via "
+                    "'with', so no exception path can leak a held lock")
+
+    def _lock_node(self, pf, expr: ast.expr,
+                   cls: Optional[str]) -> Optional[str]:
+        dn = self._is_lock_expr(expr)
+        if dn is None:
+            return None
+        if dn.startswith("self.") and cls:
+            # instance locks are per-class identities
+            return f"{pf.path}:{cls}.{dn[5:]}"
+        # module-level locks go by bare terminal name so ``b.x_lock``
+        # in one file and ``x_lock`` in its defining module unify —
+        # conservatively merging same-named globals across files
+        return dn.split(".")[-1]
+
+    def _collect_edges(self, pf, edges) -> None:
+        def walk(node, stack: List[str], cls: Optional[str]) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.ClassDef):
+                    walk(child, stack, child.name)
+                    continue
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef, ast.Lambda)):
+                    # a fresh frame: lexical nesting does not cross a
+                    # function boundary (the inner function runs later)
+                    walk(child, [], cls)
+                    continue
+                pushed = 0
+                if isinstance(child, (ast.With, ast.AsyncWith)):
+                    for item in child.items:
+                        ln = self._lock_node(pf, item.context_expr, cls)
+                        if ln is not None:
+                            if stack:
+                                edges.setdefault(stack[-1], {})\
+                                    .setdefault(ln, (pf.path,
+                                                     child.lineno))
+                            stack.append(ln)
+                            pushed += 1
+                walk(child, stack, cls)
+                for _ in range(pushed):
+                    stack.pop()
+
+        walk(pf.tree, [], None)
+
+    def _cycles(self, edges) -> Iterator[Finding]:
+        WHITE, GREY, BLACK = 0, 1, 2
+        color = {n: WHITE for n in edges}
+        for tgts in edges.values():
+            for t in tgts:
+                color.setdefault(t, WHITE)
+
+        def dfs(node, path) -> Optional[List[str]]:
+            color[node] = GREY
+            for nxt in sorted(edges.get(node, {})):
+                if color[nxt] == GREY:
+                    return path[path.index(nxt):] + [nxt] \
+                        if nxt in path else [node, nxt]
+                if color[nxt] == WHITE:
+                    cyc = dfs(nxt, path + [nxt])
+                    if cyc:
+                        return cyc
+            color[node] = BLACK
+            return None
+
+        for node in sorted(color):
+            if color[node] == WHITE:
+                cyc = dfs(node, [node])
+                if cyc:
+                    a, b = cyc[0], cyc[1]
+                    path, line = edges[a][b]
+                    yield Finding(
+                        self.name, path, line,
+                        "lock-ordering cycle: " + " -> ".join(cyc)
+                        + " — two threads taking these locks in "
+                        "opposite orders can deadlock")
+                    return

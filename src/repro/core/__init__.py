@@ -1,4 +1,29 @@
 """FedFly core: split training, FedAvg, checkpointing, migration,
-mobility traces, and the synchronous round scheduler."""
-from repro.core import (checkpoint, fedavg, migration, mobility, scheduler,  # noqa: F401
-                        serve_migration, split)
+mobility traces, and the synchronous round scheduler.
+
+Submodules load lazily (PEP 562): most of them import JAX, and an
+eager package ``__init__`` would drag the toolchain into every process
+that merely touches ``repro.core`` on the way to a JAX-free leaf —
+including the spawned shard workers that must stay lightweight. Lazy
+loading also dissolves the old ``repro.runtime.cluster`` <->
+``repro.core.scheduler`` import-order trap: nothing imports scheduler
+until someone asks for it.
+"""
+from __future__ import annotations
+
+import importlib
+
+_SUBMODULES = ("checkpoint", "fedavg", "migration", "mobility",
+               "scheduler", "serve_migration", "split")
+
+__all__ = list(_SUBMODULES)
+
+
+def __getattr__(name: str):
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.core.{name}")
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_SUBMODULES))

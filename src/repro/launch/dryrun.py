@@ -167,7 +167,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     E = mesh.devices.shape[0] if multi_pod else 0
     n_dev = mesh.devices.size
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     result: Dict[str, Any] = {
         "arch": arch, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
@@ -234,9 +234,9 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             lowered = jitted.lower(p_spec, c_spec, batch_spec["tokens"],
                                    SDS((), jnp.int32))
 
-        t_lower = time.time()
+        t_lower = time.perf_counter()
         compiled = lowered.compile()
-        t_compile = time.time()
+        t_compile = time.perf_counter()
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()

@@ -40,8 +40,16 @@ from typing import Any, Iterator, List, Optional, Tuple
 
 import numpy as np
 
-from repro.kernels.int8_codec import ops as codec_ops
 from repro.obs import telemetry as obs
+
+
+def _codec_ops():
+    # only the delta codec needs the int8 kernels (and through them
+    # JAX); importing lazily keeps this module JAX-free at load time so
+    # raw-codec users — mailbox, transport, the telemetry merge tools —
+    # never pay the toolchain import
+    from repro.kernels.int8_codec import ops as codec_ops
+    return codec_ops
 
 MAGIC = b"FFLY"
 VERSION = 2
@@ -201,6 +209,7 @@ def pack_pytree_chunks(tree: Any, codec: str = "raw", *,
     header_obj = {"skeleton": skeleton, "leaves": metas, "codec": codec}
     packed_leaves = [leaves[i] for i in packed_idx]
     if codec == "delta":
+        codec_ops = _codec_ops()
         # offsets from sizes alone — the flat buffer is materialized
         # once, inside quantize_leaves below
         offsets = codec_ops.leaf_offsets(packed_leaves)
@@ -219,7 +228,7 @@ def pack_pytree_chunks(tree: Any, codec: str = "raw", *,
     if codec == "delta" and packed_idx:
         # the fused one-dispatch quantization of the whole payload
         with obs.span("mig.quantize", n=int(offsets[-1])):
-            q, scales, _ = codec_ops.quantize_leaves(
+            q, scales, _ = _codec_ops().quantize_leaves(
                 packed_leaves, packed_bases, use_pallas=use_pallas,
                 interpret=interpret)
         yield from _chunks_of(q.tobytes())
@@ -302,7 +311,7 @@ def unpack_pytree(data: bytes, *, base: Any = None,
         import ml_dtypes  # noqa: PLC0415
         dts = [np.dtype(metas[i]["dtype"]) if metas[i]["dtype"] != "bfloat16"
                else np.dtype(ml_dtypes.bfloat16) for i in idx]
-        decoded = codec_ops.dequantize_leaves(
+        decoded = _codec_ops().dequantize_leaves(
             q, scales, offsets, [tuple(metas[i]["shape"]) for i in idx],
             dts, pb, use_pallas=use_pallas, interpret=interpret)
         for i, arr in zip(idx, decoded):

@@ -1,35 +1,59 @@
 """repro.sim — fleet-scale discrete-event simulation of FedFly protocols.
 
 See README.md in this directory for the event model and fidelity notes.
-"""
-import repro.core  # noqa: F401  — prime the core package first: entering
-# repro.runtime.cluster before repro.core trips their import cycle
-from repro.sim.async_agg import (AsyncAggregator, SyncAggregator,
-                                 constant_staleness, hinge_staleness,
-                                 poly_staleness)
-from repro.sim.edge import BACKHAUL_1GBPS, SimEdge, make_edges
-from repro.sim.engine import (Event, EventKind, Mail, SerialExecutor,
-                              ShardedEngine, SimEngine)
-from repro.sim.fleet import (ClientSpec, Cohort, CohortSpec, Fleet,
-                             PrunedEpochError, SimClient, make_fleet_specs)
-from repro.sim.mailbox import (HostShardedEngine, Mailbox, PeerShardedEngine,
-                               PipeMailbox, SocketMailbox, decode_message,
-                               encode_message, run_host_windows)
-from repro.sim.metrics import FleetMetrics, MigrationRecord
-from repro.sim.shard import EdgeShard, InflightBatch, ShardClient, ShardEdge
-from repro.sim.simulator import FleetResult, FleetSimulator
-from repro.sim.trainer import GroupTrainer, LocalTrainer, TrainerProxy
 
-__all__ = [
-    "AsyncAggregator", "SyncAggregator", "constant_staleness",
-    "hinge_staleness", "poly_staleness", "BACKHAUL_1GBPS", "SimEdge",
-    "make_edges", "Event", "EventKind", "Mail", "PeerShardedEngine",
-    "SerialExecutor", "ShardedEngine", "SimEngine",
-    "ClientSpec", "Cohort", "CohortSpec", "Fleet", "PrunedEpochError",
-    "SimClient", "make_fleet_specs",
-    "HostShardedEngine", "Mailbox", "PipeMailbox", "SocketMailbox",
-    "decode_message", "encode_message", "run_host_windows", "FleetMetrics",
-    "MigrationRecord", "EdgeShard", "InflightBatch", "ShardClient",
-    "ShardEdge", "FleetResult", "FleetSimulator",
-    "GroupTrainer", "LocalTrainer", "TrainerProxy",
-]
+Re-exports load lazily (PEP 562). The package spans both worlds — the
+JAX-free event plane (shard, engine, mailbox, trainer proxies) and the
+JAX-heavy numerics (async_agg, simulator) — and importing ``a.b.c``
+always executes ``a.b``'s ``__init__`` first, so an eager import list
+here would taint every JAX-free leaf with the whole toolchain. Lazy
+re-exports keep ``import repro.sim.shard`` free of JAX while
+``from repro.sim import FleetSimulator`` still works unchanged.
+"""
+from __future__ import annotations
+
+import importlib
+
+#: public name -> submodule that defines it
+_EXPORTS = {
+    "AsyncAggregator": "async_agg", "SyncAggregator": "async_agg",
+    "constant_staleness": "async_agg", "hinge_staleness": "async_agg",
+    "poly_staleness": "async_agg",
+    "BACKHAUL_1GBPS": "edge", "SimEdge": "edge", "make_edges": "edge",
+    "Event": "engine", "EventKind": "engine", "Mail": "engine",
+    "SerialExecutor": "engine", "ShardedEngine": "engine",
+    "SimEngine": "engine",
+    "ClientSpec": "fleet", "Cohort": "fleet", "CohortSpec": "fleet",
+    "Fleet": "fleet", "PrunedEpochError": "fleet", "SimClient": "fleet",
+    "make_fleet_specs": "fleet",
+    "HostShardedEngine": "mailbox", "Mailbox": "mailbox",
+    "PeerShardedEngine": "mailbox", "PipeMailbox": "mailbox",
+    "SocketMailbox": "mailbox", "decode_message": "mailbox",
+    "encode_message": "mailbox", "run_host_windows": "mailbox",
+    "FleetMetrics": "metrics", "MigrationRecord": "metrics",
+    "EdgeShard": "shard", "InflightBatch": "shard",
+    "ShardClient": "shard", "ShardEdge": "shard",
+    "FleetResult": "simulator", "FleetSimulator": "simulator",
+    "GroupTrainer": "trainer", "LocalTrainer": "trainer",
+    "TrainerProxy": "trainer",
+}
+
+_SUBMODULES = frozenset(_EXPORTS.values()) | {"metrics"}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.sim.{name}")
+    sub = _EXPORTS.get(name)
+    if sub is not None:
+        mod = importlib.import_module(f"repro.sim.{sub}")
+        value = getattr(mod, name)
+        globals()[name] = value          # cache: resolve each name once
+        return value
+    raise AttributeError(f"module 'repro.sim' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS) | set(_SUBMODULES))

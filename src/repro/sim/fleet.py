@@ -306,7 +306,7 @@ class Fleet:
             by_key.setdefault(s.cohort_key, []).append(s)
         self.cohorts: Dict[Tuple[int, int], Cohort] = {}
         self.clients: Dict[str, SimClient] = {}
-        for key, members in by_key.items():
+        for key, members in sorted(by_key.items()):
             R = min(len(members), max_replicas)
             self.cohorts[key] = Cohort(key, model, optimizer, split_point,
                                        R, seed)
@@ -356,7 +356,7 @@ class Fleet:
         is priced from the *encoded* migration payload under ``codec``,
         so backhaul backpressure reflects the compression."""
         out: Dict[Tuple[int, int], Dict[str, float]] = {}
-        for key, cohort in self.cohorts.items():
+        for key, cohort in sorted(self.cohorts.items()):
             cohort.ensure_stages(self.global_params)
             dflops, sflops, sbytes = cohort.costs(self.cost_model)
             out[key] = {"dflops": float(dflops), "sflops": float(sflops),
@@ -373,6 +373,8 @@ class Fleet:
     def cohort_sizes(self) -> Dict[Tuple[int, int], int]:
         """Clients per cohort (for snapshot-pruning bookkeeping)."""
         sizes: Dict[Tuple[int, int], int] = {}
+        # repro-lint: allow[deterministic-iteration] integer counter
+        # accumulation — commutative, so iteration order cannot show
         for c in self.clients.values():
             sizes[c.spec.cohort_key] = sizes.get(c.spec.cohort_key, 0) + 1
         return sizes

@@ -119,7 +119,11 @@ class GroupTrainer:
 
     def _cohorts(self) -> Dict[CohortKey, Any]:
         if isinstance(self._specs, (bytes, bytearray)):
+            # repro-lint: allow[no-pickle-on-wire] decodes the spawn
+            # bootstrap blob produced by FleetSimulator._trainer_blobs in
+            # our own parent process; no peer input ever reaches this
             import pickle
+            # repro-lint: allow[no-pickle-on-wire] same bootstrap blob
             self._specs = pickle.loads(self._specs)
         return {s.key: s for s in self._specs or []}
 
