@@ -37,6 +37,15 @@ per-round metrics, and writes a per-executor artifact
   PYTHONPATH=src python -m benchmarks.bench_fleet --devices 2000 \
       --edges 8 --hosts 2 --scenarios poisson
 
+Chaos: ``--chaos`` runs the first selected scenario synchronously twice
+— clean, then with the last shard group killed mid-round by a
+``FaultPlan`` (a real ``os._exit`` in the worker/host child) — asserts
+the faulted run completes every round with ``recoveries >= 1`` and
+timing metrics bit-identical to the clean run, and writes the recovery
+artifact (default bench_fleet_recovery.json: recovery wall time,
+re-assigned shard counts). ``--barrier-timeout`` / ``--control-timeout``
+override the mailbox deadline constants for every mode.
+
 Telemetry: ``--trace [PATH]`` runs the first selected scenario twice —
 telemetry off (the throughput baseline) and telemetry on writing the
 merged Chrome/Perfetto trace (docs/OBSERVABILITY.md) — verifies the
@@ -56,11 +65,19 @@ from repro.sim.scenarios import SCENARIOS, run_scenario
 
 def _scenario_spec(name: str, args, n_clients: int, n_edges: int,
                    rounds: int, shards: int, workers):
-    return SCENARIOS[name].replace(
+    base = SCENARIOS[name]
+    if base.workers is not None and workers is None:
+        # failure scenarios pin their own mesh topology — a fault plan
+        # needs worker processes to kill; keep it unless the caller
+        # explicitly sized the mesh
+        shards, workers = base.shards, base.workers
+    return base.replace(
         num_clients=n_clients, num_edges=n_edges, rounds=rounds,
         max_replicas=args.max_replicas, seed=args.seed,
         num_cohorts=args.cohorts,
         shards=shards, workers=workers,
+        barrier_timeout_s=args.barrier_timeout,
+        control_timeout_s=args.control_timeout,
         # skip real checkpoint serialization at benchmark scale so
         # events/sec measures the engine, not pickle-free packing
         # (required anyway for worker processes, which only price
@@ -240,6 +257,65 @@ def _trace_mode(args, name: str, n_clients: int, n_edges: int,
     return result
 
 
+def _chaos_mode(args, name: str, n_clients: int, n_edges: int,
+                rounds: int) -> dict:
+    """Chaos smoke: the same sync run twice — clean, then with the last
+    shard group killed at the start of a mid-run round (a real
+    ``os._exit`` in the child process, injected by the FaultPlan). The
+    faulted run must COMPLETE every round with ``recoveries >= 1``, and
+    its timing metrics (migration overheads, per-edge stats) must stay
+    bit-identical to the clean run — recovery replays the same history.
+    Recovery wall time and re-assignment counts land in the artifact."""
+    from repro.sim.faults import Fault, FaultPlan
+    hosts = args.hosts
+    shards = max(2, args.shards)
+    workers = None if hosts else max(2, args.workers or 2)
+    groups = max(1, min(hosts or workers, shards))
+    spec = _scenario_spec(name, args, n_clients, n_edges, rounds,
+                          shards, workers).replace(
+        mode="sync", hosts=hosts, measure_pack=False)
+    fault_round = max(1, rounds - 1)
+    plan = FaultPlan((Fault("kill", group=groups - 1,
+                            round=fault_round),))
+    t0 = time.time()
+    clean = run_scenario(spec)
+    clean_wall = time.time() - t0
+    t1 = time.time()
+    faulted = run_scenario(spec.replace(fault_plan=plan))
+    fault_wall = time.time() - t1
+    eng = faulted["engine"]
+    assert eng["recoveries"] >= 1, \
+        f"fault injected but no recovery recorded: {eng}"
+    assert len(faulted["rounds"]) == rounds, \
+        f"faulted run completed {len(faulted['rounds'])}/{rounds} rounds"
+    timing_ok = (faulted["migrations"] == clean["migrations"]
+                 and faulted["edges"] == clean["edges"])
+    if not timing_ok:
+        raise AssertionError(
+            "timing metrics differ between clean and faulted runs — "
+            "recovery must replay the same simulated history")
+    result = {
+        "scenario": name, "devices": n_clients, "edges": n_edges,
+        "rounds": rounds, "mode": "sync", "shards": shards,
+        "workers": workers, "hosts": hosts,
+        "cpu_count": os.cpu_count(),
+        "fault": {"kind": "kill", "group": groups - 1,
+                  "round": fault_round},
+        "recoveries": eng["recoveries"],
+        "reassigned_shards": eng["reassigned_shards"],
+        "recovery_wall_s": round(eng["recovery_wall_s"], 4),
+        "wall_s_clean": round(clean_wall, 3),
+        "wall_s_faulted": round(fault_wall, 3),
+        "timing_bit_identical": True,
+        "rounds_completed": len(faulted["rounds"]),
+    }
+    print(f"  clean: {clean_wall:6.1f}s   faulted: {fault_wall:6.1f}s   "
+          f"recoveries={eng['recoveries']} "
+          f"reassigned={eng['reassigned_shards']} "
+          f"recovery_wall={eng['recovery_wall_s']:.3f}s")
+    return result
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--clients", "--devices", dest="clients", type=int,
@@ -270,11 +346,26 @@ def main(argv=None) -> None:
                          "on, write the merged Chrome/Perfetto trace to "
                          "PATH (default fleet_trace.json), verify "
                          "bit-identity, record overhead in the artifact")
+    ap.add_argument("--chaos", action="store_true",
+                    help="kill one shard group mid-round in a sync run "
+                         "(pipes by default, sockets with --hosts), "
+                         "assert the run completes with recoveries >= 1 "
+                         "and timing metrics bit-identical to the clean "
+                         "run, emit the recovery artifact")
+    ap.add_argument("--barrier-timeout", type=float, default=None,
+                    dest="barrier_timeout", metavar="S",
+                    help="window-barrier peer timeout in seconds "
+                         "(default: mailbox module constant)")
+    ap.add_argument("--control-timeout", type=float, default=None,
+                    dest="control_timeout", metavar="S",
+                    help="control-mail / records-plane idle timeout in "
+                         "seconds (default: mailbox module constant)")
     ap.add_argument("--artifact", default=None,
-                    help="where --shard-sweep / --hosts / --trace write "
-                         "their JSON artifact (default "
+                    help="where --shard-sweep / --hosts / --trace / "
+                         "--chaos write their JSON artifact (default "
                          "bench_fleet_shards.json / bench_fleet_hosts.json"
-                         " / bench_fleet_trace.json)")
+                         " / bench_fleet_trace.json / "
+                         "bench_fleet_recovery.json)")
     ap.add_argument("--scenarios", nargs="*", default=sorted(SCENARIOS),
                     choices=sorted(SCENARIOS))
     ap.add_argument("--quick", action="store_true",
@@ -285,6 +376,22 @@ def main(argv=None) -> None:
     n_clients = 32 if args.quick else args.clients
     n_edges = 4 if args.quick else args.edges
     rounds = 2 if args.quick else args.rounds
+
+    if args.chaos:
+        name = args.scenarios[0]
+        artifact = args.artifact or "bench_fleet_recovery.json"
+        print(f"# chaos smoke: {name}, {n_clients} devices, {n_edges} "
+              f"edges, {rounds} rounds, "
+              f"{'hosts=' + str(args.hosts) if args.hosts else 'pipes'}")
+        result = _chaos_mode(args, name, n_clients, n_edges, rounds)
+        with open(artifact, "w") as f:
+            json.dump(result, f)
+        print(f"# artifact: {artifact}")
+        print(json.dumps({k: result[k] for k in
+                          ("recoveries", "reassigned_shards",
+                           "recovery_wall_s", "timing_bit_identical",
+                           "rounds_completed")}))
+        return
 
     if args.shard_sweep:
         name = args.scenarios[0]

@@ -20,9 +20,9 @@ from repro.analysis.core import (Finding, Project, Rule, UNSUPPRESSABLE,
                                  run_rules)
 from repro.analysis.doclinks import DocLinks
 from repro.analysis.docsync import WireSpecDrift
-from repro.analysis.rules import (ClockDiscipline, DeterministicIteration,
-                                  JaxImportHygiene, LockDiscipline,
-                                  NoPickleOnWire)
+from repro.analysis.rules import (ClockDiscipline, DeadlineDiscipline,
+                                  DeterministicIteration, JaxImportHygiene,
+                                  LockDiscipline, NoPickleOnWire)
 
 __all__ = [
     "DEFAULT_CONFIG", "Finding", "Project", "Rule", "UNSUPPRESSABLE",
@@ -39,6 +39,7 @@ def all_rules() -> List[Rule]:
         DeterministicIteration(),
         WireSpecDrift(),
         LockDiscipline(),
+        DeadlineDiscipline(),
         DocLinks(),
     ]
 

@@ -89,6 +89,16 @@ DEFAULT_CONFIG: Dict[str, Any] = {
     # instrumentation scope for the OBSERVABILITY name table
     "obs_scope": ["src/repro"],
 
+    # -- deadline-discipline -----------------------------------------------
+    # the transport/recovery stack (ARCHITECTURE §3.7): every blocking
+    # recv/get/join/wait/acquire here must carry timeout= or a reasoned
+    # allow marker — the failover path cannot be built on unbounded waits
+    "deadline_modules": [
+        "src/repro/sim/mailbox.py",
+        "src/repro/sim/trainer.py",
+        "src/repro/runtime/transport.py",
+    ],
+
     # -- lock-discipline ---------------------------------------------------
     # threaded modules whose with-nesting defines the lock order
     "lock_modules": [

@@ -275,6 +275,47 @@ class DeterministicIteration(Rule):
 
 
 # ---------------------------------------------------------------------------
+# deadline-discipline
+# ---------------------------------------------------------------------------
+
+class DeadlineDiscipline(Rule):
+    name = "deadline-discipline"
+    contract = ("every blocking wait in the transport/recovery stack "
+                "(ARCHITECTURE §3.7: mailbox, trainer, runtime "
+                "transport) carries a timeout= deadline or a reasoned "
+                "allow marker — a recovery protocol built on unbounded "
+                "waits hangs instead of failing over")
+
+    #: attribute calls that block indefinitely when called bare:
+    #: queue.get / Connection.recv / Thread.join / Event-Condition.wait /
+    #: Lock.acquire. A positional argument (e.g. socket.recv(bufsize))
+    #: or a timeout= keyword makes the call out of scope.
+    _blocking = {"get", "recv", "join", "wait", "acquire"}
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        for pf in project.files_under(project.config["deadline_modules"]):
+            if pf.tree is None:
+                continue
+            for node in ast.walk(pf.tree):
+                if not (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)
+                        and node.func.attr in self._blocking):
+                    continue
+                if node.args:
+                    # bare blocking forms take no positional args;
+                    # anything with one (dict.get(k), sock.recv(n),
+                    # cond.wait_for(pred, t)) is a different API
+                    continue
+                if any(kw.arg == "timeout" for kw in node.keywords):
+                    continue
+                yield Finding(
+                    self.name, pf.path, node.lineno,
+                    f"unbounded .{node.func.attr}() — blocking waits in "
+                    "the recovery stack need timeout= (or an allow "
+                    "marker stating why this wait provably terminates)")
+
+
+# ---------------------------------------------------------------------------
 # lock-discipline
 # ---------------------------------------------------------------------------
 

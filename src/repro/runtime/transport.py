@@ -108,6 +108,10 @@ class FrameStream:
         try:
             self._conn.sendall(_LEN.pack(CHUNKED))
             while True:
+                # repro-lint: allow[deadline-discipline] the producer
+                # ALWAYS posts the None terminator (finally:), so this
+                # only waits on the caller-supplied chunk iterator — a
+                # deadline here could truncate a slow-but-live upload
                 c = q.get()
                 if obs.is_enabled():
                     obs.gauge("wire.chunk_queue_depth", q.qsize())
@@ -129,9 +133,15 @@ class FrameStream:
                     q.get(timeout=0.1)
                 except queue.Empty:
                     continue
+            # repro-lint: allow[deadline-discipline] the is_alive loop
+            # above only exits once the producer thread ended — this
+            # join is a memory fence, not a wait
             th.join()
             self._conn.close()
             raise
+        # repro-lint: allow[deadline-discipline] the producer posted the
+        # None terminator we just consumed from its finally: block — it
+        # is past its last statement
         th.join()
         if errs:
             # never send the terminator for a half-produced frame: the

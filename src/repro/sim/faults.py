@@ -1,0 +1,112 @@
+"""Deterministic fault injection for the shard-group mesh.
+
+A :class:`FaultPlan` is a pure description of *when things break*: kill
+shard group ``g`` at window ``w`` (or at the start of sync round ``r``),
+drop its record stream or its ctrl conduit, or stall it for a fixed
+delay. The plan rides the spawn bootstrap into every group worker, so a
+given (plan, topology) pair fails at exactly the same point on every
+run — chaos tests stay as reproducible as the no-fault path.
+
+The module is dependency-free on purpose: it is imported by
+``sim/mailbox.py``, which ARCHITECTURE §2 declares JAX-free, and the
+plan itself crosses the spawn boundary inside the bootstrap tuple.
+
+Fault kinds
+-----------
+
+``kill``
+    The group worker calls ``os._exit(1)`` — a hard death, no cleanup,
+    indistinguishable from an OOM kill or a yanked node. The coordinator
+    sees the dead-peer sentinel and (with recovery enabled) rebuilds.
+``drop_records``
+    The group closes its record sink. The coordinator's reader sees EOF
+    on the records plane exactly as if the network path died while the
+    process survived.
+``drop_ctrl``
+    Coordinator-side: the engine closes its ctrl conduit to the group
+    before the next restart/stop, so the next control send fails.
+``delay``
+    The group sleeps ``delay_s`` before its next window — used to push a
+    peer past a barrier deadline without killing it.
+
+Every fault carries an ``attempt`` gate: it fires only while the mesh is
+on that recovery attempt (attempt 0 is the initial build). Without the
+gate a rebuilt mesh would replay its windows from zero and re-trip the
+same fault forever; with it, ``rolling_restart`` can schedule one kill
+per attempt.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+FAULT_KINDS = ("kill", "drop_records", "drop_ctrl", "delay")
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One scheduled failure.
+
+    Exactly one of ``window`` / ``round`` should be set. Window triggers
+    fire in any mode once the group has run that many windows; round
+    triggers only advance in sync mode (the barrier generation tracks
+    committed rounds) and fire at the start of round ``round``.
+    """
+
+    kind: str
+    group: int
+    window: Optional[int] = None
+    round: Optional[int] = None
+    delay_s: float = 0.0
+    attempt: int = 0
+
+    def __post_init__(self) -> None:
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; expected one of "
+                f"{FAULT_KINDS}")
+        if self.kind != "drop_ctrl" and (
+                (self.window is None) == (self.round is None)):
+            raise ValueError(
+                "exactly one of window= / round= must be set "
+                f"(got window={self.window}, round={self.round})")
+        if self.kind == "delay" and self.delay_s <= 0.0:
+            raise ValueError("delay faults need delay_s > 0")
+
+    def fires(self, *, windows: int, gen: int) -> bool:
+        """Has this fault's trigger point been reached?
+
+        ``windows`` counts completed windows in the group's loop;
+        ``gen`` is the barrier generation (sync round r runs at
+        generation r + 1 because generation 0 is the pre-round-0 state).
+        """
+        if self.window is not None:
+            return windows >= self.window
+        return gen >= self.round + 1
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """An immutable schedule of faults, filterable per consumer."""
+
+    faults: Tuple[Fault, ...] = field(default_factory=tuple)
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "faults", tuple(self.faults))
+
+    def for_group(self, group: int, attempt: int) -> Tuple[Fault, ...]:
+        """Faults the group worker itself must act on (kill /
+        drop_records / delay) for this recovery attempt."""
+        return tuple(
+            f for f in self.faults
+            if f.group == group and f.attempt == attempt
+            and f.kind in ("kill", "drop_records", "delay"))
+
+    def for_coordinator(self, attempt: int) -> Tuple[Fault, ...]:
+        """Coordinator-side faults (drop_ctrl) for this attempt."""
+        return tuple(
+            f for f in self.faults
+            if f.attempt == attempt and f.kind == "drop_ctrl")
+
+    def __bool__(self) -> bool:
+        return bool(self.faults)

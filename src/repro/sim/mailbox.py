@@ -43,17 +43,23 @@ themselves.
 
 Failure semantics (mirrors the chunked-frame producer abort): a peer
 that disconnects mid-window — a killed host process, a dropped link —
-must abort the run with a clear error, never hang the barrier. The
-transport reports per-connection closes; ``SocketMailbox.exchange``
-raises as soon as a peer it still needs is gone, the coordinator raises
-when a group's record stream dies before its ``done``, and a dead group
-also poisons any replay blocked on one of its updates.
+must never hang the barrier. The transport reports per-connection
+closes; ``SocketMailbox.exchange`` raises as soon as a peer it still
+needs is gone, the coordinator raises :class:`GroupFailure` when a
+group's record stream dies before its ``done``, and a dead group also
+poisons any replay blocked on one of its updates. What happens next is
+the *coordinator's* choice: ``FleetSimulator`` (with recovery enabled)
+catches the failure, rebuilds the mesh over the survivors, re-assigns
+shards and cohorts with a ``reassign``/``rehello`` handshake, and
+replays from the last committed frontier (ARCHITECTURE §3.7); with
+recovery disabled the failure aborts the run as before.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 import multiprocessing as mp
+import os
 import queue
 import threading
 import time
@@ -67,6 +73,7 @@ from repro.runtime.serialization import pack_pytree, unpack_pytree
 from repro.runtime.transport import FrameStream, SocketTransport
 from repro.sim.engine import (EventKind, Mail, _check_mail_within_lookahead,
                               _merge_shard_stats)
+from repro.sim.faults import Fault
 from repro.sim.shard import ShardClient
 from repro.sim.trainer import GroupTrainer
 
@@ -75,6 +82,16 @@ _BARRIER_TIMEOUT_S = 600.0        # no progress for this long => stalled
 _SHIP_EVERY_WINDOWS = 8           # record-shipment cadence (amortize frames)
 _CONNECT_RETRY_S = 60.0           # peers may start at different times
 _INF = float("inf")
+
+
+class GroupFailure(RuntimeError):
+    """A shard group died, stalled, or became unreachable mid-run.
+
+    Raised by the coordinator loop (``_drive_mesh``) and the engines'
+    control plane so ``FleetSimulator`` can distinguish a *recoverable*
+    group failure (rebuild the mesh, replay — ARCHITECTURE §3.7) from a
+    programming error. Subclasses ``RuntimeError`` so callers without a
+    recovery policy keep the historical abort behavior unchanged."""
 
 
 # ---------------------------------------------------------------------------
@@ -202,6 +219,9 @@ class PipeMailbox(Mailbox):
         incoming: List[Mail] = []
         for p in self.peer_ids:                      # ... then drain all
             try:
+                # repro-lint: allow[deadline-discipline] mp.Pipe.recv has
+                # no timeout; a dead peer raises EOFError immediately and
+                # the coordinator's drain enforces the progress deadline
                 pt, mail = self._peers[p].recv()
             except EOFError:
                 raise RuntimeError(
@@ -331,7 +351,8 @@ class SocketMailbox(Mailbox):
         self.peer_ids = sorted(r for r in addresses if r != self.rank)
         for r in self.peer_ids:
             self._inbox_for(r)                   # exist before any hello
-            self._streams[r] = _connect_retry(addresses[r], retry_s)
+            self._streams[r] = _connect_retry(addresses[r], retry_s,
+                                              rank=self.rank)
             self._streams[r].send(encode_message(
                 {"type": "hello", "channel": "mail", "src": self.rank}))
         return self
@@ -391,13 +412,22 @@ class SocketMailbox(Mailbox):
 
 
 def _connect_retry(addr: Tuple[str, int],
-                   retry_s: float = _CONNECT_RETRY_S) -> FrameStream:
-    """Connect with bounded exponential backoff: mesh bring-up is a
-    connect storm, and a transient ``ConnectionRefusedError`` (listener
-    not bound yet, accept backlog momentarily full) must not kill the
-    run — only a peer that stays unreachable for ``retry_s`` does."""
+                   retry_s: float = _CONNECT_RETRY_S, *,
+                   rank: int = -1) -> FrameStream:
+    """Connect with bounded exponential backoff plus bounded per-rank
+    jitter: mesh bring-up is a connect storm, and a transient
+    ``ConnectionRefusedError`` (listener not bound yet, accept backlog
+    momentarily full) must not kill the run — only a peer that stays
+    unreachable for ``retry_s`` does. The jitter spreads a region-wide
+    restart's reconnects so N hosts retrying in lockstep cannot re-storm
+    the listener on every backoff step; it is drawn from a seeded
+    generator keyed on ``rank`` (a Weyl-style integer mix — NOT
+    ``hash()``, whose per-process salt would differ across runs), so the
+    retry schedule is deterministic per rank."""
     deadline = time.monotonic() + retry_s
     delay = 0.05
+    jitter = np.random.Generator(
+        np.random.PCG64((rank + 2) * 2654435761 % 2**32))
     while True:
         try:
             return FrameStream(addr[0], addr[1])
@@ -405,7 +435,8 @@ def _connect_retry(addr: Tuple[str, int],
             if time.monotonic() >= deadline:
                 raise
             obs.count("wire.connect_retries")
-            time.sleep(min(delay, max(deadline - time.monotonic(), 0.0)))
+            step = delay * (0.5 + jitter.random())      # [0.5x, 1.5x)
+            time.sleep(min(step, max(deadline - time.monotonic(), 0.0)))
             delay = min(delay * 2.0, 1.0)
 
 
@@ -440,6 +471,9 @@ class PipeRecordSink:
     def idle(self, gen: int) -> None:
         self._send({"type": "idle", "gen": gen})
 
+    def rehello(self, epoch: int, shards: int) -> None:
+        self._send({"type": "rehello", "epoch": epoch, "shards": shards})
+
     def stats(self, snap: Dict[str, Any]) -> None:
         self._send({"type": "stats", "snap": snap})
 
@@ -460,7 +494,7 @@ class SocketRecordSink:
 
     def __init__(self, addr: Tuple[str, int], rank: int, *,
                  retry_s: float = _CONNECT_RETRY_S):
-        self._stream = _connect_retry(addr, retry_s)
+        self._stream = _connect_retry(addr, retry_s, rank=rank)
         self._lock = threading.Lock()
         self._send({"type": "hello", "channel": "records", "src": rank})
 
@@ -480,6 +514,9 @@ class SocketRecordSink:
 
     def idle(self, gen):
         self._send({"type": "idle", "gen": gen})
+
+    def rehello(self, epoch, shards):
+        self._send({"type": "rehello", "epoch": epoch, "shards": shards})
 
     def stats(self, snap):
         self._send({"type": "stats", "snap": snap})
@@ -503,7 +540,8 @@ def run_host_windows(shards: Sequence[Any], mailbox: Mailbox,
                      owner_of_shard: Optional[Dict[int, int]] = None, *,
                      control: Optional["queue.Queue"] = None,
                      trainer: Optional[GroupTrainer] = None,
-                     control_timeout_s: float = _BARRIER_TIMEOUT_S) -> int:
+                     control_timeout_s: float = _BARRIER_TIMEOUT_S,
+                     faults: Sequence[Fault] = ()) -> int:
     """Drive a *group* of shard engines under the mail-exchange barrier.
 
     Per window: advertise ``min(own next event, undelivered outgoing
@@ -522,11 +560,20 @@ def run_host_windows(shards: Sequence[Any], mailbox: Mailbox,
     coordinator's mail (the sync round restart) and re-enters the loop;
     ``stop`` ends the session. ``owner_of_shard`` maps a destination
     shard id to the peer that owns it (identity when every peer is a
-    single shard). Returns the window count."""
+    single shard). Returns the window count.
+
+    ``faults`` is this group's slice of a deterministic
+    :class:`~repro.sim.faults.FaultPlan`: each fault is checked at the
+    top of the loop (before the exchange) and fires exactly once when
+    its window / sync-round trigger is reached — ``kill`` hard-exits the
+    process, ``drop_records`` severs the record stream, ``delay`` stalls
+    the group. That makes a chaos run fail at the same protocol point on
+    every repetition."""
     group = {s.shard_id: s for s in shards}
     owner = owner_of_shard or {}
     windows = 0
     gen = 0
+    fired: set = set()
     acc: Dict[str, list] = {"contribs": [], "epoch_starts": [],
                             "migrations": []}
 
@@ -561,6 +608,19 @@ def run_host_windows(shards: Sequence[Any], mailbox: Mailbox,
     outbox: Dict[int, List[Mail]] = {p: [] for p in mailbox.peer_ids}
     my_t = peek_min()
     while True:
+        for i, f in enumerate(faults):
+            if i in fired or not f.fires(windows=windows, gen=gen):
+                continue
+            fired.add(i)
+            if f.kind == "kill":
+                # a hard death: no cleanup, no err message, no flush —
+                # the coordinator must cope with the raw dead-peer
+                # sentinel exactly as it would for an OOM-killed host
+                os._exit(1)
+            elif f.kind == "drop_records":
+                sink.close()
+            elif f.kind == "delay":
+                time.sleep(f.delay_s)
         T, incoming = mailbox.exchange(my_t, outbox)
         outbox = {p: [] for p in mailbox.peer_ids}
         if T == _INF:
@@ -618,20 +678,42 @@ def run_host_windows(shards: Sequence[Any], mailbox: Mailbox,
 
 
 def _dispatch_control(source: "queue.Queue",
-                      trainer: GroupTrainer) -> "queue.Queue":
+                      trainer: GroupTrainer, *,
+                      sink: Any = None,
+                      owner: Optional[Dict[int, int]] = None,
+                      group_id: Optional[int] = None) -> "queue.Queue":
     """Split one FIFO control stream into its two delivery planes: the
     trainer's inbox (``bcast``/``train`` — consumed any time, training
     never blocks the window barrier) and the returned barrier queue
     (``resume``/``stop`` — consumed by the window loop at quiescence).
-    ``stop`` goes to both; per-plane FIFO order is preserved."""
+    ``stop`` goes to both; per-plane FIFO order is preserved.
+
+    ``reassign`` (the recovery handshake, ARCHITECTURE §3.7) is applied
+    here, on the dispatch thread: the shared ``owner`` map is mutated in
+    place (the window loop holds the same dict), and a ``rehello`` ack
+    is sent on the record plane. Control FIFO ordering guarantees the
+    new ownership is live before any post-recovery ``resume``."""
     barrier_q: "queue.Queue" = queue.Queue()
 
     def loop():
         while True:
+            # repro-lint: allow[deadline-discipline] the control stream
+            # has no idle deadline by design: a group may sit between
+            # rounds indefinitely; coordinator death closes the conduit,
+            # which synthesizes the stop that ends this loop
             msg = source.get()
             kind = msg["type"]
             if kind in ("bcast", "train"):
                 trainer.post(msg)
+            elif kind == "reassign":
+                new_owner = msg["owner"]
+                if owner is not None:
+                    owner.clear()
+                    owner.update(new_owner)
+                if sink is not None:
+                    mine = sum(1 for g in new_owner.values()
+                               if g == group_id)
+                    sink.rehello(int(msg["epoch"]), mine)
             elif kind == "resume":
                 barrier_q.put(msg)
             elif kind == "stop":
@@ -660,6 +742,9 @@ class _MeshState:
         #: telemetry snapshots per group rank — accumulated for the whole
         #: run, so deliberately NOT cleared by reset() (round restarts)
         self.obs: Dict[int, List[Dict[str, Any]]] = {}
+        #: rehello acks per group rank (recovery-attempt epoch last
+        #: acknowledged) — like ``obs``, survives reset()
+        self.rehellos: Dict[int, int] = {}
         self.reset()
 
     def reset(self) -> None:
@@ -670,7 +755,8 @@ class _MeshState:
 
 def _drive_mesh(get: Callable[[float], Tuple[str, int, Dict[str, Any]]],
                 state: _MeshState, on_chunk, stop_all: Callable[[], None],
-                *, timeout_s: float = _BARRIER_TIMEOUT_S
+                *, timeout_s: float = _BARRIER_TIMEOUT_S,
+                on_idle: Optional[Callable[[], bool]] = None
                 ) -> Tuple[Dict[int, Dict[str, Any]],
                            Dict[int, Dict[str, Any]]]:
     """Consume ``(type, src, msg)`` record-plane messages until every
@@ -679,9 +765,14 @@ def _drive_mesh(get: Callable[[float], Tuple[str, int, Dict[str, Any]]],
     contract of PR 2/4). When every group is idle at the current
     generation, the pending replay runs to completion; if it triggered a
     round restart (sync mode — ``state.gen`` advanced and the idle set
-    was reset) the mesh resumes, otherwise the session is over and
-    ``stop_all`` is sent. Returns (per-shard final stats, per-group
-    trainer stats)."""
+    was reset) the mesh resumes; otherwise ``on_idle`` (the recovery
+    catch-up hook: a rebuilt mesh behind the committed-round log gets
+    its next round re-injected, returning True) gets the last word
+    before the session is declared over and ``stop_all`` is sent.
+    Returns (per-shard final stats, per-group trainer stats).
+
+    A group that errors, dies, or stalls raises :class:`GroupFailure`
+    so a recovery-capable caller can rebuild instead of aborting."""
     finals: Dict[int, Dict[str, Any]] = {}
     trainers: Dict[int, Dict[str, Any]] = {}
     done: set = set()
@@ -692,21 +783,27 @@ def _drive_mesh(get: Callable[[float], Tuple[str, int, Dict[str, Any]]],
             if wait0:
                 obs.observe("coord.drain_wait_s", time.monotonic() - wait0)
         except queue.Empty:
-            raise RuntimeError(
+            raise GroupFailure(
                 f"shard-group mesh made no progress for {timeout_s}s "
                 "(group stalled?)") from None
         if kind == "err":
-            raise RuntimeError(f"shard group {src} failed:\n"
+            raise GroupFailure(f"shard group {src} failed:\n"
                                f"{msg['traceback']}")
         if kind == "lost":
             if src in done:
                 continue          # clean close after its done message
-            raise RuntimeError(
+            raise GroupFailure(
                 f"shard group {src} died mid-run ({msg['err']})")
         if kind == "stats":
             # telemetry snapshots ride the record plane but never touch
             # frontier/idle bookkeeping — pure observation
             state.obs.setdefault(src, []).append(msg["snap"])
+            continue
+        if kind == "rehello":
+            # recovery handshake ack (§3.7) — observation only, like
+            # stats: the control FIFO already ordered reassign before
+            # resume, so nothing blocks on this
+            state.rehellos[src] = int(msg["epoch"])
             continue
         gen_before = state.gen
         if kind == "records":
@@ -735,6 +832,8 @@ def _drive_mesh(get: Callable[[float], Tuple[str, int, Dict[str, Any]]],
                 on_chunk(new, {})  # a sync commit may restart() in here
         if (kind == "idle" and len(state.idle) == state.num_groups
                 and state.gen == gen_before and not state.stopped):
+            if on_idle is not None and on_idle():
+                continue          # recovery catch-up re-injected a round
             state.stopped = True
             stop_all()
     with obs.span("coord.replay"):
@@ -748,8 +847,19 @@ class _MeshEngineBase:
     num_groups: int
     owner: Dict[int, int]
     state: _MeshState
+    #: recovery catch-up hook passed through to ``_drive_mesh`` — set by
+    #: the coordinator (FleetSimulator) on a rebuilt mesh, never by the
+    #: engine itself
+    on_idle: Optional[Callable[[], bool]] = None
 
     def control_send(self, group: int, msg: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+    def drop_ctrl(self, group: int) -> None:
+        """Sever the ctrl conduit to ``group`` (fault injection: the
+        coordinator-side half of a partitioned control plane). The next
+        control send to that group raises, which recovery-capable
+        callers see as a :class:`GroupFailure`."""
         raise NotImplementedError
 
     def restart(self, mail: Sequence[Mail]) -> None:
@@ -764,7 +874,13 @@ class _MeshEngineBase:
         self.state.reset()
         self.state.gen += 1
         for g in range(self.num_groups):
-            self.control_send(g, {"type": "resume", "mail": by_group[g]})
+            try:
+                self.control_send(g, {"type": "resume",
+                                      "mail": by_group[g]})
+            except OSError as e:
+                raise GroupFailure(
+                    f"shard group {g} unreachable on ctrl ({e})"
+                ) from None
 
     def stop_all(self) -> None:
         for g in range(self.num_groups):
@@ -786,7 +902,12 @@ def _pipe_group_main(conn, peers, lookahead, group_id) -> None:
     log = obs_log.setup(rank=group_id)
     sink = None
     try:
-        group, owner, trainer_blob, telemetry = conn.recv()
+        # repro-lint: allow[deadline-discipline] spawn bootstrap: the
+        # parent sends immediately after Process.start(), and a dead
+        # parent raises EOFError rather than hanging
+        boot = conn.recv()
+        (group, owner, trainer_blob, telemetry, faults,
+         control_timeout_s) = boot
         if telemetry:
             obs.enable(rank=group_id, process_name=f"group {group_id}")
         sink = PipeRecordSink(conn)
@@ -796,6 +917,9 @@ def _pipe_group_main(conn, peers, lookahead, group_id) -> None:
         def pump():               # parent pipe -> control source queue
             while True:
                 try:
+                    # repro-lint: allow[deadline-discipline] control pump:
+                    # coordinator death surfaces as EOFError/OSError and
+                    # becomes a synthesized stop — no deadline needed
                     msg = conn.recv()
                 except (EOFError, OSError):
                     source.put({"type": "stop"})
@@ -806,9 +930,12 @@ def _pipe_group_main(conn, peers, lookahead, group_id) -> None:
 
         threading.Thread(target=pump, daemon=True,
                          name="control-pump").start()
-        barrier_q = _dispatch_control(source, trainer)
+        barrier_q = _dispatch_control(source, trainer, sink=sink,
+                                      owner=owner, group_id=group_id)
         run_host_windows(group, PipeMailbox(peers), lookahead, sink,
-                         owner, control=barrier_q, trainer=trainer)
+                         owner, control=barrier_q, trainer=trainer,
+                         control_timeout_s=control_timeout_s,
+                         faults=faults)
     except BaseException:
         log.error("shard group %d failed:\n%s", group_id,
                   traceback.format_exc())
@@ -838,7 +965,10 @@ class PeerShardedEngine(_MeshEngineBase):
     def __init__(self, shards: Sequence[Any], *, lookahead: float,
                  groups: Optional[int] = None,
                  trainer_blobs: Optional[Dict[int, bytes]] = None,
-                 telemetry: bool = False):
+                 telemetry: bool = False,
+                 fault_plan: Optional[Any] = None, attempt: int = 0,
+                 barrier_timeout_s: Optional[float] = None,
+                 control_timeout_s: Optional[float] = None):
         if lookahead is None or lookahead <= 0:
             raise ValueError("peer sharded execution needs a positive "
                              "lookahead")
@@ -850,6 +980,8 @@ class PeerShardedEngine(_MeshEngineBase):
         self.state = _MeshState(self.num_groups)
         self.on_update: Optional[Callable] = None
         self.on_abort: Optional[Callable[[str], None]] = None
+        self._barrier_timeout_s = barrier_timeout_s or _BARRIER_TIMEOUT_S
+        self._control_timeout_s = control_timeout_s or _BARRIER_TIMEOUT_S
         # peer mesh: one duplex pipe per group pair, passed at Process
         # creation (fds must be inherited, not sent later)
         mesh: Dict[Tuple[int, int], Any] = {}
@@ -871,8 +1003,11 @@ class PeerShardedEngine(_MeshEngineBase):
                                args=(child, peers, lookahead, g),
                                daemon=True)
             proc.start()
+            faults = (fault_plan.for_group(g, attempt)
+                      if fault_plan is not None else ())
             parent.send(([s for s in shards if self.owner[s.shard_id] == g],
-                         self.owner, blobs.get(g), telemetry))
+                         self.owner, blobs.get(g), telemetry, faults,
+                         self._control_timeout_s))
             self._conns[g] = parent
             self._procs.append(proc)
         for (a, b) in mesh.values():          # parent keeps no mesh ends
@@ -885,6 +1020,9 @@ class PeerShardedEngine(_MeshEngineBase):
 
     def control_send(self, group: int, msg: Dict[str, Any]) -> None:
         self._conns[group].send(msg)
+
+    def drop_ctrl(self, group: int) -> None:
+        self._conns[group].close()
 
     def run(self, on_chunk) -> "PeerShardedEngine":
         """Drain record shipments (in a thread, so a slow replay can
@@ -899,15 +1037,18 @@ class PeerShardedEngine(_MeshEngineBase):
             live = dict(self._conns)
             while live:
                 ready = conn_wait(list(live.values()),
-                                  timeout=_BARRIER_TIMEOUT_S)
+                                  timeout=self._barrier_timeout_s)
                 if not ready:
                     q.put(("err", -1, {"traceback":
                                        "record drain made no progress "
-                                       f"for {_BARRIER_TIMEOUT_S}s"}))
+                                       f"for {self._barrier_timeout_s}s"}))
                     return
                 for conn in ready:
                     g = g_of[conn]
                     try:
+                        # repro-lint: allow[deadline-discipline] guarded
+                        # by the conn_wait timeout just above: recv only
+                        # runs on a readable (or dead) connection
                         msg = conn.recv()
                     except (EOFError, OSError) as e:
                         # a killed worker surfaces as EOF or ECONNRESET
@@ -935,7 +1076,8 @@ class PeerShardedEngine(_MeshEngineBase):
         try:
             self._final, self._trainers = _drive_mesh(
                 lambda t: q.get(timeout=t), self.state, on_chunk,
-                self.stop_all)
+                self.stop_all, timeout_s=self._control_timeout_s,
+                on_idle=self.on_idle)
         finally:
             self.wall_s = time.perf_counter() - wall0
         th.join(timeout=5)
@@ -979,23 +1121,36 @@ def _host_proc_main(conn) -> None:
     mailbox = None
     log = obs_log.setup()
     try:
+        # repro-lint: allow[deadline-discipline] spawn bootstrap: the
+        # parent sends immediately after Process.start(), and a dead
+        # parent raises EOFError rather than hanging
+        boot = conn.recv()
         (rank, group, owner, lookahead, record_addr, trainer_blob,
-         num_hosts, telemetry) = conn.recv()
+         num_hosts, telemetry, faults, barrier_timeout_s,
+         control_timeout_s) = boot
         log = obs_log.setup(rank=rank)
         if telemetry:
             obs.enable(rank=rank, process_name=f"host {rank}")
         # listener backlog: hosts-1 incoming mail peers + the control
         # stream + slack for connect-storm retries
-        mailbox = SocketMailbox(rank, backlog=num_hosts + 4)
+        mailbox = SocketMailbox(rank, backlog=num_hosts + 4,
+                                barrier_timeout_s=barrier_timeout_s)
         conn.send(("port", mailbox.port))
+        # repro-lint: allow[deadline-discipline] bootstrap directory:
+        # the parent replies as soon as every host reported its port;
+        # parent death raises EOFError
         directory = conn.recv()
         sink = SocketRecordSink(record_addr, rank)
         mailbox.connect(directory)
         conn.send(("ready",))
         trainer = GroupTrainer(trainer_blob, sink, group_id=rank)
-        barrier_q = _dispatch_control(mailbox.control, trainer)
+        barrier_q = _dispatch_control(mailbox.control, trainer,
+                                      sink=sink, owner=owner,
+                                      group_id=rank)
         run_host_windows(group, mailbox, lookahead, sink, owner,
-                         control=barrier_q, trainer=trainer)
+                         control=barrier_q, trainer=trainer,
+                         control_timeout_s=control_timeout_s,
+                         faults=faults)
     except BaseException:
         tb = traceback.format_exc()
         log.error("shard host failed:\n%s", tb)
@@ -1055,6 +1210,9 @@ class MultihostControl(_MeshEngineBase):
     def control_send(self, group: int, msg: Dict[str, Any]) -> None:
         self._ctrl[group].send(encode_message(msg))
 
+    def drop_ctrl(self, group: int) -> None:
+        self._ctrl[group].close()
+
     def close(self) -> None:
         for s in self._ctrl.values():
             try:
@@ -1082,10 +1240,15 @@ class HostShardedEngine(_MeshEngineBase):
     def __init__(self, shards: Sequence[Any], *, lookahead: float,
                  hosts: int,
                  trainer_blobs: Optional[Dict[int, bytes]] = None,
-                 telemetry: bool = False):
+                 telemetry: bool = False,
+                 fault_plan: Optional[Any] = None, attempt: int = 0,
+                 barrier_timeout_s: Optional[float] = None,
+                 control_timeout_s: Optional[float] = None):
         if lookahead is None or lookahead <= 0:
             raise ValueError("multi-host execution needs a positive "
                              "lookahead")
+        self._barrier_timeout_s = barrier_timeout_s or _BARRIER_TIMEOUT_S
+        self._control_timeout_s = control_timeout_s or _BARRIER_TIMEOUT_S
         shards = sorted(shards, key=lambda s: s.shard_id)
         self.num_hosts = self.num_groups = max(1, min(hosts, len(shards)))
         self.shard_ids = [s.shard_id for s in shards]
@@ -1114,9 +1277,12 @@ class HostShardedEngine(_MeshEngineBase):
                 proc = ctx.Process(target=_host_proc_main, args=(child,),
                                    daemon=True)
                 proc.start()
+                faults = (fault_plan.for_group(rank, attempt)
+                          if fault_plan is not None else ())
                 parent.send((rank, group, self.owner, lookahead,
                              record_addr, blobs.get(rank), self.num_hosts,
-                             telemetry))
+                             telemetry, faults, self._barrier_timeout_s,
+                             self._control_timeout_s))
                 self._procs.append(proc)
                 self._boots.append(parent)
             directory = {rank: ("127.0.0.1", self._boot_recv(rank)[1])
@@ -1158,6 +1324,9 @@ class HostShardedEngine(_MeshEngineBase):
             raise RuntimeError(f"shard host {rank} did not start "
                                "(bootstrap timeout)")
         try:
+            # repro-lint: allow[deadline-discipline] guarded by the
+            # poll(timeout=120) just above — the frame is already
+            # buffered when recv runs
             msg = conn.recv()
         except EOFError:
             raise RuntimeError(
@@ -1170,12 +1339,17 @@ class HostShardedEngine(_MeshEngineBase):
     def control_send(self, group: int, msg: Dict[str, Any]) -> None:
         self._ctrl[group].send(encode_message(msg))
 
+    def drop_ctrl(self, group: int) -> None:
+        self._ctrl[group].close()
+
     def run(self, on_chunk) -> "HostShardedEngine":
         wall0 = time.perf_counter()
         try:
             self._final, self._trainers = _drive_mesh(
                 lambda t: self._collector.records.get(timeout=t),
-                self.state, on_chunk, self.stop_all)
+                self.state, on_chunk, self.stop_all,
+                timeout_s=self._control_timeout_s,
+                on_idle=self.on_idle)
         finally:
             self.wall_s = time.perf_counter() - wall0
         return self

@@ -10,6 +10,14 @@ testbed cannot express.
   device_churn         clients drop offline mid-training and rejoin
                        later; their updates arrive stale (async mode)
   heterogeneous_links  10x spread in per-edge backhaul bandwidth
+  edge_failure         one edge dies mid-run: its clients evacuate
+                       (priced through the delta-migration pipeline) and
+                       the shard group hosting it is killed — the mesh
+                       recovers (ARCHITECTURE §3.7)
+  region_outage        a block of edges dies at once: mass evacuation to
+                       the survivors plus a killed shard group
+  rolling_restart      shard groups are killed one per recovery attempt
+                       — the mesh shrinks and re-assigns each time
 
 ``run_scenario`` returns a plain-dict report (per-round JSON records in
 the same spirit as ``benchmarks/``): config, rounds, migration summary,
@@ -22,6 +30,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.mobility import MobilityTrace, MoveEvent, poisson_moves
+from repro.sim.faults import Fault, FaultPlan
 from repro.models.vgg import VGG5
 from repro.optim.optimizers import sgd
 from repro.optim.schedules import constant
@@ -55,6 +64,18 @@ class ScenarioSpec:
     churn_epoch: int = 1
     churn_offline_s: float = 30.0
     link_spread: float = 10.0
+    # failure scenarios (edge_failure / region_outage / rolling_restart):
+    # the mobility trace evacuates the dead edge(s) while a FaultPlan
+    # kills the shard group hosting them — recovery semantics in
+    # ARCHITECTURE §3.7. Round-triggered faults need mode="sync".
+    failed_edge: int = 0
+    failure_round: int = 1
+    region_edges: int = 2
+    fault_plan: Optional[FaultPlan] = None   # overrides the derived plan
+    recovery: bool = True
+    max_recoveries: Optional[int] = None     # None -> simulator default
+    barrier_timeout_s: Optional[float] = None
+    control_timeout_s: Optional[float] = None
     measure_pack: bool = True
     migration_codec: str = "raw"     # raw | int8 | delta (backhaul pricing)
     # sharded execution (engine README: shard/mailbox model)
@@ -108,7 +129,50 @@ def _build_trace(spec: ScenarioSpec) -> Optional[MobilityTrace]:
         return MobilityTrace(poisson_moves(cids, eids, spec.rounds,
                                            spec.poisson_rate / 2,
                                            seed=spec.seed))
+    if spec.kind in ("edge_failure", "region_outage"):
+        # every client homed on a failing edge evacuates to a survivor
+        # at the failure round; the checkpoint transfers ride the real
+        # delta-migration pipeline, so the outage is priced, not waved
+        # away
+        if spec.kind == "edge_failure":
+            dead = {eids[spec.failed_edge % len(eids)]}
+        else:
+            dead = set(eids[:min(spec.region_edges, len(eids) - 1)])
+        survivors = [e for e in eids if e not in dead]
+        events = [MoveEvent(spec.failure_round, cids[i],
+                            eids[i % len(eids)],
+                            survivors[i % len(survivors)], 0.5)
+                  for i in range(spec.num_clients)
+                  if eids[i % len(eids)] in dead]
+        return MobilityTrace(events)
+    if spec.kind == "rolling_restart":
+        return MobilityTrace(poisson_moves(cids, eids, spec.rounds,
+                                           spec.poisson_rate,
+                                           seed=spec.seed))
     raise ValueError(f"unknown scenario kind {spec.kind!r}")
+
+
+def _build_fault_plan(spec: ScenarioSpec) -> Optional[FaultPlan]:
+    """Derive the deterministic fault schedule for failure scenarios:
+    kill the shard group hosting the failed edge(s) at the failure
+    round, so recovery and evacuation land in the same round."""
+    if spec.fault_plan is not None:
+        return spec.fault_plan
+    if spec.kind not in ("edge_failure", "region_outage",
+                         "rolling_restart"):
+        return None
+    groups = max(1, min(spec.workers or spec.hosts or 1, spec.shards))
+    if spec.kind == "rolling_restart":
+        # one kill per recovery attempt; each rebuilt mesh has one
+        # fewer group, so re-target the last surviving group each time
+        return FaultPlan(tuple(
+            Fault("kill",
+                  group=(groups - 1 - a) % max(1, groups - a),
+                  round=spec.failure_round + a, attempt=a)
+            for a in range(min(2, spec.rounds - spec.failure_round))))
+    group = (spec.failed_edge % spec.shards) % groups
+    return FaultPlan((Fault("kill", group=group,
+                            round=spec.failure_round),))
 
 
 def _build_edges(spec: ScenarioSpec) -> List[SimEdge]:
@@ -140,6 +204,9 @@ def build_scenario(spec: ScenarioSpec) -> FleetSimulator:
     fleet = Fleet(VGG5(), sgd(momentum=0.9), specs, split_point=2,
                   lr_schedule=constant(spec.lr),
                   max_replicas=spec.max_replicas, seed=spec.seed)
+    kw: Dict[str, Any] = {}
+    if spec.max_recoveries is not None:
+        kw["max_recoveries"] = spec.max_recoveries
     return FleetSimulator(fleet, edges, trace=_build_trace(spec),
                           mode=spec.mode, dropouts=_build_dropouts(spec),
                           migration_codec=spec.migration_codec,
@@ -148,7 +215,11 @@ def build_scenario(spec: ScenarioSpec) -> FleetSimulator:
                           hosts=spec.hosts,
                           flush_interval_s=spec.flush_interval_s,
                           telemetry=spec.telemetry,
-                          trace_path=spec.trace_path)
+                          trace_path=spec.trace_path,
+                          fault_plan=_build_fault_plan(spec),
+                          recovery=spec.recovery,
+                          barrier_timeout_s=spec.barrier_timeout_s,
+                          control_timeout_s=spec.control_timeout_s, **kw)
 
 
 def run_scenario(spec: ScenarioSpec) -> Dict[str, Any]:
@@ -181,4 +252,20 @@ SCENARIOS: Dict[str, ScenarioSpec] = {
     "device_churn": ScenarioSpec("device_churn", kind="device_churn"),
     "heterogeneous_links": ScenarioSpec("heterogeneous_links",
                                         kind="heterogeneous_links"),
+    # failure scenarios run sync (round-triggered faults need the
+    # barrier generation) over a 2-group pipes mesh; evacuation is
+    # priced through the real delta-migration pipeline
+    "edge_failure": ScenarioSpec("edge_failure", kind="edge_failure",
+                                 mode="sync", shards=2, workers=2,
+                                 migration_codec="delta",
+                                 measure_pack=False),
+    "region_outage": ScenarioSpec("region_outage", kind="region_outage",
+                                  mode="sync", shards=2, workers=2,
+                                  migration_codec="delta",
+                                  measure_pack=False),
+    "rolling_restart": ScenarioSpec("rolling_restart",
+                                    kind="rolling_restart", mode="sync",
+                                    shards=2, workers=2, rounds=4,
+                                    migration_codec="delta",
+                                    measure_pack=False),
 }

@@ -64,15 +64,18 @@ from repro.sim.async_agg import (AsyncAggregator, StalenessFn, SyncAggregator,
                                  poly_staleness)
 from repro.sim.edge import SimEdge
 from repro.sim.engine import (EventKind, Mail, SerialExecutor, ShardedEngine)
+from repro.sim.faults import FaultPlan
 from repro.sim.fleet import Fleet
-from repro.sim.mailbox import (HostShardedEngine, MultihostControl,
+from repro.sim.mailbox import (_BARRIER_TIMEOUT_S, GroupFailure,
+                               HostShardedEngine, MultihostControl,
                                PeerShardedEngine, SocketMailbox,
                                SocketRecordSink, _dispatch_control,
                                _drive_mesh, _MeshEngineBase,
                                merge_host_finals, run_host_windows)
 from repro.sim.metrics import FleetMetrics, MigrationRecord
 from repro.sim.shard import EdgeShard, ShardClient, ShardEdge, batch_parts
-from repro.sim.trainer import GroupTrainer, LocalTrainer, TrainerProxy
+from repro.sim.trainer import (GroupTrainer, LocalTrainer, TrainerAborted,
+                               TrainerProxy)
 
 Params = Any
 
@@ -103,6 +106,7 @@ class FleetResult:
             "mean_round_time_s": float(np.mean(
                 [r["mean_round_time_s"] for r in timed])) if timed else None,
             "migrations": self.migration_summary,
+            "recoveries": self.engine_stats.get("recoveries", 0),
         }
         if self.obs is not None:
             out["obs"] = self.obs
@@ -137,9 +141,18 @@ class FleetSimulator:
                  flush_interval_s: Optional[float] = None,
                  reprice_tol: float = 0.05,
                  telemetry: bool = False,
-                 trace_path: Optional[str] = None):
+                 trace_path: Optional[str] = None,
+                 recovery: bool = True,
+                 max_recoveries: int = 2,
+                 fault_plan: Optional[FaultPlan] = None,
+                 barrier_timeout_s: Optional[float] = None,
+                 control_timeout_s: Optional[float] = None):
         if mode not in ("sync", "async"):
             raise ValueError(f"mode must be sync|async, got {mode!r}")
+        if fault_plan is not None and workers is None and hosts is None:
+            raise ValueError("fault_plan requires a mesh executor "
+                             "(workers= or hosts=): the serial path has "
+                             "no processes to fail")
         if dropouts and mode == "sync":
             raise ValueError("device churn (dropouts) requires mode='async'; "
                              "a sync barrier would deadlock on offline "
@@ -191,6 +204,16 @@ class FleetSimulator:
         # cannot perturb metrics or numerics
         self.telemetry = telemetry
         self.trace_path = trace_path
+        # fault tolerance (ARCHITECTURE §3.7): with recovery on, a dead
+        # shard group rebuilds the mesh over the survivors instead of
+        # aborting; fault_plan injects deterministic failures; the
+        # timeout knobs override the module-constant deadlines (chaos
+        # tests shrink them, real deployments stretch them)
+        self.recovery = recovery
+        self.max_recoveries = max_recoveries
+        self.fault_plan = fault_plan
+        self.barrier_timeout_s = barrier_timeout_s
+        self.control_timeout_s = control_timeout_s
 
         self.metrics = FleetMetrics()
         if mode == "sync":
@@ -219,6 +242,23 @@ class FleetSimulator:
         # paths swap in a TrainerProxy over the control channel
         self._trainer: Any = LocalTrainer(fleet)
         self._mesh: Optional[_MeshEngineBase] = None
+        # recovery replay state (ARCHITECTURE §3.7). The replay item
+        # stream — epoch starts + contributions under the (t, priority,
+        # key) total order — is independent of how windows chunk it, so
+        # "skip the first ``_applied`` items" replays exactly the
+        # un-applied suffix after a rebuild. Migrations are deduped by
+        # record identity instead (their frontier bucketing is NOT
+        # partition-stable; metrics re-sorts, so only the set matters).
+        self._applied = 0                       # items applied, ever
+        self._skip = 0                          # items to drop on replay
+        self._seen_migs: set = set()
+        #: per-round restart mail, appended at commit time — what a
+        #: rebuilt sync mesh needs to be re-driven through already-
+        #: committed rounds (``_mesh_catch_up``)
+        self._restart_log: List[List[Mail]] = []
+        #: recovery accounting, merged into engine stats on the mesh
+        #: paths (None on the serial path — no processes can fail)
+        self._recovery: Optional[Dict[str, Any]] = None
 
     # -- static timing inputs -------------------------------------------
 
@@ -418,10 +458,18 @@ class FleetSimulator:
 
     def _on_window(self, bound: float,
                    all_records: Dict[int, Dict[str, list]]) -> List[Mail]:
-        # migrations: timing-complete, straight into metrics
+        # migrations: timing-complete, straight into metrics. The seen-
+        # set drops re-shipments from a post-recovery replay (a rebuilt
+        # mesh re-runs history from t=0); records are unique in a fault-
+        # free run (one move per client per round), so the no-fault path
+        # records exactly what it always did.
         for rec in sorted(
                 (m for r in all_records.values() for m in r["migrations"]),
                 key=lambda m: (m[4], m[0])):
+            ident = tuple(rec)        # wire decode may hand back a list
+            if ident in self._seen_migs:
+                continue
+            self._seen_migs.add(ident)
             (cid, src, dst, round_idx, start_s, end_s, nbytes, pack_s,
              queue_s, transfer_s) = rec
             self.metrics.record_migration(MigrationRecord(
@@ -446,12 +494,24 @@ class FleetSimulator:
         replay_span = obs.span("coord.window", items=len(items))
         replay_span.__enter__()
         for t, _, _, action in items:
+            if self._skip:
+                # applied before the failure (ARCHITECTURE §3.7): the
+                # rebuilt mesh re-ships history from t=0, and the item
+                # stream is a partition-independent total order, so
+                # dropping the first N items replays exactly the
+                # un-applied suffix. Grid flushes for them fired too —
+                # the skip must come before _advance_grid.
+                self._skip -= 1
+                continue
             self._advance_grid(t)
             if action[0] == "start":
                 self._train(action[1], action[2])
+                self._applied += 1
                 continue
             (arrival, cid, cohort_key, replica, epoch, epoch_start_s,
              pulled_s, num_samples) = action[1]
+            # may raise TrainerAborted (owner group died): the item is
+            # then NOT counted as applied and replays after recovery
             trees, losses = self._trainer.update_for(cohort_key, epoch)
             tree = trees[replica]
             loss = float(losses[replica])
@@ -471,6 +531,7 @@ class FleetSimulator:
                 self._buffer.append((tree, float(num_samples), {
                     "record": record, "pulled_s": pulled_s,
                     "cohort_key": cohort_key, "epoch": epoch}))
+            self._applied += 1
         # fire flush points the window has fully covered
         if self.mode == "async" and self._buffer and math.isfinite(bound):
             self._advance_grid(bound)
@@ -486,10 +547,17 @@ class FleetSimulator:
             self.agg.commit()                      # empty: carry forward
             self.metrics.record_skipped_round(r, t)
         else:
+            # gather every update BEFORE the first submit: if a waiter
+            # aborts mid-round (group death), the aggregator is still
+            # clean and _round_weights/_arrived intact, so the commit
+            # re-fires whole after recovery instead of double-counting
+            gathered = []
             for (cohort_key, replica), weight in sorted(
                     self._round_weights.items()):
                 trees, _ = self._trainer.update_for(cohort_key, r)
-                self.agg.submit(trees[replica], weight)
+                gathered.append((trees[replica], weight))
+            for tree, weight in gathered:
+                self.agg.submit(tree, weight)
             self._round_weights.clear()
             self.fleet.set_global(self.agg.commit())
             self.metrics.record_barrier(r, t)
@@ -503,8 +571,11 @@ class FleetSimulator:
                 if r + 1 < self.num_rounds else [])
         if self._mesh is not None:
             # mesh path: the restart is control mail to the (quiescing)
-            # group processes, not engine mail — sync-mode multi-host
+            # group processes, not engine mail — sync-mode multi-host.
+            # The mail is logged FIRST: if the restart dies mid-send, a
+            # rebuilt mesh replays this round's kickoff from the log.
             if mail:
+                self._restart_log.append(mail)
                 self._mesh.restart(mail)
             return []
         return mail
@@ -581,6 +652,22 @@ class FleetSimulator:
         mesh.on_abort = proxy.abort
         return proxy
 
+    def _mesh_catch_up(self) -> bool:
+        """Recovery catch-up hook (``_drive_mesh``'s ``on_idle``,
+        ARCHITECTURE §3.7): a rebuilt mesh that idles at a generation
+        behind the committed-round log gets the next round's kickoff
+        mail re-injected from the log instead of being stopped. On a
+        never-failed run the log length always equals the generation at
+        every idle (each commit appends immediately before its restart),
+        so the hook is inert."""
+        mesh = self._mesh
+        if mesh is None:
+            return False
+        if mesh.state.gen < len(self._restart_log):
+            mesh.restart(self._restart_log[mesh.state.gen])
+            return True
+        return False
+
     def _collect_obs(self, mesh_obs: Optional[Dict[int, List[dict]]]
                      ) -> List[Dict[str, Any]]:
         """Every telemetry snapshot of the run, ordered by rank with the
@@ -620,6 +707,10 @@ class FleetSimulator:
         stats["events_per_sec"] = (stats["events_processed"]
                                    / stats["wall_s"]
                                    if stats["wall_s"] > 0 else 0.0)
+        if self._recovery is not None:       # mesh paths only
+            stats["recoveries"] = self._recovery["recoveries"]
+            stats["reassigned_shards"] = self._recovery["reassigned_shards"]
+            stats["recovery_wall_s"] = self._recovery["recovery_wall_s"]
         result = self._build_result(stats)
         state = getattr(engine, "state", None)
         result.obs = self._obs_report(getattr(state, "obs", None))
@@ -665,30 +756,108 @@ class FleetSimulator:
         # group mesh (pipes or sockets), sync or async: shard-group
         # processes own both the timing engines AND the cohort training;
         # this coordinator replays records, aggregates, and steers the
-        # mesh over the control channel
-        groups = max(1, min(self.workers or self.hosts, self.num_shards))
-        owner_of_shard = {s.shard_id: s.shard_id % groups for s in shards}
-        cohort_owner = self._cohort_owners(owner_of_shard)
-        blobs = self._trainer_blobs(cohort_owner)
-        if self.hosts is not None:
-            engine: Any = HostShardedEngine(
-                shards, lookahead=self._lookahead(), hosts=groups,
-                trainer_blobs=blobs, telemetry=self.telemetry)
-        else:
-            engine = PeerShardedEngine(
-                shards, lookahead=self._lookahead(), groups=groups,
-                trainer_blobs=blobs, telemetry=self.telemetry)
-        self.coordinator = engine
-        self._attach_proxy(engine, cohort_owner)
+        # mesh over the control channel. With recovery enabled, a
+        # GroupFailure (dead / stalled / unreachable group) rebuilds the
+        # mesh over one fewer group, re-assigns shards and cohorts with
+        # the reassign/rehello handshake, re-issues outstanding training
+        # from the last round broadcast base, and replays from the last
+        # committed frontier — ARCHITECTURE §3.7.
+        groups0 = max(1, min(self.workers or self.hosts, self.num_shards))
+        self._recovery = {"recoveries": 0, "reassigned_shards": 0,
+                          "recovery_wall_s": 0.0}
+        attempt = 0
+        prev_owner: Dict[int, int] = {}
         wall0 = time.perf_counter()
-        try:
-            if self.mode == "sync":
-                engine.restart(self._round0_mail())
-            engine.run(self._peer_on_chunk())
-            return self._finish_run(engine, wall0)
-        finally:
-            engine.close()
-            self._mesh = None
+        while True:
+            rec0 = time.perf_counter()
+            span = (obs.span("coord.recovery", attempt=attempt)
+                    if attempt else None)
+            if span is not None:
+                span.__enter__()
+            groups = max(1, groups0 - attempt)
+            if attempt:
+                # shard timing engines are pure functions of the config;
+                # a fresh build replays the same history bit-for-bit
+                shards = self._build_shards(rounds)
+                if self.mode == "async":
+                    for s in shards:
+                        s.bootstrap_async()
+            owner_of_shard = {s.shard_id: s.shard_id % groups
+                              for s in shards}
+            cohort_owner = self._cohort_owners(owner_of_shard)
+            blobs = self._trainer_blobs(cohort_owner)
+            kw: Dict[str, Any] = dict(
+                lookahead=self._lookahead(), trainer_blobs=blobs,
+                telemetry=self.telemetry, fault_plan=self.fault_plan,
+                attempt=attempt,
+                barrier_timeout_s=self.barrier_timeout_s,
+                control_timeout_s=self.control_timeout_s)
+            engine: Any = None
+            try:
+                if self.hosts is not None:
+                    engine = HostShardedEngine(shards, hosts=groups, **kw)
+                else:
+                    engine = PeerShardedEngine(shards, groups=groups, **kw)
+                self.coordinator = engine
+                if attempt == 0:
+                    self._attach_proxy(engine, cohort_owner)
+                else:
+                    # keep the proxy — its update store and request log
+                    # ARE the recovery state; re-arm it on the new mesh
+                    proxy = self._trainer
+                    self._mesh = engine
+                    engine.on_update = proxy.on_update
+                    engine.on_abort = proxy.abort
+                    reassigned = sum(
+                        1 for sid in sorted(owner_of_shard)
+                        if prev_owner.get(sid) != owner_of_shard[sid])
+                    self._recovery["reassigned_shards"] += reassigned
+                    obs.count("coord.reassigned_shards", reassigned)
+                    for g in range(engine.num_groups):
+                        engine.control_send(
+                            g, {"type": "reassign",
+                                "owner": owner_of_shard,
+                                "epoch": attempt})
+                    proxy.reset_for_recovery(engine.control_send,
+                                             cohort_owner)
+                engine.on_idle = self._mesh_catch_up
+                if self.fault_plan is not None:
+                    for f in self.fault_plan.for_coordinator(attempt):
+                        engine.drop_ctrl(f.group % engine.num_groups)
+                prev_owner = owner_of_shard
+                self._skip = self._applied
+                if span is not None:
+                    span.__exit__(None, None, None)
+                    span = None
+                    self._recovery["recovery_wall_s"] += (
+                        time.perf_counter() - rec0)
+                if self.mode == "sync":
+                    if attempt == 0:
+                        self._restart_log.append(self._round0_mail())
+                    engine.restart(self._restart_log[0])
+                engine.run(self._peer_on_chunk())
+                return self._finish_run(engine, wall0)
+            except (GroupFailure, TrainerAborted, OSError, EOFError):
+                if engine is not None:
+                    # silence the dead mesh BEFORE closing it: its
+                    # reader threads can still fire a late abort that
+                    # would poison the re-armed proxy
+                    engine.on_abort = None
+                    engine.on_update = None
+                    engine.on_idle = None
+                    engine.close()
+                    engine = None
+                if not self.recovery or attempt >= self.max_recoveries:
+                    raise
+                self._recovery["recoveries"] += 1
+                obs.count("coord.recoveries")
+                attempt += 1
+            finally:
+                if span is not None:
+                    span.__exit__(None, None, None)
+                if engine is not None:
+                    engine.close()
+                self._mesh = None
 
     def run_multihost(self, rounds: int, *, rank: int,
                       listen: Tuple[str, int],
@@ -737,8 +906,11 @@ class FleetSimulator:
         lookahead = self._lookahead()
         cohort_owner = self._cohort_owners(owner)
         specs = self.fleet.cohort_specs()
+        barrier_s = self.barrier_timeout_s or _BARRIER_TIMEOUT_S
+        control_s = self.control_timeout_s or _BARRIER_TIMEOUT_S
         mailbox = SocketMailbox(rank, host=listen[0], port=listen[1],
-                                backlog=hosts + 4)
+                                backlog=hosts + 4,
+                                barrier_timeout_s=barrier_s)
         sink = SocketRecordSink(addresses[0], rank)
         mailbox.connect(addresses)
         # this rank's trainer: the cohorts it owns, rebuilt from the
@@ -752,7 +924,8 @@ class FleetSimulator:
         try:
             if rank != 0:
                 run_host_windows(group, mailbox, lookahead, sink, owner,
-                                 control=barrier_q, trainer=trainer)
+                                 control=barrier_q, trainer=trainer,
+                                 control_timeout_s=control_s)
                 return None
             # rank 0: drive our own shard group in a thread (it is
             # JAX-free; the trainer runs on its own thread either way)
@@ -762,7 +935,8 @@ class FleetSimulator:
                 try:
                     run_host_windows(group, mailbox, lookahead, sink,
                                      owner, control=barrier_q,
-                                     trainer=trainer)
+                                     trainer=trainer,
+                                     control_timeout_s=control_s)
                 except BaseException:
                     import traceback
                     try:
@@ -779,7 +953,8 @@ class FleetSimulator:
                 ctrl.restart(self._round0_mail())
             finals, trainers = _drive_mesh(
                 lambda t: mailbox.records.get(timeout=t), ctrl.state,
-                self._peer_on_chunk(), ctrl.stop_all)
+                self._peer_on_chunk(), ctrl.stop_all,
+                timeout_s=control_s)
             th.join()
             self._drain_async_tail()
             stats = merge_host_finals(

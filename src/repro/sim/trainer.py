@@ -52,6 +52,14 @@ CohortKey = Tuple[int, int]
 _UPDATE_TIMEOUT_S = 600.0
 
 
+class TrainerAborted(RuntimeError):
+    """A waiter was poisoned: the owner group of a requested update died
+    (or its record stream did) before the update arrived. Recoverable —
+    ``FleetSimulator`` rebuilds the mesh and ``reset_for_recovery``
+    re-issues the outstanding work; callers without a recovery policy
+    see the historical ``RuntimeError`` abort."""
+
+
 class LocalTrainer:
     """Serial-path trainer: the coordinator's own fleet cohorts."""
 
@@ -108,6 +116,9 @@ class GroupTrainer:
         stats — the proof-of-ownership record the bench artifact keys
         on (pid + cohorts actually trained in this process)."""
         if self._th is not None:
+            # repro-lint: allow[deadline-discipline] finish() runs after
+            # the stop message was posted, and the trainer loop returns
+            # unconditionally on stop — bounded by the last train step
             self._th.join()
         if not self._trained_cohorts:
             return None
@@ -136,6 +147,10 @@ class GroupTrainer:
             from repro.runtime.serialization import (pack_pytree,
                                                      unpack_pytree)
             while True:
+                # repro-lint: allow[deadline-discipline] the trainer
+                # inbox has no idle deadline by design — a group may own
+                # cohorts that train rarely; the dispatcher always posts
+                # the terminal stop (coordinator death synthesizes one)
                 msg = self._q.get()
                 kind = msg["type"]
                 if kind == "stop":
@@ -234,7 +249,7 @@ class TrainerProxy:
         with self._cond:
             while key not in self._store:
                 if self._abort is not None:
-                    raise RuntimeError(
+                    raise TrainerAborted(
                         f"cohort trainer aborted while waiting for "
                         f"{cohort_key} epoch {epoch}: {self._abort}")
                 if key not in self._requested:
@@ -255,6 +270,46 @@ class TrainerProxy:
                 obs.observe("trainer.update_latency_s",
                             time.monotonic() - t0)
             return self._store[key]
+
+    def reset_for_recovery(self, send: Callable[[int, Dict[str, Any]],
+                                                None],
+                           owner_of_cohort: Dict[CohortKey, int]) -> int:
+        """Re-arm the proxy against a rebuilt mesh (ARCHITECTURE §3.7).
+
+        Clears the abort poison, swaps in the new control-send and
+        cohort ownership, forgets which groups have seen which broadcast
+        (the rebuilt groups have seen none), and re-issues every
+        *outstanding* request — requested but not yet arrived — against
+        the new owners, broadcasting the **current** aggregator version
+        first (the last round broadcast base: exactly what
+        ``BaseVersionRegistry`` pins live for the round's in-flight
+        epochs; in sync mode the version only advances at round commit,
+        so it is the same base the lost directives named). Outstanding
+        epochs per cohort form a contiguous high range — updates arrive
+        in epoch order per cohort and prune removes prefixes — so the
+        sorted re-issue trains cleanly on a fresh cohort replica.
+        Returns the number of re-issued directives."""
+        with self._cond:
+            self._abort = None
+            self._send = send
+            self._owner = dict(owner_of_cohort)
+            self._group_version = {}
+            outstanding = sorted(k for k in self._requested
+                                 if k not in self._store)
+        version = self._version_of()
+        if self._packed[0] != version:
+            from repro.runtime.serialization import pack_pytree
+            self._packed = (version, pack_pytree(self._params_of()))
+        for cohort_key, epoch in outstanding:
+            group = self._owner[cohort_key]
+            if self._group_version.get(group) != version:
+                self._send(group, {"type": "bcast", "version": version,
+                                   "params": self._packed[1]})
+                self._group_version[group] = version
+            self._send(group, {"type": "train", "cohort": cohort_key,
+                               "epoch": epoch, "version": version,
+                               "lr": float(self._lr_of(epoch))})
+        return len(outstanding)
 
     def prune(self, cohort_key: CohortKey, floor: int) -> None:
         with self._cond:

@@ -17,9 +17,9 @@ from repro.analysis import all_rules, make_config, run_analysis
 from repro.analysis import imports as imports_lib
 from repro.analysis.core import Project, parse_suppressions
 from repro.analysis.docsync import WireSpecDrift, parse_obs_table
-from repro.analysis.rules import (ClockDiscipline, DeterministicIteration,
-                                  JaxImportHygiene, LockDiscipline,
-                                  NoPickleOnWire)
+from repro.analysis.rules import (ClockDiscipline, DeadlineDiscipline,
+                                  DeterministicIteration, JaxImportHygiene,
+                                  LockDiscipline, NoPickleOnWire)
 from repro.analysis.tracecheck import check_trace
 
 REPO = Path(__file__).resolve().parent.parent
@@ -347,6 +347,47 @@ def test_consistent_nesting_is_clean(tmp_path):
         """,
     })
     assert lint(tmp_path, LOCK_CFG, rules=[LockDiscipline()]) == []
+
+
+# ---------------------------------------------------------------------------
+# deadline-discipline
+# ---------------------------------------------------------------------------
+
+DEADLINE_CFG = dict(JAX_CFG, jax_free_modules=[],
+                    deadline_modules=["src/pkg/w.py"])
+
+def test_bare_blocking_waits_fire(tmp_path):
+    write_tree(tmp_path, {
+        "src/pkg/__init__.py": "",
+        "src/pkg/w.py": """\
+            def f(q, conn, th, cond):
+                q.get()
+                conn.recv()
+                th.join()
+                cond.wait()
+        """,
+    })
+    fs = lint(tmp_path, DEADLINE_CFG, rules=[DeadlineDiscipline()])
+    assert rules_of(fs) == ["deadline-discipline"]
+    assert [f.line for f in fs] == [2, 3, 4, 5]
+
+def test_deadlined_and_marked_waits_are_clean(tmp_path):
+    write_tree(tmp_path, {
+        "src/pkg/__init__.py": "",
+        "src/pkg/w.py": """\
+            def f(q, th, cond, block):
+                q.get(timeout=1.0)
+                q.get(True, 1.0)
+                th.join(5.0)
+                cond.wait(timeout=0.5)
+                # repro-lint: allow[deadline-discipline] producer posts a
+                # terminator from its finally: block
+                block.recv()
+        """,
+        "src/pkg/other.py": "def g(q):\n    q.get()\n",  # out of scope
+    })
+    assert lint(tmp_path, DEADLINE_CFG,
+                rules=[DeadlineDiscipline()]) == []
 
 
 # ---------------------------------------------------------------------------

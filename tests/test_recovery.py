@@ -1,0 +1,414 @@
+"""Fault injection and mesh recovery (ARCHITECTURE §3.7): deterministic
+FaultPlans killing real child processes mid-round, the coordinator's
+rebuild/reassign/replay path on both mesh engines, the pre-existing
+abort semantics recovery is built on, and the bounded-jitter reconnect
+backoff."""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.mobility import MobilityTrace, poisson_moves
+from repro.models.vgg import VGG5
+from repro.optim.optimizers import sgd
+from repro.optim.schedules import constant
+from repro.runtime.serialization import pack_pytree
+from repro.sim.edge import make_edges
+from repro.sim.faults import Fault, FaultPlan
+from repro.sim.fleet import Fleet, make_fleet_specs
+from repro.sim.mailbox import (GroupFailure, _connect_retry, _drive_mesh,
+                               _MeshState)
+from repro.sim.simulator import FleetSimulator
+from repro.sim.trainer import TrainerAborted, TrainerProxy
+
+
+def make_sim(*, shards=4, hosts=None, num_clients=16, num_edges=4,
+             rounds=3, seed=1, rate=0.3, **kw):
+    edges = make_edges(num_edges, slots=8)
+    specs = make_fleet_specs(num_clients, [e.edge_id for e in edges],
+                             batch_size=8, num_batches=3)
+    fleet = Fleet(VGG5(), sgd(momentum=0.9), specs, split_point=2,
+                  lr_schedule=constant(0.01), max_replicas=4, seed=seed)
+    trace = MobilityTrace(poisson_moves([s.client_id for s in specs],
+                                        [e.edge_id for e in edges],
+                                        rounds, rate, seed=seed))
+    return FleetSimulator(fleet, edges, mode=kw.pop("mode", "async"),
+                          shards=shards, hosts=hosts, trace=trace,
+                          measure_pack=False, **kw)
+
+
+def assert_timing_matches(faulted, base):
+    """A recovered run replays the same simulated history: every timing
+    metric must be bit-identical to the no-fault serial run (trained
+    parameters MAY differ — in-flight epochs retrain on fresh optimizer
+    state)."""
+    assert faulted.migration_summary == base.migration_summary
+    assert faulted.edge_stats == base.edge_stats
+    assert len(faulted.rounds) == len(base.rounds)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: killed shard groups recover on both engines, both modes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_pipes_sync_kill_recovers():
+    """A pipe-mesh group os._exit-killed at the start of round 1 (a real
+    dead child, not a mock): the run completes every round with one
+    recovery, re-assigned shards, and bit-identical timing metrics."""
+    base = make_sim(mode="sync").run(3)
+    plan = FaultPlan((Fault("kill", group=1, round=1),))
+    r = make_sim(mode="sync", workers=2, fault_plan=plan).run(3)
+    assert r.engine_stats["recoveries"] == 1
+    assert r.engine_stats["reassigned_shards"] >= 1
+    assert r.engine_stats["recovery_wall_s"] > 0
+    assert r.summary()["recoveries"] == 1
+    assert_timing_matches(r, base)
+
+
+@pytest.mark.slow
+def test_pipes_async_window_kill_recovers():
+    """Async mode, window-triggered kill: no round barrier exists, so
+    the fault fires on the group's window count."""
+    base = make_sim().run(3)
+    plan = FaultPlan((Fault("kill", group=0, window=2),))
+    r = make_sim(workers=2, fault_plan=plan).run(3)
+    assert r.engine_stats["recoveries"] == 1
+    assert_timing_matches(r, base)
+
+
+@pytest.mark.slow
+def test_hosts_sync_kill_recovers():
+    """Socket-mesh host process killed mid-round: the survivors abort
+    themselves on the dead-peer sentinel and the coordinator rebuilds
+    over one fewer host."""
+    base = make_sim(mode="sync").run(3)
+    plan = FaultPlan((Fault("kill", group=1, round=1),))
+    r = make_sim(mode="sync", hosts=2, fault_plan=plan).run(3)
+    assert r.engine_stats["recoveries"] == 1
+    assert r.engine_stats["reassigned_shards"] >= 1
+    assert_timing_matches(r, base)
+
+
+@pytest.mark.slow
+def test_hosts_drop_records_recovers():
+    """A closed records stream (process survives, network path dies) is
+    a group failure too — same recovery, no hang."""
+    base = make_sim().run(3)
+    plan = FaultPlan((Fault("drop_records", group=1, window=3),))
+    r = make_sim(hosts=2, fault_plan=plan).run(3)
+    assert r.engine_stats["recoveries"] == 1
+    assert_timing_matches(r, base)
+
+
+@pytest.mark.slow
+def test_externally_killed_host_recovers():
+    """A host killed from outside (no FaultPlan — the engine has no idea
+    a fault was scheduled): the coordinator still recovers."""
+    sim = make_sim(mode="sync", hosts=2)
+    base = make_sim(mode="sync").run(3)
+
+    def killer():
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            eng = getattr(sim, "coordinator", None)
+            procs = getattr(eng, "_procs", None)
+            if procs and procs[1].is_alive():
+                procs[1].kill()
+                return
+            time.sleep(0.02)
+
+    th = threading.Thread(target=killer, daemon=True)
+    th.start()
+    r = sim.run(3)
+    th.join(timeout=5)
+    assert r.engine_stats["recoveries"] >= 1
+    assert_timing_matches(r, base)
+
+
+@pytest.mark.slow
+def test_two_groups_dying_same_round_recovers_once():
+    """Both groups killed in the same round: one rebuild replaces the
+    whole session, so a single recovery suffices."""
+    base = make_sim(mode="sync").run(3)
+    plan = FaultPlan((Fault("kill", group=0, round=1),
+                      Fault("kill", group=1, round=1)))
+    r = make_sim(mode="sync", workers=2, fault_plan=plan).run(3)
+    assert r.engine_stats["recoveries"] == 1
+    assert_timing_matches(r, base)
+
+
+@pytest.mark.slow
+def test_recovery_disabled_aborts():
+    """recovery=False preserves the historical semantics: a killed group
+    aborts the run with a clear error instead of rebuilding."""
+    plan = FaultPlan((Fault("kill", group=1, round=1),))
+    sim = make_sim(mode="sync", workers=2, fault_plan=plan,
+                   recovery=False)
+    with pytest.raises(RuntimeError, match="died|disconnected|failed"):
+        sim.run(3)
+
+
+@pytest.mark.slow
+def test_max_recoveries_exhausted_aborts():
+    """A fault that re-fires on every attempt eventually exhausts the
+    recovery budget and aborts with the last failure."""
+    plan = FaultPlan(tuple(Fault("kill", group=0, round=1, attempt=a)
+                           for a in range(3)))
+    sim = make_sim(mode="sync", workers=2, fault_plan=plan,
+                   max_recoveries=1)
+    with pytest.raises(RuntimeError, match="died|disconnected|failed"):
+        sim.run(3)
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault("explode", group=0, window=1)
+    with pytest.raises(ValueError, match="exactly one of"):
+        Fault("kill", group=0)
+    with pytest.raises(ValueError, match="exactly one of"):
+        Fault("kill", group=0, window=1, round=1)
+    with pytest.raises(ValueError, match="delay_s"):
+        Fault("delay", group=0, window=1)
+    # a fault plan on the serial path has nowhere to fire
+    with pytest.raises(ValueError):
+        make_sim(fault_plan=FaultPlan((Fault("kill", group=0,
+                                             window=1),)))
+    plan = FaultPlan((Fault("kill", group=0, window=1),
+                      Fault("drop_ctrl", group=1, attempt=1)))
+    assert plan.for_group(0, 0) == (plan.faults[0],)
+    assert plan.for_group(0, 1) == ()
+    assert plan.for_coordinator(1) == (plan.faults[1],)
+    assert bool(FaultPlan()) is False
+
+
+# ---------------------------------------------------------------------------
+# satellite: the pre-existing abort paths, unit-level
+# ---------------------------------------------------------------------------
+
+def _drive(msgs, state, on_chunk=None, on_idle=None):
+    seq = list(msgs)
+
+    def get(timeout):
+        if not seq:
+            raise queue.Empty
+        return seq.pop(0)
+
+    return _drive_mesh(get, state, on_chunk or (lambda *a: None),
+                       lambda: None, timeout_s=0.1, on_idle=on_idle)
+
+
+def test_drive_mesh_err_propagates_traceback():
+    """An err message (window loop OR trainer thread) fails the session
+    with the carried traceback in the exception text."""
+    state = _MeshState(1)
+    with pytest.raises(GroupFailure, match="ZeroDivisionError: boom"):
+        _drive([("err", 0, {"traceback": "ZeroDivisionError: boom"})],
+               state)
+
+
+def test_drive_mesh_dead_sentinel_after_done_is_clean():
+    """The lost sentinel is FIFO with the record stream: arriving after
+    the group's done message it is a clean close, not a death."""
+    state = _MeshState(2)
+    finals, _ = _drive([
+        ("done", 0, {"stats": {0: {"x": 1}}, "trainer": None}),
+        ("lost", 0, {"err": "connection reset"}),
+        ("done", 1, {"stats": {1: {"x": 2}}, "trainer": None}),
+    ], state)
+    assert finals == {0: {"x": 1}, 1: {"x": 2}}
+
+
+def test_drive_mesh_queued_records_processed_before_death():
+    """Records the group shipped before dying are delivered (FIFO ahead
+    of the sentinel) before the failure surfaces."""
+    state = _MeshState(1)
+    chunks = []
+    with pytest.raises(GroupFailure, match="died mid-run"):
+        _drive([
+            ("records", 0, {"bound": 5.0,
+                            "records": {"contribs": [(1.0,)],
+                                        "epoch_starts": [],
+                                        "migrations": []}}),
+            ("lost", 0, {"err": "process died"}),
+        ], state, on_chunk=lambda f, c: chunks.append((f, c)))
+    assert any(c for _, c in chunks if c)          # chunk delivered
+    assert state.frontiers[0] == 5.0               # frontier advanced
+
+
+def test_drive_mesh_stall_raises_group_failure():
+    state = _MeshState(1)
+    with pytest.raises(GroupFailure, match="no progress"):
+        _drive([], state)
+
+
+def test_drive_mesh_records_rehello():
+    state = _MeshState(1)
+    _drive([
+        ("rehello", 0, {"epoch": 2}),
+        ("done", 0, {"stats": {}, "trainer": None}),
+    ], state)
+    assert state.rehellos == {0: 2}
+
+
+def test_drive_mesh_on_idle_catch_up_hook():
+    """The recovery catch-up hook gets the last word at idle-complete:
+    returning True (a round was re-injected) keeps the session alive;
+    returning False lets it stop."""
+    state = _MeshState(1)
+    calls = []
+
+    def on_idle():
+        calls.append(state.gen)
+        if state.gen == 0:        # emulate mesh.restart(log[0])
+            state.gen += 1
+            state.reset()
+            return True
+        return False
+
+    _drive([
+        ("idle", 0, {"gen": 0}),
+        ("idle", 0, {"gen": 1}),
+        ("done", 0, {"stats": {}, "trainer": None}),
+    ], state, on_idle=on_idle)
+    assert calls == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# satellite: trainer proxy abort -> reset_for_recovery
+# ---------------------------------------------------------------------------
+
+def _make_proxy(sent):
+    params = {"w": np.ones(3, np.float32)}
+    return TrainerProxy(lambda g, m: sent.append((g, m)),
+                        {("c0",): 0, ("c1",): 1},
+                        lr_of=lambda e: 0.1,
+                        params_of=lambda: params,
+                        version_of=lambda: 7,
+                        timeout_s=5.0)
+
+
+def test_proxy_abort_poisons_waiters_and_recovery_reissues():
+    """abort() wakes a blocked update_for with TrainerAborted; after
+    reset_for_recovery the SAME store survives, the poison clears, and
+    only the outstanding (requested-but-unanswered) epochs are re-issued
+    — one bcast of the current version per new group first."""
+    sent = []
+    proxy = _make_proxy(sent)
+    proxy.request(("c0",), 0)
+    proxy.request(("c1",), 0)
+    proxy.request(("c1",), 1)
+    # c1 epoch 0 answered before the failure
+    proxy.on_update({"cohort": ("c1",), "epoch": 0,
+                     "payload": pack_pytree(
+                         {"trees": [{"w": np.zeros(3, np.float32)}],
+                          "losses": np.zeros(1, np.float32)})})
+    proxy.abort("group 1 died")
+    with pytest.raises(TrainerAborted, match="group 1 died"):
+        proxy.update_for(("c0",), 0)
+
+    sent2 = []
+    n = proxy.reset_for_recovery(lambda g, m: sent2.append((g, m)),
+                                 {("c0",): 0, ("c1",): 0})
+    assert n == 2                      # c0/0 and c1/1; c1/0 is stored
+    kinds = [(g, m["type"]) for g, m in sent2]
+    assert kinds == [(0, "bcast"), (0, "train"), (0, "train")]
+    assert all(m["version"] == 7 for _, m in sent2)
+    trains = [(tuple(m["cohort"]), m["epoch"])
+              for _, m in sent2 if m["type"] == "train"]
+    assert trains == [(("c0",), 0), (("c1",), 1)]   # sorted re-issue
+    # the stored update survived the recovery untouched
+    trees, _ = proxy.update_for(("c1",), 0)
+    assert (trees[0]["w"] == 0).all()
+    # and a late answer to a re-issued epoch unblocks its waiter
+    proxy.on_update({"cohort": ("c0",), "epoch": 0,
+                     "payload": pack_pytree(
+                         {"trees": [{"w": np.ones(3, np.float32)}],
+                          "losses": np.zeros(1, np.float32)})})
+    proxy.update_for(("c0",), 0)
+
+
+# ---------------------------------------------------------------------------
+# satellites: jitter, timeout knobs
+# ---------------------------------------------------------------------------
+
+def test_connect_retry_jitter_deterministic(monkeypatch):
+    """The reconnect backoff jitter is seeded per rank: identical
+    schedule for the same rank across runs (reproducible chaos tests),
+    different schedules across ranks (no thundering herd)."""
+    import repro.sim.mailbox as mb
+
+    def schedule(rank):
+        # fake clock: time advances only through sleep, so the deadline
+        # clamp never truncates a backoff step and the schedule is pure
+        clock = [0.0]
+        sleeps = []
+
+        def fake_sleep(s):
+            sleeps.append(s)
+            clock[0] += s
+
+        monkeypatch.setattr(mb.time, "monotonic", lambda: clock[0])
+        monkeypatch.setattr(mb.time, "sleep", fake_sleep)
+        with pytest.raises(OSError):
+            # port 1 refuses instantly; only the backoff sleeps matter
+            _connect_retry(("127.0.0.1", 1), retry_s=2.0, rank=rank)
+        return sleeps
+
+    a, b, c = schedule(3), schedule(3), schedule(4)
+    assert a and a == b                    # same rank -> same schedule
+    assert a[0] != c[0]                    # ranks de-synchronized
+    gen = np.random.Generator(
+        np.random.PCG64((3 + 2) * 2654435761 % 2**32))
+    assert a[0] == pytest.approx(0.05 * (0.5 + gen.random()), rel=1e-12)
+    assert a[1] == pytest.approx(0.10 * (0.5 + gen.random()), rel=1e-12)
+
+
+def test_timeout_knobs_thread_through():
+    """barrier_timeout_s / control_timeout_s are per-run knobs on the
+    simulator and the scenario spec, not module constants."""
+    sim = make_sim(workers=2, barrier_timeout_s=123.0,
+                   control_timeout_s=77.0)
+    assert sim.barrier_timeout_s == 123.0
+    assert sim.control_timeout_s == 77.0
+    from repro.sim.scenarios import SCENARIOS, build_scenario
+    spec = SCENARIOS["edge_failure"].replace(
+        num_clients=8, barrier_timeout_s=55.0, control_timeout_s=44.0)
+    s2 = build_scenario(spec)
+    assert s2.barrier_timeout_s == 55.0
+    assert s2.control_timeout_s == 44.0
+    assert s2.fault_plan is not None
+
+
+# ---------------------------------------------------------------------------
+# satellite: failure scenarios price migration through the real pipeline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_edge_failure_scenario_prices_evacuation():
+    """edge_failure: clients evacuate the dead edge through the real
+    delta-migration pipeline (priced bytes in the summary) while the
+    mesh recovers from the killed group."""
+    from repro.sim.scenarios import SCENARIOS, run_scenario
+    spec = SCENARIOS["edge_failure"].replace(num_clients=16, num_edges=4)
+    rep = run_scenario(spec)
+    assert rep["engine"]["recoveries"] >= 1
+    assert rep["migrations"]["count"] > 0
+    assert rep["migrations"]["total_bytes"] > 0     # priced, not waved away
+    assert len(rep["rounds"]) == spec.rounds
+
+
+@pytest.mark.slow
+def test_rolling_restart_recovers_per_attempt():
+    """rolling_restart schedules one kill per recovery attempt: the mesh
+    shrinks and re-assigns each time, and still finishes."""
+    from repro.sim.scenarios import SCENARIOS, run_scenario
+    spec = SCENARIOS["rolling_restart"].replace(num_clients=16,
+                                                num_edges=4)
+    rep = run_scenario(spec)
+    assert rep["engine"]["recoveries"] == 2
+    assert len(rep["rounds"]) == spec.rounds
