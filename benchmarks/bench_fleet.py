@@ -20,6 +20,19 @@ per-shard-count events/sec artifact (``--artifact``, default
 bench_fleet_shards.json). The artifact records os.cpu_count: the ≥1.5x
 point for 4 workers at 10k devices needs ≥4 cores.
 
+Scale sweep: ``--scale-sweep 1000 100000 1000000`` runs the first
+selected scenario once per device count under the million-device engine
+(struct-of-arrays client state + calendar-queue scheduler,
+``client_state="soa"``/``scheduler="calendar"``), and the objects+heap
+reference engine at every point up to ``--exact-limit`` (default 100k),
+asserting the per-round metrics are bit-identical wherever both run.
+Above ``--cap-participants`` devices per-round participation is sampled
+down (sync sampled cohorts, repro.sim.sampling) so the hot loop scales
+with participants instead of population. The events/sec-vs-device-count
+curve lands in the artifact (default ``bench_fleet_scale.json``);
+``--min-speedup X`` asserts the SoA engine beats the reference by at
+least X at the largest exact point.
+
 Multi-host execution: ``--hosts N`` runs the first selected scenario on
 N shard-group host processes connected only by TCP sockets (the
 multi-host mailbox protocol, localhost harness), compares events/sec
@@ -104,15 +117,23 @@ def _run_one(name: str, spec) -> dict:
     t1 = time.time()
     rep = run_scenario(spec)
     wall = time.time() - t1
+    eng = rep["engine"]
+    ew = eng.get("engine_wall_s", 0.0)
     return {
         "wall_s": round(wall, 3),
-        "events_per_sec": round(rep["engine"]["events_per_sec"], 1),
-        "events": rep["engine"]["events_processed"],
-        "windows": rep["engine"].get("windows", 1),
-        "sim_time_s": round(rep["engine"]["sim_time_s"], 3),
+        "events_per_sec": round(eng["events_per_sec"], 1),
+        # event-loop throughput: excludes the shared trainer/replay
+        # callback, which is identical work under every engine — the
+        # number that compares engine implementations
+        "engine_wall_s": round(ew, 3),
+        "engine_events_per_sec": round(
+            eng["events_processed"] / ew if ew > 0 else 0.0, 1),
+        "events": eng["events_processed"],
+        "windows": eng.get("windows", 1),
+        "sim_time_s": round(eng["sim_time_s"], 3),
         "rounds": rep["rounds"],
         "migration_overhead": rep["migrations"],
-        "trainers": _trainer_summary(rep["engine"]),
+        "trainers": _trainer_summary(eng),
     }
 
 
@@ -161,6 +182,72 @@ def _shard_sweep(args, name: str, n_clients: int, n_edges: int,
         sweep["per_shards"][str(k)]["speedup_vs_first"] = round(speedup, 2)
         print(f"  shards={k} speedup vs shards={args.shard_sweep[0]}: "
               f"{speedup:.2f}x (cpu_count={os.cpu_count()})")
+    return sweep
+
+
+def _scale_sweep(args, name: str, n_edges: int, rounds: int) -> dict:
+    """events/sec vs device count (the million-device curve): the
+    SoA+calendar hot path at every point, the objects+heap reference
+    wherever it is feasible (``--exact-limit``), asserting bit-identical
+    per-round metrics at every point where both run. Above
+    ``--cap-participants`` devices, per-round participation is sampled
+    down (sync mode, repro.sim.sampling) so the hot loop scales with
+    participants instead of population — exactly the regime the SoA
+    engine exists for."""
+    sweep = {"scenario": name, "edges": n_edges, "rounds": rounds,
+             "num_batches": args.num_batches,
+             "exact_limit": args.exact_limit,
+             "cap_participants": args.cap_participants,
+             "cpu_count": os.cpu_count(), "points": []}
+    last_speedup = None
+    for n in args.scale_sweep:
+        frac = 1.0 if n <= args.cap_participants \
+            else args.cap_participants / n
+        spec = _scenario_spec(name, args, n, n_edges, rounds,
+                              1, None).replace(
+            mode="sync", measure_pack=False,
+            num_batches=args.num_batches, sample_fraction=frac)
+        point = {"devices": n, "sample_fraction": frac, "engines": {}}
+        keys = ("events_per_sec", "engine_events_per_sec", "wall_s",
+                "engine_wall_s", "events", "sim_time_s")
+        soa = _run_one(name, spec.replace(client_state="soa",
+                                          scheduler="calendar"))
+        point["engines"]["soa_calendar"] = {k: soa[k] for k in keys}
+        print(f"  {n:>9,d} devices (f={frac:.3g}): soa+calendar "
+              f"{soa['engine_events_per_sec']:10.0f} ev/s  "
+              f"{soa['engine_wall_s']:7.1f}s loop  "
+              f"{soa['wall_s']:7.1f}s wall  {soa['events']:,d} events")
+        if n <= args.exact_limit:
+            ref = _run_one(name, spec)        # objects + heap reference
+            point["engines"]["objects_heap"] = {k: ref[k] for k in keys}
+            identical = ref["rounds"] == soa["rounds"]
+            point["rounds_bit_identical"] = identical
+            if not identical:
+                raise AssertionError(
+                    f"per-round metrics differ between objects+heap and "
+                    f"soa+calendar at {n} devices — the SoA engine must "
+                    f"be bit-identical to the reference")
+            # speedup of the event loop itself: both paths run the same
+            # XLA training + replay callback (bit-identical rounds prove
+            # it), so the engine wall is the comparable denominator
+            speedup = (soa["engine_events_per_sec"]
+                       / ref["engine_events_per_sec"]
+                       if ref["engine_events_per_sec"] else 0.0)
+            point["speedup"] = round(speedup, 2)
+            last_speedup = speedup
+            print(f"  {'':>9s} reference:    objects+heap "
+                  f"{ref['engine_events_per_sec']:10.0f} ev/s  "
+                  f"{ref['engine_wall_s']:7.1f}s loop  "
+                  f"{ref['wall_s']:7.1f}s wall  "
+                  f"engine speedup {speedup:.2f}x  "
+                  f"bit-identical: {identical}")
+        sweep["points"].append(point)
+    if args.min_speedup is not None:
+        assert last_speedup is not None, \
+            "--min-speedup needs at least one point within --exact-limit"
+        assert last_speedup >= args.min_speedup, (
+            f"soa+calendar is {last_speedup:.2f}x the reference at the "
+            f"largest exact point; required >= {args.min_speedup}x")
     return sweep
 
 
@@ -335,6 +422,29 @@ def main(argv=None) -> None:
     ap.add_argument("--shard-sweep", type=int, nargs="*", default=None,
                     help="run the first scenario once per shard count, "
                          "verify bit-identity, emit the artifact")
+    ap.add_argument("--scale-sweep", type=int, nargs="*", default=None,
+                    metavar="N",
+                    help="run the first scenario once per device count "
+                         "(soa+calendar everywhere, objects+heap up to "
+                         "--exact-limit), assert bit-identity wherever "
+                         "both run, emit the events/sec-vs-devices "
+                         "artifact (default bench_fleet_scale.json)")
+    ap.add_argument("--exact-limit", type=int, default=100_000,
+                    help="largest --scale-sweep point that also runs the "
+                         "objects+heap reference for the bit-identity "
+                         "and speedup comparison")
+    ap.add_argument("--cap-participants", type=int, default=100_000,
+                    help="above this device count --scale-sweep samples "
+                         "per-round participation down to ~this many "
+                         "clients (sync sampled cohorts)")
+    ap.add_argument("--num-batches", type=int, default=8,
+                    help="local batches per epoch in --scale-sweep (more "
+                         "batches = more shard-engine events per "
+                         "contribution)")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="--scale-sweep: require soa+calendar to beat "
+                         "objects+heap by this factor at the largest "
+                         "exact point")
     ap.add_argument("--hosts", type=int, default=None,
                     help="run the first scenario on N socket-connected "
                          "host processes, compare vs serial and pipe "
@@ -391,6 +501,24 @@ def main(argv=None) -> None:
                           ("recoveries", "reassigned_shards",
                            "recovery_wall_s", "timing_bit_identical",
                            "rounds_completed")}))
+        return
+
+    if args.scale_sweep:
+        # sweep runs sync mode; the alphabetical default would pick the
+        # async-only device_churn scenario
+        name = args.scenarios[0] if args.scenarios != sorted(SCENARIOS) \
+            else "poisson"
+        artifact = args.artifact or "bench_fleet_scale.json"
+        print(f"# scale sweep: {name}, device counts {args.scale_sweep}, "
+              f"{n_edges} edges, {rounds} rounds, "
+              f"{args.num_batches} batches/epoch, exact path up to "
+              f"{args.exact_limit:,d} devices")
+        sweep = _scale_sweep(args, name, n_edges, rounds)
+        with open(artifact, "w") as f:
+            json.dump(sweep, f)
+        print(f"# artifact: {artifact}")
+        print(json.dumps([{k: p[k] for k in p if k != "engines"}
+                          for p in sweep["points"]]))
         return
 
     if args.shard_sweep:

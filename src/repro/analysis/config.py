@@ -27,6 +27,8 @@ DEFAULT_CONFIG: Dict[str, Any] = {
     # A trailing ".*" covers every submodule of a package.
     "jax_free_modules": [
         "repro.sim.shard",
+        "repro.sim.soa",
+        "repro.sim.sampling",
         "repro.sim.engine",
         "repro.sim.mailbox",
         "repro.sim.trainer",
@@ -54,8 +56,11 @@ DEFAULT_CONFIG: Dict[str, Any] = {
     # numerics / replay-side modules where NO process clock of any kind
     # may be read: timing must come from simulated time alone, or
     # bit-identity across shard/worker/host counts dies.
+    # (soa.py mirrors engine.py: its only clock is the perf_counter
+    # wall-time *accounting* around run_window, never simulation state)
     "pure_sim_modules": [
         "src/repro/sim/shard.py",
+        "src/repro/sim/sampling.py",
         "src/repro/sim/fleet.py",
         "src/repro/sim/async_agg.py",
         "src/repro/core/fedavg.py",

@@ -63,6 +63,157 @@ class Event:
 Handler = Callable[[Event], None]
 
 
+class _HeapQueue:
+    """The reference priority queue: a binary heap of comparable entry
+    tuples whose first three elements are ``(time, key, seq)``."""
+
+    __slots__ = ("_heap",)
+
+    def __init__(self):
+        self._heap: List[tuple] = []
+
+    def push(self, entry: tuple) -> None:
+        heapq.heappush(self._heap, entry)
+
+    def pop(self) -> tuple:
+        return heapq.heappop(self._heap)
+
+    def peek(self) -> Optional[tuple]:
+        return self._heap[0] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+class CalendarQueue:
+    """Brown-style calendar queue with the same total order as
+    ``_HeapQueue``: entries are comparable tuples led by
+    ``(time, key, seq)`` and pops yield the global minimum.
+
+    Entries hash into ``nbuckets`` year-wrapped buckets of ``width``
+    simulated seconds (bucket = ``int(t / width) % nbuckets``); each
+    bucket is a small binary heap, so ties at one instant — which always
+    land in the same bucket — still pop in ``(time, key, seq)`` order.
+    Pops scan at most one "year" of buckets starting from the bucket of
+    the last popped time and fall back to a direct min-over-heads scan
+    for sparse far-future events, so a miss costs speed, never
+    correctness. The queue self-resizes (bucket count ~ size/2, width ~
+    4x the mean inter-event gap) to keep buckets near-constant size.
+
+    The pop cursor ``_last`` maintains the invariant ``_last <= min
+    queued time``: pops set it to the popped time (the old minimum) and
+    a push below the cursor pulls it back. The pull-back matters when a
+    *cancelled* far-future head was popped (advancing the cursor) while
+    the engine clock — which bounds new schedules — stayed earlier.
+    """
+
+    __slots__ = ("_buckets", "_nbuckets", "_width", "_size", "_last",
+                 "_peeked")
+
+    _MIN_BUCKETS = 8
+    _MAX_BUCKETS = 1 << 16
+
+    def __init__(self, nbuckets: int = 8, width: float = 1.0):
+        self._buckets: List[list] = [[] for _ in range(nbuckets)]
+        self._nbuckets = nbuckets
+        self._width = width
+        self._size = 0
+        self._last = 0.0                   # largest time popped so far
+        self._peeked: Optional[int] = None  # head bucket found by peek()
+
+    def push(self, entry: tuple) -> None:
+        heapq.heappush(
+            self._buckets[int(entry[0] / self._width) % self._nbuckets],
+            entry)
+        self._size += 1
+        self._peeked = None
+        if entry[0] < self._last:
+            self._last = entry[0]
+        if self._size > self._nbuckets * 4 and \
+                self._nbuckets < self._MAX_BUCKETS:
+            self._rebuild()
+
+    def _head_bucket(self) -> Optional[int]:
+        """Bucket index holding the global-min entry (None if empty)."""
+        if self._size == 0:
+            return None
+        w, n = self._width, self._nbuckets
+        start = int(self._last / w)
+        b = start % n
+        for i in range(n):
+            bl = self._buckets[b]
+            if bl and bl[0][0] < (start + i + 1) * w:
+                return b
+            b = b + 1 if b + 1 < n else 0
+        # sparse queue: no entry within one year of the cursor — direct
+        # min over bucket heads (equal times share a bucket, so the
+        # head tuples themselves are totally ordered)
+        best = None
+        for i, bl in enumerate(self._buckets):
+            if bl and (best is None or bl[0] < self._buckets[best][0]):
+                best = i
+        return best
+
+    def pop(self) -> tuple:
+        # the peek()/pop() pairing every engine loop does would scan the
+        # buckets twice; nothing can change the head between the two, so
+        # pop reuses the bucket peek found (pushes/rebuilds invalidate)
+        b = self._peeked if self._peeked is not None \
+            else self._head_bucket()
+        self._peeked = None
+        if b is None:
+            raise IndexError("pop from an empty CalendarQueue")
+        entry = heapq.heappop(self._buckets[b])
+        self._size -= 1
+        self._last = entry[0]
+        if self._size < self._nbuckets // 4 and \
+                self._nbuckets > self._MIN_BUCKETS:
+            self._rebuild()
+        return entry
+
+    def peek(self) -> Optional[tuple]:
+        b = self._head_bucket()
+        self._peeked = b
+        return self._buckets[b][0] if b is not None else None
+
+    def __len__(self) -> int:
+        return self._size
+
+    def _rebuild(self) -> None:
+        self._peeked = None
+        entries = [e for bl in self._buckets for e in bl]
+        n = self._MIN_BUCKETS
+        while n < len(entries) // 2 and n < self._MAX_BUCKETS:
+            n *= 2
+        if entries:
+            tmin = min(e[0] for e in entries)
+            tmax = max(e[0] for e in entries)
+            if tmax > tmin:
+                self._width = max((tmax - tmin) / len(entries) * 4.0, 1e-9)
+        self._nbuckets = n
+        self._buckets = [[] for _ in range(n)]
+        w = self._width
+        for e in entries:
+            self._buckets[int(e[0] / w) % n].append(e)
+        for bl in self._buckets:
+            if len(bl) > 1:
+                heapq.heapify(bl)
+
+
+_SCHEDULERS = {"heap": _HeapQueue, "calendar": CalendarQueue}
+
+
+def make_queue(scheduler: str):
+    """Build an event queue by name (``"heap"`` | ``"calendar"``) —
+    shared by ``SimEngine`` and the SoA shard's lean event loop."""
+    try:
+        return _SCHEDULERS[scheduler]()
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduler {scheduler!r}; expected one of "
+            f"{sorted(_SCHEDULERS)}") from None
+
+
 class SimEngine:
     """Event queue + simulated clock.
 
@@ -74,11 +225,13 @@ class SimEngine:
     1
     """
 
-    def __init__(self):
+    def __init__(self, scheduler: str = "heap"):
         self.now = 0.0
-        self._heap: List[Tuple[float, str, int, Event]] = []
+        self.scheduler = scheduler
+        self._queue = make_queue(scheduler)
         self._seq = 0
-        self._cancelled: set = set()
+        self._live: set = set()            # seqs queued and not cancelled
+        self._cancelled: set = set()       # seqs cancelled but still queued
         self._handlers: Dict[EventKind, Handler] = {}
         self.events_processed = 0
         self.counts: Counter = Counter()
@@ -105,18 +258,25 @@ class SimEngine:
                              f"({t} < {self.now})")
         ev = Event(time=t, seq=self._seq, kind=kind, payload=payload, key=key)
         self._seq += 1
-        heapq.heappush(self._heap, (ev.time, ev.key, ev.seq, ev))
+        self._queue.push((ev.time, ev.key, ev.seq, ev))
+        self._live.add(ev.seq)
         return ev
 
     def cancel(self, ev: Event) -> None:
         """Invalidate a scheduled event (congestion re-pricing replaces
         in-flight BATCH_DONEs). Cancelled events never run, never touch
-        the clock, and never count."""
-        self._cancelled.add(ev.seq)
+        the clock, and never count. Cancelling an event that already ran
+        (or was already cancelled) is a no-op — the liveness guard keeps
+        ``_cancelled`` from leaking seqs that will never be popped."""
+        if ev.seq in self._live:
+            self._live.discard(ev.seq)
+            self._cancelled.add(ev.seq)
 
     def _drop_cancelled_head(self) -> None:
-        while self._heap and self._heap[0][2] in self._cancelled:
-            self._cancelled.discard(heapq.heappop(self._heap)[2])
+        head = self._queue.peek()
+        while head is not None and head[2] in self._cancelled:
+            self._cancelled.discard(self._queue.pop()[2])
+            head = self._queue.peek()
 
     # -- the loop --------------------------------------------------------
 
@@ -131,16 +291,18 @@ class SimEngine:
         n = 0
         while True:
             self._drop_cancelled_head()
-            if not self._heap:
+            head = self._queue.peek()
+            if head is None:
                 break
             if max_events is not None and n >= max_events:
                 break
-            t_next = self._heap[0][0]
+            t_next = head[0]
             if until is not None and t_next > until:
                 break
             if before is not None and t_next >= before:
                 break
-            _, _, _, ev = heapq.heappop(self._heap)
+            _, _, seq, ev = self._queue.pop()
+            self._live.discard(seq)
             self.now = ev.time
             handler = self._handlers.get(ev.kind)
             if handler is None:
@@ -154,13 +316,14 @@ class SimEngine:
 
     @property
     def pending(self) -> int:
-        return len(self._heap) - len(self._cancelled)
+        return len(self._live)
 
     def peek_time(self) -> Optional[float]:
         """Simulated time of the next live queued event (None if
         drained)."""
         self._drop_cancelled_head()
-        return self._heap[0][0] if self._heap else None
+        head = self._queue.peek()
+        return head[0] if head is not None else None
 
     @property
     def events_per_sec(self) -> float:
@@ -172,6 +335,7 @@ class SimEngine:
             "events_per_sec": self.events_per_sec,
             "sim_time_s": self.now,
             "wall_s": self.wall_s,
+            "engine_wall_s": self.wall_s,
             "by_kind": {k.value: v for k, v in sorted(
                 self.counts.items(), key=lambda kv: kv[0].value)},
         }
@@ -221,17 +385,23 @@ def _merge_shard_stats(per_shard: Dict[int, Dict[str, Any]], *,
     edges: List[Dict[str, Any]] = []
     sim_time = 0.0
     total = 0
+    engine_wall = 0.0
     for sid in sorted(per_shard):
         eng = per_shard[sid]["engine"]
         counts.update(eng["by_kind"])
         sim_time = max(sim_time, eng["sim_time_s"])
         total += eng["events_processed"]
+        engine_wall += eng.get("wall_s", 0.0)
         edges.extend(per_shard[sid].get("edges", []))
     return {
         "events_processed": total,
         "events_per_sec": total / wall_s if wall_s > 0 else 0.0,
         "sim_time_s": sim_time,
         "wall_s": wall_s,
+        # event-loop time only (sum over shards): excludes the coordinator
+        # callback (XLA training + replay), which is identical work for
+        # every engine implementation — the denominator for comparing them
+        "engine_wall_s": engine_wall,
         "windows": windows,
         "num_shards": num_shards,
         "by_kind": dict(sorted(counts.items())),

@@ -1,0 +1,94 @@
+"""Deterministic per-round client sampling (the production mobile-edge
+FL regime: each round trains a sampled cohort, not the population).
+
+The participation decision is a pure function of ``(seed, round_idx,
+client_id)``:
+
+1. a per-round 64-bit key drawn from PCG64 seeded on
+   ``SeedSequence([seed, round_idx])`` — rounds are decorrelated the
+   same way regardless of who asks;
+2. a stable per-client 64-bit digest (blake2b-8 of the id bytes) —
+   independent of insertion order, shard assignment, or index;
+3. a splitmix64 finalizer mixing (1) xor (2) into a uniform in [0, 1),
+   compared against ``fraction``.
+
+Because the decision never consults engine state, every shard — and
+the coordinator — can evaluate it locally for any subset of clients
+and always agree: sampling is order-independent and
+partition-independent by construction, which is what keeps round
+metrics bit-identical across shard/worker/host counts. ``fraction >=
+1.0`` short-circuits to all-participate without touching the RNG, so
+an unsampled run is bit-identical to a pre-sampling engine.
+
+Bernoulli-per-client (not exact-m draws) keeps the rule local: a shard
+never needs the global id list. The coordinator handles the (rare,
+small-fleet) rounds where nobody is sampled by recording a skipped
+round and advancing — see ``FleetSimulator._commit_round``.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, Iterable, Sequence
+
+import numpy as np
+
+__all__ = ["client_digest", "digests_for", "round_key",
+           "participation_mask", "participates"]
+
+_U64 = np.uint64
+_INV_2_53 = float(2.0 ** -53)
+
+
+def client_digest(client_id: str) -> int:
+    """Stable 64-bit digest of a client id (blake2b, 8-byte digest).
+    Depends only on the id string — never on index or shard."""
+    h = hashlib.blake2b(client_id.encode("utf-8"), digest_size=8)
+    return int.from_bytes(h.digest(), "little")
+
+
+def digests_for(client_ids: Iterable[str]) -> np.ndarray:
+    """uint64 digest column for a batch of ids (SoA-friendly)."""
+    return np.fromiter((client_digest(c) for c in client_ids),
+                       dtype=_U64)
+
+
+def round_key(seed: int, round_idx: int) -> int:
+    """Per-round 64-bit key: PCG64 keyed on (seed, round)."""
+    ss = np.random.SeedSequence([int(seed) & (2 ** 63 - 1), int(round_idx)])
+    gen = np.random.Generator(np.random.PCG64(ss))
+    return int(gen.integers(0, 2 ** 64, dtype=_U64))
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer (wrapping uint64 arithmetic)."""
+    x = (x + _U64(0x9E3779B97F4A7C15)).astype(_U64)
+    x = ((x ^ (x >> _U64(30))) * _U64(0xBF58476D1CE4E5B9)).astype(_U64)
+    x = ((x ^ (x >> _U64(27))) * _U64(0x94D049BB133111EB)).astype(_U64)
+    return x ^ (x >> _U64(31))
+
+
+def participation_mask(digests: np.ndarray, seed: int, round_idx: int,
+                       fraction: float) -> np.ndarray:
+    """Boolean mask: which of ``digests`` participate in ``round_idx``.
+
+    Order-independent: element i depends only on ``digests[i]`` (and
+    seed/round/fraction), so any permutation or partition of the
+    digest column yields the same per-client answers.
+    """
+    if fraction >= 1.0:
+        return np.ones(len(digests), dtype=bool)
+    key = _U64(round_key(seed, round_idx))
+    mixed = _splitmix64(np.asarray(digests, dtype=_U64) ^ key)
+    u = (mixed >> _U64(11)).astype(np.float64) * _INV_2_53
+    return u < fraction
+
+
+def participates(client_id: str, seed: int, round_idx: int,
+                 fraction: float) -> bool:
+    """Scalar convenience wrapper (object-path shards, tests)."""
+    if fraction >= 1.0:
+        return True
+    mask = participation_mask(
+        np.array([client_digest(client_id)], dtype=_U64),
+        seed, round_idx, fraction)
+    return bool(mask[0])

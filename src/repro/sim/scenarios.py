@@ -87,6 +87,12 @@ class ScenarioSpec:
     # merged into summary()["obs"] and (optionally) a Perfetto trace
     telemetry: bool = False
     trace_path: Optional[str] = None
+    # million-device engine knobs (sim README "Scale path"): per-round
+    # sampled participation (sync only), the event-queue implementation,
+    # and the client-state layout of the shard hot loop
+    sample_fraction: float = 1.0
+    scheduler: str = "heap"           # heap | calendar
+    client_state: str = "objects"     # objects | soa
 
     def replace(self, **kw) -> "ScenarioSpec":
         return dataclasses.replace(self, **kw)
@@ -219,7 +225,10 @@ def build_scenario(spec: ScenarioSpec) -> FleetSimulator:
                           fault_plan=_build_fault_plan(spec),
                           recovery=spec.recovery,
                           barrier_timeout_s=spec.barrier_timeout_s,
-                          control_timeout_s=spec.control_timeout_s, **kw)
+                          control_timeout_s=spec.control_timeout_s,
+                          sample_fraction=spec.sample_fraction,
+                          scheduler=spec.scheduler,
+                          client_state=spec.client_state, **kw)
 
 
 def run_scenario(spec: ScenarioSpec) -> Dict[str, Any]:
@@ -234,7 +243,10 @@ def run_scenario(spec: ScenarioSpec) -> Dict[str, Any]:
                    "mode": spec.mode, "max_replicas": spec.max_replicas,
                    "slots": spec.slots, "seed": spec.seed,
                    "shards": spec.shards, "workers": spec.workers,
-                   "hosts": spec.hosts},
+                   "hosts": spec.hosts,
+                   "sample_fraction": spec.sample_fraction,
+                   "scheduler": spec.scheduler,
+                   "client_state": spec.client_state},
         "rounds": result.rounds,
         "migrations": result.migration_summary,
         "engine": result.engine_stats,

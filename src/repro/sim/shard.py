@@ -35,7 +35,10 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.runtime.transport import LinkModel
+from repro.sim import sampling as _sampling
 from repro.sim.engine import EventKind, Mail, SimEngine, WindowResult
 
 
@@ -195,7 +198,9 @@ class EdgeShard:
                  shard_of_edge: Dict[str, int], *,
                  mode: str, num_rounds: int,
                  pack_fn: Optional[Any] = None,
-                 reprice_tol: float = 0.05):
+                 reprice_tol: float = 0.05,
+                 sampling: Optional[Tuple[int, float]] = None,
+                 scheduler: str = "heap"):
         self.shard_id = shard_id
         self.edges = {e.edge_id: e for e in edges}
         self.clients = {c.client_id: c for c in clients}
@@ -205,8 +210,10 @@ class EdgeShard:
         self.num_rounds = num_rounds
         self.pack_fn = pack_fn        # set only for in-process shards
         self.reprice_tol = reprice_tol
+        self.sampling = sampling      # (seed, fraction) or None
+        self._digests: Dict[str, int] = {}
 
-        self.engine = SimEngine()
+        self.engine = SimEngine(scheduler)
         self.engine.register(EventKind.BATCH_DONE, self._on_batch_done)
         self.engine.register(EventKind.MOVE, self._on_move)
         self.engine.register(EventKind.CHECKPOINT_PACKED, self._on_packed)
@@ -353,13 +360,32 @@ class EdgeShard:
         else:
             self._begin_batch(c, start_s)
 
+    def _sampled(self, cs: List[ShardClient], round_idx: int
+                 ) -> List[ShardClient]:
+        """Filter a round-start wave down to the sampled participants.
+        Pure function of (seed, round, client id) — see
+        ``repro.sim.sampling`` — so every shard (and the coordinator)
+        agrees without communicating. ``fraction >= 1`` never touches
+        the RNG: the unsampled path stays bit-identical to a
+        pre-sampling engine."""
+        if self.sampling is None or self.sampling[1] >= 1.0 or not cs:
+            return cs
+        seed, fraction = self.sampling
+        digs = np.fromiter(
+            (self._digests.get(c.client_id) or self._digests.setdefault(
+                c.client_id, _sampling.client_digest(c.client_id))
+             for c in cs), dtype=np.uint64, count=len(cs))
+        mask = _sampling.participation_mask(digs, seed, round_idx, fraction)
+        return [c for c, m in zip(cs, mask) if m]
+
     def _mass_start(self, epoch: int, base: float):
-        """Start an epoch for every (non-done) client at once: count the
-        whole wave into ``active`` first, re-price each edge once, then
-        schedule everyone's batches at the settled congestion — instead
-        of an O(active²) cascade of per-client re-pricings."""
-        cs = [self.clients[cid] for cid in sorted(self.clients)
-              if not self.clients[cid].done]
+        """Start an epoch for every (non-done, sampled) client at once:
+        count the whole wave into ``active`` first, re-price each edge
+        once, then schedule everyone's batches at the settled congestion
+        — instead of an O(active²) cascade of per-client re-pricings."""
+        cs = self._sampled(
+            [self.clients[cid] for cid in sorted(self.clients)
+             if not self.clients[cid].done], epoch)
         for c in cs:
             e = self.edges[c.edge_id]
             e.active += 1

@@ -73,7 +73,9 @@ from repro.sim.mailbox import (_BARRIER_TIMEOUT_S, GroupFailure,
                                _drive_mesh, _MeshEngineBase,
                                merge_host_finals, run_host_windows)
 from repro.sim.metrics import FleetMetrics, MigrationRecord
+from repro.sim import sampling as _sampling
 from repro.sim.shard import EdgeShard, ShardClient, ShardEdge, batch_parts
+from repro.sim.soa import SoAEdgeShard
 from repro.sim.trainer import (GroupTrainer, LocalTrainer, TrainerAborted,
                                TrainerProxy)
 
@@ -146,9 +148,29 @@ class FleetSimulator:
                  max_recoveries: int = 2,
                  fault_plan: Optional[FaultPlan] = None,
                  barrier_timeout_s: Optional[float] = None,
-                 control_timeout_s: Optional[float] = None):
+                 control_timeout_s: Optional[float] = None,
+                 sample_fraction: float = 1.0,
+                 scheduler: str = "heap",
+                 client_state: str = "objects"):
         if mode not in ("sync", "async"):
             raise ValueError(f"mode must be sync|async, got {mode!r}")
+        if not 0.0 < sample_fraction <= 1.0:
+            raise ValueError(f"sample_fraction must be in (0, 1], got "
+                             f"{sample_fraction}")
+        if sample_fraction < 1.0 and mode != "sync":
+            raise ValueError("sample_fraction < 1 requires mode='sync': "
+                             "async flushes have no per-round participant "
+                             "set to sample")
+        if scheduler not in ("heap", "calendar"):
+            raise ValueError(f"scheduler must be heap|calendar, got "
+                             f"{scheduler!r}")
+        if client_state not in ("objects", "soa"):
+            raise ValueError(f"client_state must be objects|soa, got "
+                             f"{client_state!r}")
+        if client_state == "soa" and measure_pack:
+            raise ValueError("client_state='soa' requires "
+                             "measure_pack=False: the SoA hot path prices "
+                             "migrations from the cached cohort tables")
         if fault_plan is not None and workers is None and hosts is None:
             raise ValueError("fault_plan requires a mesh executor "
                              "(workers= or hosts=): the serial path has "
@@ -199,6 +221,13 @@ class FleetSimulator:
                       else None)
         self.flush_interval_s = flush_interval_s
         self.reprice_tol = reprice_tol
+        self.sample_fraction = sample_fraction
+        self.scheduler = scheduler
+        self.client_state = client_state
+        # per-round participant accounting (sampled runs only; None
+        # means every client participates every round)
+        self._expected_by_round: Optional[List[int]] = None
+        self._cohort_round_sizes: Optional[List[Dict[Tuple, int]]] = None
         # wall-clock observation only (docs/OBSERVABILITY.md): spans and
         # counters never read simulated time, so enabling telemetry
         # cannot perturb metrics or numerics
@@ -259,6 +288,51 @@ class FleetSimulator:
         #: recovery accounting, merged into engine stats on the mesh
         #: paths (None on the serial path — no processes can fail)
         self._recovery: Optional[Dict[str, Any]] = None
+
+    # -- sampled participation ------------------------------------------
+
+    def _prepare_sampling(self, rounds: int) -> None:
+        """Precompute per-round participant counts (global + per cohort)
+        with the same pure decision function the shards use
+        (``repro.sim.sampling``), so the sync barrier and the snapshot
+        prune floor know exactly how many contributions each round owes.
+        No-op for ``sample_fraction >= 1`` — the legacy static counts
+        stay in force and nothing touches the RNG."""
+        if self.sample_fraction >= 1.0:
+            self._expected_by_round = None
+            self._cohort_round_sizes = None
+            return
+        ids = sorted(self.fleet.clients)
+        digs = _sampling.digests_for(ids)
+        ckeys = sorted({self.fleet.clients[c].spec.cohort_key for c in ids})
+        cidx = {k: i for i, k in enumerate(ckeys)}
+        cohort_of = np.array(
+            [cidx[self.fleet.clients[c].spec.cohort_key] for c in ids])
+        self._expected_by_round = []
+        self._cohort_round_sizes = []
+        for r in range(rounds):
+            mask = _sampling.participation_mask(
+                digs, self.fleet.seed, r, self.sample_fraction)
+            self._expected_by_round.append(int(mask.sum()))
+            counts = np.bincount(cohort_of[mask], minlength=len(ckeys))
+            self._cohort_round_sizes.append(
+                {k: int(counts[i]) for k, i in cidx.items() if counts[i]})
+
+    def _round_expected(self, r: int) -> int:
+        """Contributions the sync barrier waits for in round ``r``."""
+        if self._expected_by_round is None:
+            return self.fleet.num_clients
+        return self._expected_by_round[r] if r < len(self._expected_by_round) \
+            else 0
+
+    def _round_size(self, cohort_key, epoch: int) -> Optional[int]:
+        """Contributions (cohort, epoch) owes before its snapshot can be
+        pruned; None caps the prune floor at the final round."""
+        if self._cohort_round_sizes is None:
+            return self._cohort_sizes[cohort_key]
+        if epoch >= len(self._cohort_round_sizes):
+            return None
+        return self._cohort_round_sizes[epoch].get(cohort_key, 0)
 
     # -- static timing inputs -------------------------------------------
 
@@ -375,6 +449,9 @@ class FleetSimulator:
                 dev_flops_per_s=c.spec.profile.flops_per_s,
                 moves=moves, dropout=self.dropouts.get(cid)))
         pack_fn = self._pack_fn()
+        sampling = ((self.fleet.seed, self.sample_fraction)
+                    if self.sample_fraction < 1.0 else None)
+        shard_cls = SoAEdgeShard if self.client_state == "soa" else EdgeShard
         out = []
         for s in range(self.num_shards):
             sedges = [ShardEdge.from_sim_edge(self.edges[eid])
@@ -382,11 +459,13 @@ class FleetSimulator:
                       if shard_of_edge[eid] == s]
             for e in sedges:
                 e.attached = attached[e.edge_id]
-            out.append(EdgeShard(s, sedges, clients_by_shard[s],
+            out.append(shard_cls(s, sedges, clients_by_shard[s],
                                  self._tables, shard_of_edge,
                                  mode=self.mode, num_rounds=rounds,
                                  pack_fn=pack_fn,
-                                 reprice_tol=self.reprice_tol))
+                                 reprice_tol=self.reprice_tol,
+                                 sampling=sampling,
+                                 scheduler=self.scheduler))
         return out
 
     # -- numerics replay --------------------------------------------------
@@ -444,8 +523,14 @@ class FleetSimulator:
     def _maybe_prune(self, cohort_key):
         floor0 = self._prune_floor[cohort_key]
         floor = floor0
-        size = self._cohort_sizes[cohort_key]
-        while self._consumed.get((cohort_key, floor), 0) >= size:
+        while True:
+            size = self._round_size(cohort_key, floor)
+            # sampled rounds owe their participant count (a zero-
+            # participant round owes nothing and advances immediately);
+            # the floor never passes the final round
+            if size is None or self._consumed.get((cohort_key, floor),
+                                                  0) < size:
+                break
             floor += 1
         if floor != floor0:
             self._prune_floor[cohort_key] = floor
@@ -535,7 +620,12 @@ class FleetSimulator:
         # fire flush points the window has fully covered
         if self.mode == "async" and self._buffer and math.isfinite(bound):
             self._advance_grid(bound)
-        if self.mode == "sync" and self._arrived == self._expected:
+        # the range guard matters on the sampled path: after the final
+        # commit _expected is 0, and a trailing window callback (peer
+        # meshes flush one) would otherwise re-fire an empty commit and
+        # record a phantom skipped round
+        if self.mode == "sync" and self._round_idx < self.num_rounds \
+                and self._arrived == self._expected:
             mail.extend(self._commit_round())
         replay_span.__exit__(None, None, None)
         return mail
@@ -565,6 +655,7 @@ class FleetSimulator:
                 self._maybe_prune(cohort_key)
         self._arrived = 0
         self._round_idx = r + 1
+        self._expected = self._round_expected(r + 1)
         mail = ([Mail(dst_shard=s, time=t, kind=EventKind.ROUND_START,
                       key="", payload={"round_idx": r + 1})
                  for s in range(self.num_shards)]
@@ -728,7 +819,8 @@ class FleetSimulator:
 
     def _run(self, rounds: int) -> FleetResult:
         self.num_rounds = rounds
-        self._expected = self.fleet.num_clients
+        self._prepare_sampling(rounds)
+        self._expected = self._round_expected(0)
         self._flush_dt = (self.flush_interval_s
                           if self.flush_interval_s is not None
                           else self._min_batch_time())
@@ -893,7 +985,8 @@ class FleetSimulator:
         if rank not in addresses:
             raise ValueError(f"rank {rank} not in the address directory")
         self.num_rounds = rounds
-        self._expected = self.fleet.num_clients
+        self._prepare_sampling(rounds)
+        self._expected = self._round_expected(0)
         self._flush_dt = (self.flush_interval_s
                           if self.flush_interval_s is not None
                           else self._min_batch_time())

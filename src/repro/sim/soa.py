@@ -1,0 +1,908 @@
+"""Struct-of-arrays shard engine: the million-device hot path.
+
+``SoAEdgeShard`` is a drop-in replacement for ``repro.sim.shard.
+EdgeShard`` (same constructor, same window protocol, same records on
+the wire) that stores per-client timing state in dense slot-indexed
+columns instead of one ``ShardClient`` object per device, and pops
+events through a lean tuple loop instead of ``SimEngine``'s
+Event-object dispatch. ``ShardClient`` objects exist only at the wire
+boundary: a cross-shard migration materializes one into the Mail
+payload (so the mailbox codec and recovery replay are untouched) and
+an arriving one is scattered back into the columns.
+
+Three structural differences from the object engine, none observable:
+
+  * **Hybrid columns.** Numpy columns hold what the vectorized paths
+    read per *population* — per-client pricing on the current edge
+    (``downlink``/``fixed``/``srv``, from the same float expressions
+    ``shard.batch_parts`` evaluates), edge index, done flag, sampling
+    digests, and the in-flight batch progress (which congestion
+    re-pricing rewrites in bulk). Plain Python lists hold the scalars
+    the per-event path touches (ids, batch counters, epoch clocks): a
+    numpy scalar index costs ~5-10x a list index (boxing), and the
+    event loop reads a handful of scalars per event, so lists win
+    there.
+  * **Per-edge batch heaps.** In-flight batches live in a small
+    ``heapq`` per edge, keyed ``(finish, client_id, slot)``; the
+    global queue carries only each edge's *head* batch. Congestion
+    re-pricing — which rewrites every in-flight finish time on an edge
+    at once — becomes one vectorized recompute plus one O(n) heapify,
+    instead of n cancel+reschedule round-trips through the global
+    queue. The object engine pushes ~2 cancelled entries through its
+    heap for every delivered event; this layout removes that churn
+    entirely, which is where most of the headline speedup comes from.
+  * **Lean events.** Global-queue entries are bare tuples ``(time,
+    key, seq, kind_int, arg)`` — no Event allocation, no payload
+    dicts. The queue itself is pluggable (``scheduler="heap" |
+    "calendar"``, shared classes from ``repro.sim.engine``).
+
+Bit-identity contract (proven by tests/test_soa_shard.py): for any
+scenario both engines can run, the records a window hands back —
+contribs, epoch_starts, migrations — and the mail it emits are
+*identical Python values* to the object path's. That holds because
+
+  * every float is produced by the same IEEE operation sequence: the
+    per-client pricing terms are precomputed with exactly the scalar
+    expressions the object path evaluates per batch (floats are
+    deterministic, so compute-once equals compute-every-time), and the
+    vectorized wave/re-price paths group their arithmetic exactly like
+    the scalar path (``finish = (start + fixed) + srv*g``) — numpy
+    float64 elementwise ops are bit-identical to the equivalent Python
+    float ops, and ``np.where``/``np.maximum`` select, not perturb;
+  * iteration and scheduling order follow the *client-id string*
+    order the object path uses (ids above 10k devices are not
+    zero-padded to equal width, so string order != numeric order —
+    slots are therefore ordered through an explicit sorted-id index,
+    never through their numeric value);
+  * global entries carry the same ``(time, key, seq)`` tie-break with
+    the client id as the key, and the per-edge heaps order by
+    ``(finish, client_id)`` — the same total order the object engine's
+    flat queue yields, because two live batches never share a client
+    and a client never has two events queued at the same instant;
+  * delivered-event counts match: an edge-head entry pops exactly when
+    the object engine would deliver that batch's BATCH_DONE, and
+    superseded head entries die by seq tombstone without being
+    counted, exactly like ``SimEngine.cancel``.
+
+JAX-free and clock-disciplined like ``shard.py``: wall clocks are only
+measured for throughput stats, never used to order events.
+"""
+from __future__ import annotations
+
+import time
+from heapq import heapify, heappop, heappush
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.sim import sampling as _sampling
+from repro.sim.engine import EventKind, Mail, WindowResult, make_queue
+from repro.sim.shard import CohortTable, ShardClient, ShardEdge
+
+# lean event kinds (ints, not EventKind — dispatch is an if/elif chain
+# on small ints). Update and migration transfers are distinct kinds so
+# entries need no payload; both report as "transfer_done".
+K_BATCH = 0
+K_MOVE = 1
+K_PACKED = 2
+K_XFER_UPDATE = 3
+K_XFER_MIG = 4
+K_REJOIN = 5
+K_RSTART = 6
+
+_KIND_NAME = {
+    K_BATCH: EventKind.BATCH_DONE.value,
+    K_MOVE: EventKind.MOVE.value,
+    K_PACKED: EventKind.CHECKPOINT_PACKED.value,
+    K_XFER_UPDATE: EventKind.TRANSFER_DONE.value,
+    K_XFER_MIG: EventKind.TRANSFER_DONE.value,
+    K_REJOIN: EventKind.REJOIN.value,
+    K_RSTART: EventKind.ROUND_START.value,
+}
+
+# below this many in-flight batches, scalar re-pricing beats the numpy
+# fixed overhead (array alloc + dispatch ~ a dozen microseconds)
+_VEC_REPRICE_MIN = 16
+
+
+class SoAEdgeShard:
+    """One shard of the fleet, columnar: its edges, its client columns,
+    its per-edge batch heaps, its lean event loop."""
+
+    def __init__(self, shard_id: int, edges: List[ShardEdge],
+                 clients: List[ShardClient],
+                 cohort_tables: Dict[Tuple[int, int], CohortTable],
+                 shard_of_edge: Dict[str, int], *,
+                 mode: str, num_rounds: int,
+                 pack_fn: Optional[Any] = None,
+                 reprice_tol: float = 0.05,
+                 sampling: Optional[Tuple[int, float]] = None,
+                 scheduler: str = "heap"):
+        if pack_fn is not None:
+            raise ValueError("SoAEdgeShard prices migrations from the "
+                             "cached cohort tables (measure_pack=False)")
+        self.shard_id = shard_id
+        self.edges = {e.edge_id: e for e in edges}
+        self.tables = cohort_tables
+        self.shard_of_edge = shard_of_edge
+        self.mode = mode
+        self.num_rounds = num_rounds
+        self.reprice_tol = reprice_tol
+        self.sampling = sampling
+
+        # -- static per-(edge, cohort) pricing scalars, precomputed with
+        # the exact Python-float expressions the object path evaluates
+        # per client (shard.batch_parts / _downlink_time)
+        self._edge_ids = sorted(self.edges)
+        self._eidx = {eid: i for i, eid in enumerate(self._edge_ids)}
+        self._edge_list = [self.edges[eid] for eid in self._edge_ids]
+        self._ckeys = sorted(cohort_tables)
+        self._cidx = {k: i for i, k in enumerate(self._ckeys)}
+        ne, nc = len(self._edge_ids), len(self._ckeys)
+        self._tab_fixed_a = [[0.0] * nc for _ in range(ne)]  # 3*dflops
+        self._tab_fixed_b = [[0.0] * nc for _ in range(ne)]  # 2*wtt
+        self._tab_srv = [[0.0] * nc for _ in range(ne)]      # 3*sflops/F
+        self._tab_downlink = [[0.0] * nc for _ in range(ne)]
+        self._upload_bytes = [0] * nc
+        self._ckpt_bytes = [0] * nc
+        for ei, eid in enumerate(self._edge_ids):
+            e = self.edges[eid]
+            for ci, ck in enumerate(self._ckeys):
+                t = cohort_tables[ck]
+                self._tab_fixed_a[ei][ci] = 3.0 * t["dflops"]
+                self._tab_fixed_b[ei][ci] = \
+                    2.0 * e.wireless.transfer_time(int(t["sbytes"]))
+                self._tab_srv[ei][ci] = 3.0 * t["sflops"] / e.flops_per_s
+                self._tab_downlink[ei][ci] = \
+                    e.wireless.transfer_time(int(t["dev"]))
+        for ci, ck in enumerate(self._ckeys):
+            self._upload_bytes[ci] = int(cohort_tables[ck]["update"])
+            self._ckpt_bytes[ci] = int(cohort_tables[ck]["ckpt"])
+
+        # -- client columns (slot-indexed, append-only; slots are
+        # ordered through _order, never through their numeric value)
+        self._ids: List[str] = []
+        self._slot_of_id: Dict[str, int] = {}
+        self._present: List[bool] = []
+        self._done: List[bool] = []
+        self._cohort: List[int] = []
+        self._replica: List[int] = []
+        self._edge: List[int] = []
+        self._num_samples: List[int] = []
+        self._nb: List[int] = []
+        self._dev_flops: List[float] = []
+        # per-client pricing on the CURRENT edge (re-derived when a
+        # migration re-homes the client): batch_parts / downlink values
+        self._fixed: List[float] = []
+        self._srv: List[float] = []
+        self._downlink: List[float] = []
+        self._epoch: List[int] = []
+        self._batch_idx: List[int] = []
+        self._epochs_done: List[int] = []
+        self._epoch_start_s: List[float] = []
+        self._pulled_s: List[float] = []
+        self._move_at: List[int] = []
+        # in-flight batch progress (InflightBatch as four numpy columns
+        # — re-pricing reads and rewrites them in bulk; fixed_s/srv_s
+        # are the static _fixed/_srv of the client)
+        self._fbr = np.zeros(0)       # remaining base-seconds
+        self._fbl = np.zeros(0)       # last re-pricing time
+        self._fbc = np.zeros(0)       # congestion in force since
+        self._fbf = np.zeros(0)       # scheduled finish time
+        # numpy mirrors for the vectorized wave + sampling
+        self._edge_np = np.zeros(0, dtype=np.int64)
+        self._done_np = np.zeros(0, dtype=bool)
+        self._fixed_np = np.zeros(0)
+        self._srv_np = np.zeros(0)
+        self._downlink_np = np.zeros(0)
+        self._digests: Optional[np.ndarray] = None   # uint64, lazy
+        # sparse per-client state (dicts keyed by slot)
+        self._moves: Dict[int, Dict[int, Tuple[str, float]]] = {}
+        self._dropout: Dict[int, Tuple[int, float]] = {}
+        self._pending_move: Dict[int, Tuple[str, float]] = {}
+        self._inflight_mig: Dict[int, Dict[str, Any]] = {}
+        for c in sorted(clients, key=lambda c: c.client_id):
+            self._install(c)
+        self._sync_mirrors()
+        self._order = np.array(
+            [self._slot_of_id[cid] for cid in sorted(self._slot_of_id)],
+            dtype=np.int64)
+        self._order_dirty = False
+
+        # -- per-edge in-flight batches: membership set, (finish, id,
+        # slot) heap, and a merged heap of every edge's *head* batch
+        # (entries (finish, id, version, edge); an entry is live iff
+        # the edge's head flag is set and its version matches — stale
+        # entries are skipped at pop, the lazy-deletion idiom)
+        self._einflight: List[set] = [set() for _ in self._edge_ids]
+        self._eheap: List[list] = [[] for _ in self._edge_ids]
+        self._bheads: list = []
+        self._ehead_live: List[bool] = [False] * ne
+        self._ehead_ver: List[int] = [0] * ne
+        self._ehead_time: List[float] = [0.0] * ne
+        self._ehead_key: List[str] = [""] * ne
+        self._eden: List[int] = [max(e.slots, 1) for e in self._edge_list]
+
+        # -- lean engine state
+        self._queue = make_queue(scheduler)
+        self._seq = 0
+        self._tombstones: set = set()
+        self._qmut = 0            # bumps on push: invalidates cached head
+        self.now = 0.0
+        self.events_processed = 0
+        self._counts: Dict[int, int] = {k: 0 for k in _KIND_NAME}
+        self.wall_s = 0.0
+        self._epoch_reported: set = set()    # (cohort idx, epoch) pairs
+        self._reset_outbox()
+
+    # -- client slot management ------------------------------------------
+
+    def _price_slot(self, s: int) -> None:
+        """(Re-)derive the client's per-batch pricing for its current
+        edge — the same scalar expressions ``shard.batch_parts`` and
+        ``_downlink_time`` evaluate, computed once per (client, edge)
+        instead of once per batch (floats are deterministic, so the
+        values are bit-identical)."""
+        ei, ci = self._edge[s], self._cohort[s]
+        if ei < 0:            # mid-migration arrival: priced at re-home
+            self._fixed[s] = self._srv[s] = self._downlink[s] = 0.0
+            return
+        self._fixed[s] = self._tab_fixed_a[ei][ci] / self._dev_flops[s] \
+            + self._tab_fixed_b[ei][ci]
+        self._srv[s] = self._tab_srv[ei][ci]
+        self._downlink[s] = self._tab_downlink[ei][ci]
+
+    def _install(self, c: ShardClient) -> int:
+        """Scatter one ShardClient into the columns (build time and
+        migration arrival — the only moments objects exist). A client
+        arriving from another shard still names its *source* edge (the
+        object path keeps edge_id until the migration resumes); its
+        edge column holds -1 until ``_on_transfer_mig`` re-homes it,
+        and nothing reads it before then."""
+        s = self._slot_of_id.get(c.client_id)
+        if s is None:
+            s = len(self._ids)
+            self._slot_of_id[c.client_id] = s
+            self._ids.append(c.client_id)
+            for col in (self._present, self._done):
+                col.append(False)
+            for col in (self._cohort, self._replica, self._edge,
+                        self._num_samples, self._nb, self._epoch,
+                        self._batch_idx, self._epochs_done,
+                        self._move_at):
+                col.append(0)
+            for col in (self._dev_flops, self._fixed, self._srv,
+                        self._downlink, self._epoch_start_s,
+                        self._pulled_s):
+                col.append(0.0)
+            if s >= len(self._fbr):
+                grow = max(64, len(self._fbr))
+                z = np.zeros(grow)
+                self._fbr = np.concatenate([self._fbr, z])
+                self._fbl = np.concatenate([self._fbl, z])
+                self._fbc = np.concatenate([self._fbc, z])
+                self._fbf = np.concatenate([self._fbf, z])
+        self._present[s] = True
+        self._done[s] = c.done
+        self._cohort[s] = self._cidx[c.cohort_key]
+        self._replica[s] = c.replica
+        self._edge[s] = self._eidx.get(c.edge_id, -1)
+        self._num_samples[s] = c.num_samples
+        self._nb[s] = c.num_batches
+        self._dev_flops[s] = c.dev_flops_per_s
+        self._epoch[s] = c.epoch
+        self._batch_idx[s] = c.batch_idx
+        self._epochs_done[s] = c.epochs_done
+        self._epoch_start_s[s] = c.epoch_start_s
+        self._pulled_s[s] = c.pulled_s
+        self._move_at[s] = c.move_at
+        self._price_slot(s)
+        if c.moves:
+            self._moves[s] = dict(c.moves)
+        if c.dropout is not None:
+            self._dropout[s] = c.dropout
+        if c.pending_move is not None:
+            self._pending_move[s] = c.pending_move
+        return s
+
+    def _sync_mirrors(self) -> None:
+        """Rebuild the numpy mirrors of the slot columns (bulk install
+        paths: construction, cross-shard arrivals)."""
+        self._edge_np = np.array(self._edge, dtype=np.int64)
+        self._done_np = np.array(self._done, dtype=bool)
+        self._fixed_np = np.array(self._fixed)
+        self._srv_np = np.array(self._srv)
+        self._downlink_np = np.array(self._downlink)
+        if self._digests is not None and \
+                len(self._digests) < len(self._ids):
+            tail = _sampling.digests_for(self._ids[len(self._digests):])
+            self._digests = np.concatenate([self._digests, tail])
+
+    def _materialize(self, s: int) -> ShardClient:
+        """Rebuild the wire-format ShardClient for a departing slot."""
+        return ShardClient(
+            client_id=self._ids[s],
+            cohort_key=self._ckeys[self._cohort[s]],
+            replica=self._replica[s],
+            edge_id=self._edge_ids[self._edge[s]],
+            num_samples=self._num_samples[s],
+            num_batches=self._nb[s],
+            dev_flops_per_s=self._dev_flops[s],
+            moves=self._moves.get(s, {}),
+            dropout=self._dropout.get(s),
+            epoch=self._epoch[s],
+            batch_idx=self._batch_idx[s],
+            epochs_done=self._epochs_done[s],
+            epoch_start_s=self._epoch_start_s[s],
+            pulled_s=self._pulled_s[s],
+            pending_move=self._pending_move.get(s),
+            move_at=self._move_at[s],
+            batch_event=None,
+            done=self._done[s])
+
+    def _ordered_slots(self) -> np.ndarray:
+        """Present slots in client-id *string* order (the object path's
+        ``sorted(self.clients)``)."""
+        if self._order_dirty:
+            self._order = np.array(
+                sorted((s for s in self._slot_of_id.values()
+                        if self._present[s]),
+                       key=self._ids.__getitem__), dtype=np.int64)
+            self._order_dirty = False
+        return self._order
+
+    # -- lean event queue ------------------------------------------------
+
+    def _push(self, t: float, key: str, kind: int, arg: int) -> int:
+        if t < self.now:
+            raise ValueError(f"cannot schedule kind {kind} in the past "
+                             f"({t} < {self.now})")
+        seq = self._seq
+        self._seq += 1
+        self._qmut += 1
+        self._queue.push((t, key, seq, kind, arg))
+        return seq
+
+    def _head(self) -> Optional[tuple]:
+        head = self._queue.peek()
+        while head is not None and head[2] in self._tombstones:
+            self._tombstones.discard(self._queue.pop()[2])
+            head = self._queue.peek()
+        return head
+
+    # -- per-edge batch heaps --------------------------------------------
+
+    def _refresh_head(self, ei: int) -> None:
+        """Make the merged batch-head heap's entry for edge ``ei`` match
+        its batch heap's minimum (superseding any stale entry by version
+        bump). Idempotent — callers invoke it after any heap mutation."""
+        h = self._eheap[ei]
+        if not h:
+            self._ehead_live[ei] = False
+            return
+        t, key, _s = h[0]
+        if self._ehead_live[ei] and self._ehead_time[ei] == t \
+                and self._ehead_key[ei] == key:
+            return
+        ver = self._ehead_ver[ei] + 1
+        self._ehead_ver[ei] = ver
+        self._ehead_live[ei] = True
+        self._ehead_time[ei] = t
+        self._ehead_key[ei] = key
+        heappush(self._bheads, (t, key, ver, ei))
+
+    def _rebuild_eheap(self, ei: int,
+                       slots: Optional[np.ndarray] = None) -> None:
+        """Re-key edge ``ei``'s batch heap from the (just re-priced)
+        finish column. O(n) heapify instead of n cancel+reschedule
+        round-trips through the global queue."""
+        if slots is None:
+            sl = list(self._einflight[ei])
+            times = [float(self._fbf[s]) for s in sl]
+        else:
+            times = self._fbf[slots].tolist()
+            sl = slots.tolist()
+        # heap layout depends on input order, pop order does not (keys
+        # are distinct tuples), so no need to sort the slot set first
+        h = list(zip(times, map(self._ids.__getitem__, sl), sl))
+        heapify(h)
+        self._eheap[ei] = h
+        self._refresh_head(ei)
+
+    # -- window protocol -------------------------------------------------
+
+    def _reset_outbox(self):
+        self.out_mail: List[Mail] = []
+        self.out_contribs: List[tuple] = []
+        self.out_epoch_starts: List[tuple] = []
+        self.out_migrations: List[tuple] = []
+
+    def _batch_head(self) -> Optional[tuple]:
+        """Live minimum of the merged batch-head heap (drains stale
+        entries left behind by re-pricing / head churn)."""
+        bh = self._bheads
+        live = self._ehead_live
+        ver = self._ehead_ver
+        while bh:
+            top = bh[0]
+            if live[top[3]] and ver[top[3]] == top[2]:
+                return top
+            heappop(bh)
+        return None
+
+    def peek(self) -> Optional[float]:
+        head = self._head()
+        bh = self._batch_head()
+        if head is None:
+            return bh[0] if bh is not None else None
+        if bh is None or (head[0], head[1]) < (bh[0], bh[1]):
+            return head[0]
+        return bh[0]
+
+    def deliver(self, mail: List[Mail]) -> None:
+        grew = False
+        for m in sorted(mail, key=lambda m: (m.time, m.key)):
+            if m.kind is EventKind.ROUND_START:
+                self._push(m.time, m.key, K_RSTART,
+                           m.payload["round_idx"])
+                continue
+            if m.kind is EventKind.TRANSFER_DONE and \
+                    m.payload.get("what") == "migration":
+                s = self._install(m.payload["client_state"])
+                if s >= len(self._edge_np):
+                    grew = True       # mirrors rebuilt once, below
+                else:
+                    self._edge_np[s] = self._edge[s]
+                    self._done_np[s] = self._done[s]
+                    self._fixed_np[s] = self._fixed[s]
+                    self._srv_np[s] = self._srv[s]
+                    self._downlink_np[s] = self._downlink[s]
+                self._order_dirty = True
+                self._inflight_mig[s] = m.payload["mig"]
+                self._push(m.time, m.key, K_XFER_MIG, s)
+                continue
+            raise ValueError(f"unexpected cross-shard mail kind {m.kind}")
+        if grew:
+            self._sync_mirrors()
+
+    def run_window(self, bound: float, mail: List[Mail]) -> WindowResult:
+        wall0 = time.perf_counter()
+        processed0 = self.events_processed
+        self.deliver(mail)
+        self._run(bound)
+        result = WindowResult(
+            next_time=self.peek(),
+            mail=self.out_mail,
+            records={"contribs": self.out_contribs,
+                     "epoch_starts": self.out_epoch_starts,
+                     "migrations": self.out_migrations},
+            processed=self.events_processed - processed0)
+        self._reset_outbox()
+        self.wall_s += time.perf_counter() - wall0
+        return result
+
+    def final_stats(self) -> Dict[str, Any]:
+        by_kind: Dict[str, int] = {}
+        for k, n in self._counts.items():
+            if n:
+                name = _KIND_NAME[k]
+                by_kind[name] = by_kind.get(name, 0) + n
+        return {"engine": {
+                    "events_processed": self.events_processed,
+                    "events_per_sec": (self.events_processed / self.wall_s
+                                       if self.wall_s > 0 else 0.0),
+                    "sim_time_s": self.now,
+                    "wall_s": self.wall_s,
+                    "by_kind": dict(sorted(by_kind.items()))},
+                "edges": [self.edges[eid].stats()
+                          for eid in self._edge_ids]}
+
+    # -- the loop --------------------------------------------------------
+
+    def _run(self, before: float) -> None:
+        counts = self._counts
+        queue = self._queue
+        tomb = self._tombstones
+        eheap = self._eheap
+        bheads = self._bheads
+        live = self._ehead_live
+        ver = self._ehead_ver
+        on_batch_done = self._on_batch_done
+        refresh = self._refresh_head
+        n_events = 0
+        n_batch = 0
+        head = None
+        hmut = -1
+        while True:
+            # the global head only changes on a pop (below) or a push
+            # (any handler may schedule) — cache it across the hot batch
+            # dispatches, which touch only the per-edge heaps
+            if hmut != self._qmut:
+                head = queue.peek()
+                while head is not None and head[2] in tomb:
+                    tomb.discard(queue.pop()[2])
+                    head = queue.peek()
+                hmut = self._qmut
+            while bheads:
+                top = bheads[0]
+                if live[top[3]] and ver[top[3]] == top[2]:
+                    break
+                heappop(bheads)
+            # merge the two queues on (time, key) — same total order as
+            # the object engine's flat queue (ties across queues need a
+            # shared key namespace; client ids vs coordinator keys)
+            if bheads and (head is None or
+                           (bheads[0][0], bheads[0][1]) <
+                           (head[0], head[1])):
+                t = bheads[0][0]
+                if t >= before:
+                    break
+                _t, _key, _ver, ei = heappop(bheads)
+                self.now = t
+                t2, _key2, s = heappop(eheap[ei])
+                assert t2 == t
+                live[ei] = False
+                on_batch_done(s, ei)
+                if not live[ei]:
+                    refresh(ei)
+                n_events += 1
+                n_batch += 1
+                continue
+            if head is None or head[0] >= before:
+                break
+            t, _key, _seq, kind, arg = queue.pop()
+            hmut = -1
+            self.now = t
+            if kind == K_MOVE:
+                self._on_move(arg)
+            elif kind == K_PACKED:
+                self._on_packed(arg)
+            elif kind == K_XFER_UPDATE:
+                self._on_transfer_update(arg)
+            elif kind == K_XFER_MIG:
+                self._on_transfer_mig(arg)
+            elif kind == K_REJOIN:
+                self._upload_update(arg)
+            else:
+                self._mass_start(arg, t)
+            n_events += 1
+            counts[kind] += 1
+        self.events_processed += n_events
+        counts[K_BATCH] += n_batch
+
+    # -- congestion re-pricing (mirrors shard.py exactly) ----------------
+
+    def _active_changed(self, ei: int) -> None:
+        e = self._edge_list[ei]
+        # inline congestion(): division kept for bit-identity
+        g = e.active / self._eden[ei]
+        if g < 1.0:
+            g = 1.0
+        ref = e.priced_cong
+        if ref > 0 and abs(g - ref) <= self.reprice_tol * ref:
+            return
+        e.priced_cong = g
+        inf = self._einflight[ei]
+        if not inf:
+            return
+        now = self.now
+        if len(inf) < _VEC_REPRICE_MIN:
+            changed = False
+            for s in sorted(inf):
+                cold = float(self._fbc[s])
+                if cold == g:
+                    continue
+                # InflightBatch.reprice, columnar: advance under the
+                # old factor, switch to the new one
+                fixed = self._fixed[s]
+                srv = self._srv[s]
+                last_t = float(self._fbl[s])
+                remaining = float(self._fbr[s])
+                if now > last_t:
+                    rate_old = (fixed + srv) / (fixed + srv * cold)
+                    remaining = max(
+                        remaining - (now - last_t) * rate_old, 0.0)
+                    self._fbr[s] = remaining
+                    self._fbl[s] = last_t = now
+                self._fbc[s] = g
+                rate_new = (fixed + srv) / (fixed + srv * g)
+                self._fbf[s] = last_t + remaining / rate_new
+                changed = True
+            if changed:
+                self._rebuild_eheap(ei)
+            return
+        slots = np.fromiter(inf, dtype=np.int64, count=len(inf))
+        cong = self._fbc[slots]
+        chg = np.flatnonzero(cong != g)
+        if not len(chg):
+            return
+        sl = slots[chg]
+        fixed = self._fixed_np[sl]
+        srv = self._srv_np[sl]
+        tot = fixed + srv
+        last = self._fbl[sl]
+        rem = self._fbr[sl]
+        adv = now > last
+        if adv.any():
+            rate_old = tot / (fixed + srv * cong[chg])
+            rem = np.where(adv,
+                           np.maximum(rem - (now - last) * rate_old, 0.0),
+                           rem)
+            last = np.where(adv, now, last)
+            self._fbr[sl] = rem
+            self._fbl[sl] = last
+        self._fbc[sl] = g
+        rate_new = tot / (fixed + srv * g)
+        self._fbf[sl] = last + rem / rate_new
+        self._rebuild_eheap(ei, slots)
+
+    def _train_resume(self, ei: int) -> None:
+        e = self._edge_list[ei]
+        a = e.active + 1
+        e.active = a
+        if a > e.peak_active:
+            e.peak_active = a
+        self._active_changed(ei)
+
+    def _train_pause(self, ei: int) -> None:
+        e = self._edge_list[ei]
+        a = e.active - 1
+        e.active = a if a > 0 else 0
+        self._active_changed(ei)
+
+    def _begin_batch(self, s: int, start_s: float) -> None:
+        ei = self._edge[s]
+        fixed = self._fixed[s]
+        srv = self._srv[s]
+        # inline congestion(): division kept for bit-identity
+        g = self._edge_list[ei].active / self._eden[ei]
+        if g < 1.0:
+            g = 1.0
+        # same grouping as shard._begin_batch: start + fixed + srv*g
+        finish = (start_s + fixed) + srv * g
+        self._fbr[s] = fixed + srv
+        self._fbl[s] = start_s
+        self._fbc[s] = g
+        self._fbf[s] = finish
+        self._einflight[ei].add(s)
+        cid = self._ids[s]
+        heappush(self._eheap[ei], (finish, cid, s))
+        # head only changes if the new batch undercuts the advertised one
+        if not self._ehead_live[ei] or \
+                (finish, cid) < (self._ehead_time[ei], self._ehead_key[ei]):
+            self._refresh_head(ei)
+
+    # -- epoch lifecycle -------------------------------------------------
+
+    def _record_epoch_start(self, ci: int, epoch: int) -> None:
+        key = (ci, epoch)
+        if key not in self._epoch_reported:
+            self._epoch_reported.add(key)
+            self.out_epoch_starts.append(
+                (self.now, self._ckeys[ci], epoch))
+
+    def _setup_epoch(self, s: int, epoch: int, start_s: float) -> None:
+        """Shared scalar tail of start_epoch: move bookkeeping + first
+        batch (or immediate MOVE). Caller has set epoch/pulled/start
+        columns and bumped the edge's active count."""
+        ms = self._moves.get(s)
+        move = ms.get(epoch) if ms else None
+        if move is not None:
+            nb = self._nb[s]
+            self._pending_move[s] = move
+            self._move_at[s] = min(int(round(move[1] * nb)), nb - 1)
+        else:
+            self._pending_move.pop(s, None)
+            self._move_at[s] = -1
+        if self._move_at[s] == 0:
+            self._push(start_s, self._ids[s], K_MOVE, s)
+        else:
+            self._begin_batch(s, start_s)
+
+    def _start_epoch(self, s: int, epoch: int, start_s: float) -> None:
+        """Single-client epoch start (async next-epoch path): same
+        sequence as shard.start_epoch with resume=True."""
+        self._epoch[s] = epoch
+        self._batch_idx[s] = 0
+        self._epoch_start_s[s] = start_s
+        self._pulled_s[s] = self.now
+        self._record_epoch_start(self._cohort[s], epoch)
+        self._train_resume(self._edge[s])
+        self._setup_epoch(s, epoch, start_s)
+
+    def _mass_start(self, epoch: int, base: float) -> None:
+        """The vectorized round-start wave. Arithmetic is grouped
+        exactly like the scalar path — ``start = base + downlink``,
+        ``finish = (start + fixed) + srv*g`` — so every float matches
+        the object engine bit for bit."""
+        order = self._ordered_slots()
+        wave = order[~self._done_np[order]]
+        if self.sampling is not None and self.sampling[1] < 1.0 \
+                and len(wave):
+            if self._digests is None:
+                self._digests = _sampling.digests_for(self._ids)
+            seed, fraction = self.sampling
+            mask = _sampling.participation_mask(
+                self._digests[wave], seed, epoch, fraction)
+            wave = wave[mask]
+        if not len(wave):
+            return
+        ne = len(self._edge_list)
+        ei = self._edge_np[wave]
+        # count the whole wave into `active` first, re-price each edge
+        # once, then schedule everyone at the settled congestion
+        per_edge = np.bincount(ei, minlength=ne)
+        touched = np.flatnonzero(per_edge)
+        g_edge = np.zeros(ne)
+        for e in touched:
+            edge = self._edge_list[e]
+            edge.active += int(per_edge[e])
+            edge.peak_active = max(edge.peak_active, edge.active)
+            self._active_changed(int(e))
+            g_edge[e] = edge.congestion()
+        start = base + self._downlink_np[wave]
+        fixed = self._fixed_np[wave]
+        srv = self._srv_np[wave]
+        g = g_edge[ei]
+        finish = (start + fixed) + srv * g
+        self._fbr[wave] = fixed + srv
+        self._fbl[wave] = start
+        self._fbc[wave] = g
+        self._fbf[wave] = finish
+        now = self.now
+        ids = self._ids
+        moves = self._moves
+        cohort = self._cohort
+        edge_col = self._edge
+        einflight = self._einflight
+        eheap = self._eheap
+        epoch_col = self._epoch
+        batch_col = self._batch_idx
+        es_col = self._epoch_start_s
+        pulled_col = self._pulled_s
+        move_col = self._move_at
+        reported = self._epoch_reported
+        push = self._push
+        start_l = start.tolist()
+        finish_l = finish.tolist()
+        for i, s in enumerate(wave.tolist()):
+            epoch_col[s] = epoch
+            batch_col[s] = 0
+            es_col[s] = start_l[i]
+            pulled_col[s] = now
+            ci = cohort[s]
+            if (ci, epoch) not in reported:
+                self._record_epoch_start(ci, epoch)
+            if s in moves:
+                # movers take the scalar path (sparse by construction)
+                move = moves[s].get(epoch)
+                if move is None:
+                    self._pending_move.pop(s, None)
+                    move_col[s] = -1
+                else:
+                    nb = self._nb[s]
+                    self._pending_move[s] = move
+                    move_col[s] = min(int(round(move[1] * nb)), nb - 1)
+                    if move_col[s] == 0:
+                        # no batch begins; the in-flight columns are
+                        # rewritten when the migration lands
+                        push(start_l[i], ids[s], K_MOVE, s)
+                        continue
+            else:
+                move_col[s] = -1
+            e = edge_col[s]
+            einflight[e].add(s)
+            heappush(eheap[e], (finish_l[i], ids[s], s))
+        for e in touched:
+            self._refresh_head(int(e))
+
+    def bootstrap_async(self) -> None:
+        self._mass_start(0, 0.0)
+
+    def _on_batch_done(self, s: int, ei: int) -> None:
+        self._einflight[ei].discard(s)
+        b = self._batch_idx[s] + 1
+        self._batch_idx[s] = b
+        if b == self._move_at[s] and s in self._pending_move:
+            self._push(self.now, self._ids[s], K_MOVE, s)
+            return
+        if b < self._nb[s]:
+            self._begin_batch(s, self.now)
+        else:
+            self._epoch_computed(s)
+
+    def _epoch_computed(self, s: int) -> None:
+        self._train_pause(self._edge[s])
+        drop = self._dropout.get(s)
+        if drop is not None and drop[0] == self._epoch[s]:
+            self._push(self.now + drop[1], self._ids[s], K_REJOIN, s)
+            return
+        self._upload_update(s)
+
+    def _upload_update(self, s: int) -> None:
+        nbytes = self._upload_bytes[self._cohort[s]]
+        _, done, _ = self._edge_list[self._edge[s]].reserve_backhaul(
+            self.now, nbytes)
+        self._push(done, self._ids[s], K_XFER_UPDATE, s)
+
+    # -- migration (FedFly steps 6-9, with backpressure) -----------------
+
+    def _on_move(self, s: int) -> None:
+        dst_edge, _ = self._pending_move.pop(s)
+        ei = self._edge[s]
+        src = self._edge_list[ei]
+        self._train_pause(ei)
+        src.attached = max(src.attached - 1, 0)
+        src.migrations_out += 1
+        nbytes = self._ckpt_bytes[self._cohort[s]]
+        self._inflight_mig[s] = {
+            "dst": dst_edge, "nbytes": nbytes, "pack_s": 0.0,
+            "unpack_s": 0.0, "start_s": self.now,
+            "src": self._edge_ids[ei]}
+        self._push(self.now, self._ids[s], K_PACKED, s)
+
+    def _on_packed(self, s: int) -> None:
+        mig = self._inflight_mig.pop(s)
+        src = self.edges[mig["src"]]
+        _, done, wait = src.reserve_backhaul(self.now, mig["nbytes"])
+        mig["queue_s"] = wait
+        dst_shard = self.shard_of_edge[mig["dst"]]
+        if dst_shard == self.shard_id:
+            self._inflight_mig[s] = mig
+            self._push(done, self._ids[s], K_XFER_MIG, s)
+        else:
+            # the client leaves this shard; its timing state rides along
+            cid = self._ids[s]
+            state = self._materialize(s)
+            self._present[s] = False
+            del self._slot_of_id[cid]
+            self._moves.pop(s, None)
+            self._dropout.pop(s, None)
+            self._order_dirty = True
+            self.out_mail.append(Mail(
+                dst_shard=dst_shard, time=done,
+                kind=EventKind.TRANSFER_DONE, key=cid,
+                payload={"client": cid, "what": "migration",
+                         "client_state": state, "mig": mig}))
+
+    def _on_transfer_mig(self, s: int) -> None:
+        mig = self._inflight_mig.pop(s)
+        ei = self._eidx[mig["dst"]]
+        dst = self._edge_list[ei]
+        dst.attached += 1
+        dst.migrations_in += 1
+        self._edge[s] = ei
+        self._edge_np[s] = ei
+        self._price_slot(s)
+        self._fixed_np[s] = self._fixed[s]
+        self._srv_np[s] = self._srv[s]
+        self._downlink_np[s] = self._downlink[s]
+        self._train_resume(ei)
+        end = self.now + mig["unpack_s"]
+        self.out_migrations.append((
+            self._ids[s], mig["src"], mig["dst"], self._epoch[s],
+            mig["start_s"], end, mig["nbytes"], mig["pack_s"],
+            mig.get("queue_s", 0.0),
+            self.now - mig["start_s"] - mig["pack_s"]
+            - mig.get("queue_s", 0.0)))
+        # FedFly: resume the interrupted epoch, never restart (move_at
+        # is clamped below num_batches, so batches always remain)
+        assert self._batch_idx[s] < self._nb[s]
+        self._begin_batch(s, end)
+
+    # -- update arrival --------------------------------------------------
+
+    def _on_transfer_update(self, s: int) -> None:
+        now = self.now
+        self.out_contribs.append((
+            now, self._ids[s], self._ckeys[self._cohort[s]],
+            self._replica[s], self._epoch[s], self._epoch_start_s[s],
+            self._pulled_s[s], self._num_samples[s]))
+        self._epochs_done[s] += 1
+        if self.mode == "async":
+            if self._epochs_done[s] < self.num_rounds:
+                self._start_epoch(s, self._epoch[s] + 1,
+                                  now + self._downlink[s])
+            else:
+                self._done[s] = True
+                self._done_np[s] = True

@@ -1,0 +1,95 @@
+"""Simulator-vs-testbed cross-validation (ROADMAP carried item): the
+4-device paper configuration run through BOTH stacks —
+``core.scheduler.FedFlyScheduler`` (the testbed replica: real split
+training, per-batch timing) and ``sim.FleetSimulator`` (the event-driven
+fleet engine, ``max_replicas=4`` so every client keeps exact per-client
+numerics) — must agree on round time per client.
+
+Both stacks price a batch with the same cost model
+(``StageCostModel.costs`` + ``batch_time_s`` decomposition: 3x forward
+FLOPs on each stage + two smashed-tensor transfers), so the simulated
+round time may differ only by the simulator's explicit queueing terms
+(update upload over the backhaul), which are small against minutes of
+Pi-class compute.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.scheduler import FedFlyScheduler
+from repro.data.datasets import synthetic_cifar10
+from repro.data.loader import Batcher
+from repro.data.partition import balanced
+from repro.models.vgg import VGG5
+from repro.optim.optimizers import sgd
+from repro.optim.schedules import constant
+from repro.runtime.cluster import (PI3, PI4, WIFI_75MBPS,
+                                   make_testbed_devices,
+                                   make_testbed_edges)
+from repro.sim.edge import make_edges
+from repro.sim.fleet import ClientSpec, Fleet
+from repro.sim.simulator import FleetSimulator
+
+BATCH = 100
+NUM_BATCHES = 3
+
+
+@pytest.fixture(scope="module")
+def testbed_times():
+    """Per-client simulated round time from the testbed scheduler."""
+    train, _ = synthetic_cifar10(n_train=BATCH * NUM_BATCHES * 4, n_test=16)
+    batchers = [Batcher(p, BATCH) for p in balanced(train, 4)]
+    sched = FedFlyScheduler(
+        VGG5(), sgd(momentum=0.9), make_testbed_devices(batchers),
+        make_testbed_edges(), split_point=2, lr_schedule=constant(0.01),
+        link=WIFI_75MBPS, seed=0)
+    sched.initialize()
+    hist = sched.run(1, None)
+    return hist.rounds[0].client_times_sim
+
+
+@pytest.fixture(scope="module")
+def simulator_times():
+    """Per-client round-0 duration from the fleet simulator, mirroring
+    the testbed placement: pi3/pi4 split across an i5 and an i7 edge
+    (``make_edges(2)`` cycles exactly those profiles, same WiFi link)."""
+    edges = make_edges(2, slots=8)
+    placement = [("pi3_1", PI3, "edge-0"), ("pi3_2", PI3, "edge-1"),
+                 ("pi4_1", PI4, "edge-0"), ("pi4_2", PI4, "edge-1")]
+    specs = [ClientSpec(client_id=cid, profile=prof, edge_id=eid,
+                        num_samples=BATCH * NUM_BATCHES,
+                        batch_size=BATCH, num_batches=NUM_BATCHES)
+             for cid, prof, eid in placement]
+    fleet = Fleet(VGG5(), sgd(momentum=0.9), specs, split_point=2,
+                  lr_schedule=constant(0.01), max_replicas=4, seed=0)
+    sim = FleetSimulator(fleet, edges, mode="sync")
+    sim.run(1)
+    return {c.client_id: c.duration_s for c in sim.metrics.contributions
+            if c.round_idx == 0}
+
+
+def test_round_time_parity(testbed_times, simulator_times):
+    """Each client's simulated round time agrees across the stacks."""
+    assert set(testbed_times) == set(simulator_times)
+    for cid in sorted(testbed_times):
+        t_testbed = testbed_times[cid]
+        t_sim = simulator_times[cid]
+        assert t_sim == pytest.approx(t_testbed, rel=0.05), (
+            f"{cid}: testbed {t_testbed:.2f}s vs simulator {t_sim:.2f}s")
+
+
+def test_round_time_ordering(testbed_times, simulator_times):
+    """Hardware heterogeneity survives both stacks: every Pi3 round is
+    slower than every Pi4 round, in the same direction on both sides."""
+    for times in (testbed_times, simulator_times):
+        pi3 = min(times["pi3_1"], times["pi3_2"])
+        pi4 = max(times["pi4_1"], times["pi4_2"])
+        assert pi3 > pi4
+
+
+def test_simulator_accounts_upload(testbed_times, simulator_times):
+    """The simulator's round additionally prices the update upload over
+    the backhaul — its duration is >= the testbed's compute-only time,
+    and the excess stays within the parity tolerance."""
+    for cid in testbed_times:
+        assert simulator_times[cid] >= testbed_times[cid] * 0.999

@@ -1,9 +1,21 @@
-"""repro.sim.engine: event ordering, determinism, handler dispatch."""
+"""repro.sim.engine: event ordering, determinism, handler dispatch.
+
+Ordering/bound tests are parametrized over both schedulers — the heap
+reference and the calendar queue must be observationally identical
+through the ``SimEngine`` API (the hypothesis stream test in
+``test_scheduler_differential.py`` is the deeper version of this).
+"""
 from __future__ import annotations
+
+import heapq
+import random
 
 import pytest
 
-from repro.sim.engine import Event, EventKind, SimEngine
+from repro.sim.engine import CalendarQueue, Event, EventKind, SimEngine, \
+    make_queue
+
+SCHEDULERS = ["heap", "calendar"]
 
 
 def collect(engine, kinds=EventKind):
@@ -13,8 +25,9 @@ def collect(engine, kinds=EventKind):
     return seen
 
 
-def test_time_ordering():
-    eng = SimEngine()
+@pytest.mark.parametrize("scheduler", SCHEDULERS)
+def test_time_ordering(scheduler):
+    eng = SimEngine(scheduler)
     seen = collect(eng)
     eng.schedule(3.0, EventKind.MOVE, tag="c")
     eng.schedule(1.0, EventKind.BATCH_DONE, tag="a")
@@ -25,8 +38,9 @@ def test_time_ordering():
     assert eng.events_processed == 3
 
 
-def test_tie_break_is_insertion_order():
-    eng = SimEngine()
+@pytest.mark.parametrize("scheduler", SCHEDULERS)
+def test_tie_break_is_insertion_order(scheduler):
+    eng = SimEngine(scheduler)
     seen = collect(eng)
     for i in range(10):
         eng.schedule(1.0, EventKind.BATCH_DONE, i=i)
@@ -34,8 +48,9 @@ def test_tie_break_is_insertion_order():
     assert [e.payload["i"] for e in seen] == list(range(10))
 
 
-def test_handlers_can_schedule():
-    eng = SimEngine()
+@pytest.mark.parametrize("scheduler", SCHEDULERS)
+def test_handlers_can_schedule(scheduler):
+    eng = SimEngine(scheduler)
     fired = []
 
     def on_batch(ev):
@@ -49,8 +64,9 @@ def test_handlers_can_schedule():
     assert [t for _, t in fired] == [1.0, 2.0, 3.0, 4.0]
 
 
-def test_negative_delay_and_past_rejected():
-    eng = SimEngine()
+@pytest.mark.parametrize("scheduler", SCHEDULERS)
+def test_negative_delay_and_past_rejected(scheduler):
+    eng = SimEngine(scheduler)
     eng.register(EventKind.MOVE, lambda ev: None)
     eng.schedule(1.0, EventKind.MOVE)
     eng.run()
@@ -67,8 +83,9 @@ def test_missing_handler_raises():
         eng.run()
 
 
-def test_until_and_max_events_bounds():
-    eng = SimEngine()
+@pytest.mark.parametrize("scheduler", SCHEDULERS)
+def test_until_and_max_events_bounds(scheduler):
+    eng = SimEngine(scheduler)
     collect(eng)
     for i in range(5):
         eng.schedule(float(i), EventKind.BATCH_DONE)
@@ -80,8 +97,9 @@ def test_until_and_max_events_bounds():
     assert eng.pending == 0
 
 
-def test_stats_shape():
-    eng = SimEngine()
+@pytest.mark.parametrize("scheduler", SCHEDULERS)
+def test_stats_shape(scheduler):
+    eng = SimEngine(scheduler)
     collect(eng)
     eng.schedule(1.0, EventKind.MOVE)
     eng.schedule(2.0, EventKind.MOVE)
@@ -92,3 +110,96 @@ def test_stats_shape():
     assert s["by_kind"] == {"batch_done": 1, "move": 2}
     assert s["sim_time_s"] == 2.0
     assert s["events_per_sec"] > 0
+
+
+@pytest.mark.parametrize("scheduler", SCHEDULERS)
+def test_cancel_after_run_does_not_leak(scheduler):
+    # regression: cancel() on an event that already ran used to park its
+    # seq in _cancelled forever, permanently undercounting `pending`
+    eng = SimEngine(scheduler)
+    collect(eng)
+    ev = eng.schedule(1.0, EventKind.MOVE)
+    eng.run()
+    assert eng.pending == 0
+    eng.cancel(ev)                         # no-op: the event already ran
+    assert eng.pending == 0 and not eng._cancelled
+    live = eng.schedule(1.0, EventKind.MOVE)
+    assert eng.pending == 1
+    eng.run()
+    assert eng.events_processed == 2       # the late cancel hid nothing
+
+
+@pytest.mark.parametrize("scheduler", SCHEDULERS)
+def test_cancel_is_idempotent_and_pending_exact(scheduler):
+    eng = SimEngine(scheduler)
+    collect(eng)
+    evs = [eng.schedule(float(i), EventKind.MOVE) for i in range(4)]
+    eng.cancel(evs[1])
+    eng.cancel(evs[1])                     # double-cancel: one tombstone
+    assert eng.pending == 3 and len(eng._cancelled) == 1
+    eng.run()
+    assert eng.events_processed == 3 and eng.pending == 0
+    assert not eng._cancelled              # tombstone reclaimed at pop
+
+
+@pytest.mark.parametrize("scheduler", SCHEDULERS)
+def test_cancel_at_head_skips_without_advancing_clock(scheduler):
+    eng = SimEngine(scheduler)
+    seen = collect(eng)
+    head = eng.schedule(1.0, EventKind.MOVE)
+    eng.schedule(2.0, EventKind.BATCH_DONE)
+    eng.cancel(head)
+    assert eng.peek_time() == 2.0          # cancelled head never surfaces
+    eng.run()
+    assert [e.time for e in seen] == [2.0] and eng.now == 2.0
+
+
+def test_unknown_scheduler_rejected():
+    with pytest.raises(ValueError):
+        SimEngine("wheel-of-fortune")
+
+
+def test_calendar_schedule_below_cursor_after_cancelled_head():
+    # a cancelled far-future head advances the calendar pop cursor when
+    # it is reclaimed; a later schedule at the (earlier) engine clock
+    # must still pop first — the push pulls the cursor back
+    eng = SimEngine("calendar")
+    seen = collect(eng)
+    eng.schedule(1.0, EventKind.MOVE)
+    eng.run()                              # now = 1.0
+    far = eng.schedule_at(500.0, EventKind.MOVE)
+    eng.cancel(far)
+    assert eng.peek_time() is None         # reclaims the cancelled head
+    eng.schedule_at(2.0, EventKind.BATCH_DONE)
+    eng.schedule_at(7.5, EventKind.TRANSFER_DONE)
+    eng.run()
+    assert [e.time for e in seen] == [1.0, 2.0, 7.5]
+
+
+def test_calendar_queue_matches_heapq_under_resize_churn():
+    # direct queue-level differential, sized to cross grow + shrink
+    # thresholds several times
+    rng = random.Random(7)
+    q, ref = CalendarQueue(), []
+    last, seq = 0.0, 0
+    for _ in range(20000):
+        if ref and rng.random() < 0.45:
+            want, got = heapq.heappop(ref), q.pop()
+            assert want == got
+            last = want[0]
+        else:
+            t = last + rng.random() * rng.choice([0.0, 0.01, 1.0, 500.0])
+            entry = (t, rng.choice(["", "k1", "k2"]), seq)
+            seq += 1
+            heapq.heappush(ref, entry)
+            q.push(entry)
+    while ref:
+        assert heapq.heappop(ref) == q.pop()
+    assert len(q) == 0 and q.peek() is None
+
+
+def test_make_queue_names():
+    assert type(make_queue("calendar")) is CalendarQueue
+    assert len(make_queue("heap")) == 0
+    with pytest.raises(ValueError):
+        make_queue("fifo")

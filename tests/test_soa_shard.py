@@ -1,0 +1,157 @@
+"""SoA shard engine + sampled cohorts: differential bit-identity against
+the object engine across scenario kinds, shard counts, worker processes,
+and sampled participation; sampling determinism and shuffle invariance.
+
+The SoA+calendar path is the million-device hot loop (sim README "Scale
+path"); the object+heap path is the reference semantics. Every report
+here must match the reference bit-for-bit after dropping wall-clock
+derived fields — floats included, not approximately.
+"""
+from __future__ import annotations
+
+import copy
+import random
+
+import numpy as np
+import pytest
+
+from repro.sim import sampling
+from repro.sim.scenarios import SCENARIOS, run_scenario
+
+
+def scrub(report):
+    """Drop wall-clock-derived and engine-identity fields; everything
+    left (per-round metrics, migrations, losses, edge stats) must be
+    bit-identical between engines."""
+    r = copy.deepcopy(report)
+    eng = r.get("engine", {})
+    eng.pop("events_per_sec", None)
+    eng.pop("wall_s", None)
+    eng.pop("engine_wall_s", None)
+    r.pop("summary", None)          # embeds wall-derived throughput
+    cfg = r.get("config", {})
+    cfg.pop("client_state", None)
+    cfg.pop("scheduler", None)
+    return r
+
+
+def run_pair(**kw):
+    """(reference report, SoA report) for one scenario config."""
+    base = SCENARIOS[kw.pop("scenario")].replace(measure_pack=False, **kw)
+    ref = run_scenario(base.replace(client_state="objects",
+                                    scheduler="heap"))
+    soa = run_scenario(base.replace(client_state="soa",
+                                    scheduler="calendar"))
+    return ref, soa
+
+
+# -- differential: SoA+calendar vs objects+heap -----------------------------
+
+@pytest.mark.parametrize("scenario,mode", [
+    ("poisson", "sync"),
+    ("poisson", "async"),
+    ("handoff_storm", "sync"),
+    ("device_churn", "async"),
+    ("flash_crowd", "sync"),
+])
+def test_soa_bit_identical_across_scenarios(scenario, mode):
+    ref, soa = run_pair(scenario=scenario, mode=mode, rounds=2,
+                        num_clients=24)
+    assert scrub(ref) == scrub(soa)
+    assert soa["engine"]["events_processed"] > 0
+
+
+@pytest.mark.parametrize("shards", [2, 4])
+def test_soa_bit_identical_multishard(shards):
+    """Cross-shard migration mail materializes/installs clients at the
+    wire boundary — the SoA columns must survive the round trip."""
+    ref, soa = run_pair(scenario="poisson", mode="sync", rounds=2,
+                        num_clients=24, shards=shards)
+    assert scrub(ref) == scrub(soa)
+    assert ref["migrations"]["count"] == soa["migrations"]["count"]
+
+
+def test_soa_sampled_parity():
+    """Sampling composes with the SoA path: non-participants never emit
+    batch events, and the per-round metrics still match the reference."""
+    ref, soa = run_pair(scenario="poisson", mode="sync", rounds=3,
+                        num_clients=24, sample_fraction=0.5)
+    assert scrub(ref) == scrub(soa)
+    n_updates = [r["n_updates"] for r in ref["rounds"]]
+    assert max(n_updates) < 24          # sampling really thinned rounds
+
+
+def test_soa_sampled_empty_rounds():
+    """A tiny fleet at a small fraction hits rounds where nobody is
+    sampled — both engines must record the same skipped rounds."""
+    ref, soa = run_pair(scenario="poisson", mode="sync", rounds=6,
+                        num_clients=6, sample_fraction=0.2)
+    assert scrub(ref) == scrub(soa)
+    skipped = [r for r in ref["rounds"] if r.get("skipped_round")]
+    assert skipped                       # the case actually occurred
+
+
+# -- sampling determinism ---------------------------------------------------
+
+def sampled_rounds(shards, workers=None, client_state="objects",
+                   scheduler="heap"):
+    spec = SCENARIOS["poisson"].replace(
+        mode="sync", rounds=3, num_clients=16, measure_pack=False,
+        sample_fraction=0.5, shards=shards, workers=workers,
+        client_state=client_state, scheduler=scheduler)
+    return run_scenario(spec)["rounds"]
+
+
+def test_sampling_shard_invariant():
+    """Same seed => bit-identical round metrics for any shard count."""
+    base = sampled_rounds(1)
+    assert sampled_rounds(2) == base
+    assert sampled_rounds(4) == base
+    assert sampled_rounds(2, client_state="soa",
+                          scheduler="calendar") == base
+
+
+@pytest.mark.slow
+def test_sampling_worker_invariant():
+    """Worker processes own disjoint shard groups; the sampled cohort
+    must not depend on which process evaluates the mask."""
+    assert sampled_rounds(2, workers=2) == sampled_rounds(1)
+
+
+def test_sampling_insertion_order_invariant():
+    """participation_mask depends only on each client's own digest —
+    shuffling the id column permutes the mask, never changes membership."""
+    ids = [f"dev-{i:04d}" for i in range(200)]
+    shuffled = ids[:]
+    random.Random(7).shuffle(shuffled)
+    m1 = sampling.participation_mask(sampling.digests_for(ids),
+                                     seed=3, round_idx=1, fraction=0.4)
+    m2 = sampling.participation_mask(sampling.digests_for(shuffled),
+                                     seed=3, round_idx=1, fraction=0.4)
+    chosen1 = {c for c, m in zip(ids, m1) if m}
+    chosen2 = {c for c, m in zip(shuffled, m2) if m}
+    assert chosen1 == chosen2
+    assert 0 < len(chosen1) < len(ids)
+
+
+def test_sampling_varies_by_round_and_seed():
+    d = sampling.digests_for([f"dev-{i:04d}" for i in range(300)])
+    m_r0 = sampling.participation_mask(d, seed=0, round_idx=0, fraction=0.5)
+    m_r1 = sampling.participation_mask(d, seed=0, round_idx=1, fraction=0.5)
+    m_s1 = sampling.participation_mask(d, seed=1, round_idx=0, fraction=0.5)
+    assert not np.array_equal(m_r0, m_r1)
+    assert not np.array_equal(m_r0, m_s1)
+    # repeatable
+    assert np.array_equal(
+        m_r0,
+        sampling.participation_mask(d, seed=0, round_idx=0, fraction=0.5))
+
+
+def test_fraction_one_bit_identical_to_unsampled():
+    """sample_fraction=1.0 must short-circuit to the legacy path: not a
+    single float may differ from a spec that never mentions sampling."""
+    spec = SCENARIOS["poisson"].replace(mode="sync", rounds=2,
+                                        num_clients=16, measure_pack=False)
+    legacy = run_scenario(spec)
+    sampled = run_scenario(spec.replace(sample_fraction=1.0))
+    assert scrub(legacy) == scrub(sampled)
