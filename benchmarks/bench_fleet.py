@@ -59,6 +59,13 @@ artifact (default bench_fleet_recovery.json: recovery wall time,
 re-assigned shard counts). ``--barrier-timeout`` / ``--control-timeout``
 override the mailbox deadline constants for every mode.
 
+Aggregation tree: ``--agg-tree`` runs the first selected scenario with
+flat and two-level aggregation (ARCHITECTURE §3.8) in both sync and
+async mode, asserts the per-round metrics are bit-identical between the
+trees, and asserts a ≥4x coordinator-ingress reduction at 8+ groups in
+the many-cohort sync regime. Ingress bytes, the reduction ratio, and
+events/sec land in the artifact (default bench_fleet_aggtree.json).
+
 Telemetry: ``--trace [PATH]`` runs the first selected scenario twice —
 telemetry off (the throughput baseline) and telemetry on writing the
 merged Chrome/Perfetto trace (docs/OBSERVABILITY.md) — verifies the
@@ -403,6 +410,66 @@ def _chaos_mode(args, name: str, n_clients: int, n_edges: int,
     return result
 
 
+def _agg_tree_mode(args, name: str, n_clients: int, n_edges: int,
+                   rounds: int) -> dict:
+    """Hierarchical-aggregation smoke (ARCHITECTURE §3.8): the same
+    scenario flat then 2level, in both aggregation modes. Per-round
+    metrics must be bit-identical between the two trees (the exact-fold
+    contract), and in the many-cohort regime the two-level tree must cut
+    coordinator aggregation ingress by ≥4x at 8+ groups — the O(groups)
+    vs O(distinct trees) claim. Ingress bytes, the ratio, and events/sec
+    land in the artifact."""
+    shards = args.shards if args.shards > 1 else (2 if args.quick else 8)
+    cohorts = args.cohorts if args.cohorts > 1 else (4 if args.quick
+                                                    else 4 * shards)
+    result = {"scenario": name, "devices": n_clients, "edges": n_edges,
+              "rounds": rounds, "groups": shards, "cohorts": cohorts,
+              "workers": args.workers, "cpu_count": os.cpu_count(),
+              "modes": {}}
+    for mode in ("sync", "async"):
+        pair = {}
+        for tree in ("flat", "2level"):
+            spec = _scenario_spec(name, args, n_clients, n_edges, rounds,
+                                  shards, args.workers).replace(
+                mode=mode, num_cohorts=cohorts, agg_tree=tree,
+                measure_pack=False)
+            t0 = time.time()
+            rep = run_scenario(spec)
+            agg = rep["summary"]["agg"]
+            pair[tree] = {
+                "wall_s": round(time.time() - t0, 3),
+                "events_per_sec": round(
+                    rep["engine"]["events_per_sec"], 1),
+                "ingress_bytes": agg["ingress_bytes"],
+                "root_edge": agg["root_edge"],
+                "root_moves": agg["root_moves"],
+                "rounds": rep["rounds"],
+            }
+            print(f"  {mode:5s} {tree:6s}: "
+                  f"ingress={agg['ingress_bytes']:>12,d} B  "
+                  f"{pair[tree]['events_per_sec']:9.0f} ev/s  "
+                  f"{pair[tree]['wall_s']:6.1f}s wall")
+        if pair["flat"]["rounds"] != pair["2level"]["rounds"]:
+            raise AssertionError(
+                f"{mode}: per-round metrics differ between flat and "
+                f"2level aggregation — the exact-fold contract is broken")
+        pair["rounds_bit_identical"] = True
+        ratio = (pair["flat"]["ingress_bytes"]
+                 / max(pair["2level"]["ingress_bytes"], 1))
+        pair["ingress_ratio"] = round(ratio, 2)
+        print(f"  {mode:5s} ingress reduction: {ratio:.1f}x "
+              f"({shards} groups, {cohorts} cohorts)")
+        if mode == "sync" and shards >= 8 and ratio < 4.0:
+            raise AssertionError(
+                f"two-level ingress reduction {ratio:.2f}x < 4x at "
+                f"{shards} groups / {cohorts} cohorts")
+        # the per-round records are bit-identical and large; keep one copy
+        pair["flat"].pop("rounds")
+        pair["2level"].pop("rounds")
+        result["modes"][mode] = pair
+    return result
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--clients", "--devices", dest="clients", type=int,
@@ -456,6 +523,11 @@ def main(argv=None) -> None:
                          "on, write the merged Chrome/Perfetto trace to "
                          "PATH (default fleet_trace.json), verify "
                          "bit-identity, record overhead in the artifact")
+    ap.add_argument("--agg-tree", action="store_true", dest="agg_tree",
+                    help="run the first scenario flat vs 2level "
+                         "aggregation in both modes, assert bit-identity "
+                         "and the >=4x ingress reduction at 8+ groups, "
+                         "emit the artifact")
     ap.add_argument("--chaos", action="store_true",
                     help="kill one shard group mid-round in a sync run "
                          "(pipes by default, sockets with --hosts), "
@@ -501,6 +573,24 @@ def main(argv=None) -> None:
                           ("recoveries", "reassigned_shards",
                            "recovery_wall_s", "timing_bit_identical",
                            "rounds_completed")}))
+        return
+
+    if args.agg_tree:
+        # the ratio claim is about aggregation shape, not mobility; the
+        # alphabetical default would pick an async-only scenario
+        name = args.scenarios[0] if args.scenarios != sorted(SCENARIOS) \
+            else "poisson"
+        artifact = args.artifact or "bench_fleet_aggtree.json"
+        print(f"# aggregation tree: {name}, {n_clients} devices, "
+              f"{n_edges} edges, {rounds} rounds, flat vs 2level")
+        result = _agg_tree_mode(args, name, n_clients, n_edges, rounds)
+        with open(artifact, "w") as f:
+            json.dump(result, f)
+        print(f"# artifact: {artifact}")
+        print(json.dumps({m: {"ingress_ratio": p["ingress_ratio"],
+                              "flat_bytes": p["flat"]["ingress_bytes"],
+                              "2level_bytes": p["2level"]["ingress_bytes"]}
+                          for m, p in result["modes"].items()}))
         return
 
     if args.scale_sweep:

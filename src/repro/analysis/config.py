@@ -32,6 +32,7 @@ DEFAULT_CONFIG: Dict[str, Any] = {
         "repro.sim.engine",
         "repro.sim.mailbox",
         "repro.sim.trainer",
+        "repro.sim.agg_tree",
         "repro.runtime.transport",
         "repro.runtime.serialization",
         "repro.obs",
@@ -63,6 +64,7 @@ DEFAULT_CONFIG: Dict[str, Any] = {
         "src/repro/sim/sampling.py",
         "src/repro/sim/fleet.py",
         "src/repro/sim/async_agg.py",
+        "src/repro/sim/agg_tree.py",
         "src/repro/core/fedavg.py",
         "src/repro/kernels",
     ],
@@ -74,6 +76,7 @@ DEFAULT_CONFIG: Dict[str, Any] = {
         "src/repro/sim/simulator.py",
         "src/repro/sim/fleet.py",
         "src/repro/sim/async_agg.py",
+        "src/repro/sim/agg_tree.py",
     ],
     # stdlib random is banned everywhere under these scopes (seeded
     # np.random.Generator / jax.random only)

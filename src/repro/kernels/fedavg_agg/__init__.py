@@ -2,7 +2,12 @@ from repro.kernels.fedavg_agg.fedavg_agg import (fedavg_agg,  # noqa: F401
                                                  fedavg_agg_mix,
                                                  has_compiled_pallas,
                                                  resolve_interpret)
-from repro.kernels.fedavg_agg.ops import (fedavg_mix_tree,  # noqa: F401
+from repro.kernels.fedavg_agg.ops import (COEFF_SCALE,  # noqa: F401
+                                          coeff_finalize_tree,
+                                          coeff_fold_tree,
+                                          coeff_merge_trees,
+                                          coeff_term_tree, fedavg_mix_tree,
                                           fedavg_tree)
-from repro.kernels.fedavg_agg.ref import (fedavg_agg_mix_ref,  # noqa: F401
+from repro.kernels.fedavg_agg.ref import (coeff_finalize_ref,  # noqa: F401
+                                          coeff_fold_ref, fedavg_agg_mix_ref,
                                           fedavg_agg_ref)

@@ -23,6 +23,95 @@ Params = Any
 # below this many elements per leaf the kernel launch overhead dominates
 PALLAS_MIN_LEAF = 1024
 
+# -- coefficient-form exact fold (hierarchical aggregation) -----------------
+#
+# Floating-point addition is not associative, so a float partial fold
+# cannot be bit-identical to the flat fold for an *arbitrary* cohort ->
+# group partition. The coefficient-form entry points therefore fold in
+# int64 fixed point: each update contributes
+#
+#     term_i = rint(c_i * float64(float32(x_i)) * 2**40)   (int64)
+#
+# and a fold over ANY subset of updates is an exact int64 sum —
+# associative and commutative, so partial-then-root composes bit-exactly
+# with the flat fold (docs/ARCHITECTURE.md §3.8). ``coeff_finalize_tree``
+# converts back:  out = float32(keep * g + acc * 2**-40).
+#
+# Range contract: coefficients are convex-ish (sum <= 1) and parameters
+# are O(1), so |sum(term)| < 2**40 * max|c_i x_i| — int64 is safe while
+# |c_i * x_i| < 2**22, i.e. for any sane model scale (float32 itself
+# loses integer precision at 2**24).
+
+COEFF_SCALE = float(2.0 ** 40)
+
+
+def _is_float_leaf(leaf) -> bool:
+    return np.issubdtype(np.asarray(leaf).dtype, np.floating)
+
+
+def coeff_term_tree(tree: Params, coeff: float) -> Params:
+    """One update's fixed-point contribution: int64 per float leaf;
+    non-float leaves (step counters etc.) collapse to a scalar 0 so the
+    accumulator tree stays cheap to merge and to ship."""
+    c = np.float64(coeff)
+
+    def term(leaf):
+        a = np.asarray(leaf)
+        if not np.issubdtype(a.dtype, np.floating):
+            return np.zeros((), np.int64)
+        x = a.astype(np.float32).astype(np.float64)
+        return np.rint(c * x * COEFF_SCALE).astype(np.int64)
+    return jax.tree.map(term, tree)
+
+
+def coeff_fold_tree(update_trees: Sequence[Params],
+                    coeffs: Sequence[float]) -> Optional[Params]:
+    """Fold a list of update trees under externally supplied
+    sequential-equivalent coefficients into one int64 accumulator tree.
+    Returns ``None`` for an empty fold (the caller's skipped-window
+    path)."""
+    acc = None
+    for tree, c in zip(update_trees, coeffs):
+        t = coeff_term_tree(tree, c)
+        acc = t if acc is None else coeff_merge_trees([acc, t])
+    return acc
+
+
+def coeff_merge_trees(accs: Sequence[Params]) -> Optional[Params]:
+    """Exact merge of int64 accumulator trees (the root fold). int64
+    addition is associative, so any merge order/partition gives the same
+    bits."""
+    accs = [a for a in accs if a is not None]
+    if not accs:
+        return None
+    out = accs[0]
+    for a in accs[1:]:
+        out = jax.tree.map(lambda x, y: x + y, out, a)
+    return out
+
+
+def coeff_finalize_tree(global_tree: Params, keep: float,
+                        acc: Optional[Params]) -> Params:
+    """Apply a finished accumulator to the global model:
+
+        out = float32(keep * global + acc * 2**-40)  per float leaf
+
+    (sync FedAvg passes keep=0; async mixing passes the telescoped
+    1 - sum(b_i)). ``acc=None`` (empty fold) carries the global forward
+    unchanged."""
+    if acc is None:
+        return global_tree
+    k = np.float64(keep)
+
+    def fin(g, a):
+        g_np = np.asarray(g)
+        if not np.issubdtype(g_np.dtype, np.floating):
+            return g_np
+        delta = a.astype(np.float64) / COEFF_SCALE
+        out = k * g_np.astype(np.float32).astype(np.float64) + delta
+        return out.astype(np.float32).astype(g_np.dtype)
+    return jax.tree.map(fin, global_tree, acc)
+
 
 def _resolve_use_pallas(use_pallas: Optional[bool]) -> bool:
     return has_compiled_pallas() if use_pallas is None else use_pallas

@@ -1,7 +1,10 @@
-"""Pure-jnp oracle: weighted average over a stacked client/edge axis."""
+"""Pure-jnp oracle: weighted average over a stacked client/edge axis —
+plus the numpy refs for the coefficient-form exact fold (the fixed-point
+algebra hierarchical aggregation is built on, see ops.py)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 
 def fedavg_agg_ref(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
@@ -21,3 +24,27 @@ def fedavg_agg_mix_ref(global_flat: jnp.ndarray, stacked: jnp.ndarray,
     mixed = keep * global_flat.astype(jnp.float32) + \
         jnp.einsum("e,en->n", w, stacked.astype(jnp.float32))
     return mixed.astype(global_flat.dtype)
+
+
+# -- coefficient-form exact-fold refs (flat-array oracles) ------------------
+
+_COEFF_SCALE = np.float64(2.0 ** 40)
+
+
+def coeff_fold_ref(stacked: np.ndarray, coeffs: np.ndarray) -> np.ndarray:
+    """stacked: (E, N) float block; coeffs: (E,) float64. Returns the
+    int64 fixed-point accumulator sum_i rint(c_i * x_i * 2**40) — the
+    flat-array oracle for ``ops.coeff_fold_tree``."""
+    x = np.asarray(stacked).astype(np.float32).astype(np.float64)
+    c = np.asarray(coeffs, np.float64)[:, None]
+    return np.rint(c * x * _COEFF_SCALE).astype(np.int64).sum(axis=0)
+
+
+def coeff_finalize_ref(global_flat: np.ndarray, keep: float,
+                       acc: np.ndarray) -> np.ndarray:
+    """float32(keep * global + acc * 2**-40) — the flat-array oracle for
+    ``ops.coeff_finalize_tree``."""
+    g = np.asarray(global_flat)
+    out = (np.float64(keep) * g.astype(np.float32).astype(np.float64)
+           + acc.astype(np.float64) / _COEFF_SCALE)
+    return out.astype(np.float32).astype(g.dtype)

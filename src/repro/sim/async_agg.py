@@ -18,26 +18,67 @@
                       of stalling a round barrier — the property the
                       thousand-device scenarios exercise.
 
-Both keep the global model as a numpy pytree, and both batch whole
-rounds/flush-windows of updates into ONE ``repro.kernels.fedavg_agg``
-dispatch (``fedavg_tree`` / ``fedavg_mix_tree``) instead of a tree-map
-per update: a thousand-update flush is one stacked (E, N) contraction
-per leaf. ``AsyncAggregator.submit`` keeps the sequential per-update
-path — ``flush_batch`` is algebraically equivalent to a sequence of
-submits (see the effective-coefficient folding there) and the sharded
-simulator uses it exclusively.
+Both keep the global model as a numpy pytree, and both are *mergeable*:
+the window/round fold runs in the coefficient form of
+``repro.kernels.fedavg_agg`` (``coeff_fold_tree`` — int64 fixed point,
+associative), so a partial fold over any subset of the window's updates
+composes bit-exactly with the root fold (``coeff_merge_trees`` +
+``commit_acc``). That is the hierarchical-aggregation contract
+(ARCHITECTURE §3.8): flat and two-level aggregation produce identical
+bits for ANY cohort -> group partition. ``AsyncAggregator.submit``
+keeps the sequential per-update float path — ``flush_batch`` is
+algebraically equivalent to a sequence of submits (see the
+effective-coefficient folding there).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
-from repro.kernels.fedavg_agg import fedavg_mix_tree, fedavg_tree
+from repro.kernels.fedavg_agg import coeff_finalize_tree, coeff_fold_tree
 
 Params = Any
 StalenessFn = Callable[[int], float]
+
+
+def sync_coeffs(weights: Sequence[float]) -> List[float]:
+    """Sequential-equivalent FedAvg coefficients: c_i = w_i / W with W a
+    *sequential* float64 sum in the given order — the one canonical
+    reduction both the flat and the two-level path use, so the partition
+    into group partials never changes a coefficient."""
+    total = 0.0
+    for w in weights:
+        total += float(w)
+    if total <= 0.0:
+        n = max(len(weights), 1)
+        return [1.0 / n] * len(weights)
+    return [float(w) / total for w in weights]
+
+
+def group_coeffs(keys: Sequence[Any], coeffs: Sequence[float]
+                 ) -> Dict[Any, float]:
+    """Sum per-update coefficients over updates sharing a key, first-seen
+    order. Keys must identify the update *tree* (cohort replicas shared
+    by many clients), so the stacked fold axis is the number of distinct
+    trees, not the number of clients."""
+    grouped: Dict[Any, float] = {}
+    for k, b in zip(keys, coeffs):
+        grouped[k] = grouped.get(k, 0.0) + b
+    return grouped
+
+
+def keep_coeff(grouped: Dict[Any, float]) -> float:
+    """1 - sum(grouped coefficients), summed sequentially in first-seen
+    order — the canonical ``keep`` both aggregation paths share."""
+    total = 0.0
+    # repro-lint: allow[deterministic-iteration] dict insertion order IS
+    # the canonical first-seen order group_coeffs built (arrival order of
+    # the window) — sorting would change the sequential float64 sum
+    for b in grouped.values():
+        total += b
+    return 1.0 - total
 
 
 # ---------------------------------------------------------------------------
@@ -83,33 +124,31 @@ class SyncAggregator:
         self._pending.append((tree, weight))
 
     def commit(self) -> Params:
-        """The round barrier: weighted average of this round's updates.
+        """The round barrier: weighted average of this round's updates
+        via the canonical coefficient fold (c_i = w_i / W, keep = 0).
 
-        An *empty* round (every client mid-migration or offline) used to
-        crash on ``fedavg``'s non-empty assertion; it now carries the
-        previous global forward, still bumps the version (the round
-        happened, it just moved nothing), and counts a skipped round.
+        An *empty* round (every client mid-migration, offline, or
+        sampled out) used to crash on ``fedavg``'s non-empty assertion;
+        it now carries the previous global forward, still bumps the
+        version (the round happened, it just moved nothing), and counts
+        a skipped round — same path ``commit_acc`` takes for an empty
+        two-level fold, so flat and tree runs skip identically.
         """
-        if not self._pending:
-            self.skipped_rounds += 1
-            self.version += 1
-            return self.params
-        # one stacked-kernel dispatch per leaf instead of a list fold;
-        # non-float leaves (step counters etc.) pass through and float
-        # leaves keep their original dtype (bf16 stays bf16)
-        weights = np.asarray([w for _, w in self._pending], np.float32)
+        coeffs = sync_coeffs([w for _, w in self._pending])
+        acc = coeff_fold_tree([t for t, _ in self._pending], coeffs)
+        return self.commit_acc(acc, len(self._pending))
 
-        def avg(*leaves):
-            first = np.asarray(leaves[0])
-            if not np.issubdtype(first.dtype, np.floating):
-                return first
-            stacked = np.stack([np.asarray(l, np.float32) for l in leaves])
-            return np.asarray(fedavg_tree(stacked, weights)).astype(
-                first.dtype)
-
-        self.params = jax.tree.map(avg, *[t for t, _ in self._pending])
+    def commit_acc(self, acc: Optional[Params], n_updates: int) -> Params:
+        """Commit a round from a finished (possibly merged) int64
+        accumulator — the root fold of the two-level path, and the tail
+        of the flat ``commit``. ``acc=None`` / ``n_updates=0`` is the
+        skipped-round carry-forward."""
         self._pending = []
         self.version += 1
+        if acc is None or n_updates == 0:
+            self.skipped_rounds += 1
+            return self.params
+        self.params = coeff_finalize_tree(self.params, 0.0, acc)
         return self.params
 
 
@@ -123,6 +162,7 @@ class AsyncAggregator:
         self.alpha = alpha
         self.staleness_fn = staleness_fn or poly_staleness()
         self.version = 0
+        self.skipped_flushes = 0
         self.total_weight_applied = 0.0
         self._weight_ema: Optional[float] = None
 
@@ -175,32 +215,64 @@ class AsyncAggregator:
         ``fedavg_mix_tree`` call is algebraically identical to E
         sequential submits (fp-accumulation order aside). Updates that
         share a tree object (cohort replicas shared by many clients) are
-        grouped, so the stacked axis is the number of *distinct* trees,
-        not the number of clients — E stays small even for
-        thousand-update flushes. Returns the per-update sequential
-        alphas (for metrics)."""
+        grouped, so the fold axis is the number of *distinct* trees, not
+        the number of clients — E stays small even for thousand-update
+        flushes. The fold itself runs in the exact coefficient form, so
+        a flush window split into per-group partials (two-level mode,
+        keyed by (cohort, epoch, replica) instead of tree identity)
+        commits the same bits. Returns the per-update sequential alphas
+        (for metrics).
+
+        An *empty* flush (every buffered update pruned or sampled out)
+        is a safe no-op — no version bump, no phantom commit — counted
+        in ``skipped_flushes``."""
         if not updates:
+            self.skipped_flushes += 1
             return []
+        keys = [id(tree) for tree, _, _ in updates]
+        tree_of = {}
+        for (tree, _, _), k in zip(updates, keys):
+            tree_of.setdefault(k, tree)
+        alphas, grouped, keep = self.flush_coeffs(
+            [(k, w, s) for k, (_, w, s) in zip(keys, updates)])
+        acc = coeff_fold_tree([_np_tree(tree_of[k]) for k in grouped],
+                              list(grouped.values()))
+        return self.commit_acc(acc, keep, alphas)
+
+    def flush_coeffs(self, updates: Sequence[Tuple[Any, float, int]]
+                     ) -> Tuple[List[float], Dict[Any, float], float]:
+        """The coefficient half of ``flush_batch``: advance the weight
+        EMA over the arrival-ordered (key, weight, staleness) window and
+        return (per-update alphas, key -> folded coefficient in
+        first-seen order, keep). Two-level mode calls this once per
+        flush on the coordinator, ships the grouped coefficients to the
+        owner groups (``fold`` directives), and commits the merged
+        partials with ``commit_acc`` — bit-identical to ``flush_batch``
+        because the coefficients and the fold algebra are the same."""
         alphas = [self._alpha_for(w, s) for _, w, s in updates]
         coeffs = [0.0] * len(alphas)
         tail = 1.0
         for i in range(len(alphas) - 1, -1, -1):
             coeffs[i] = alphas[i] * tail
             tail *= 1.0 - alphas[i]
-        index_of: dict = {}
-        trees: List[Params] = []
-        tree_w: List[float] = []
-        for (tree, _, _), b in zip(updates, coeffs):
-            k = id(tree)
-            if k not in index_of:
-                index_of[k] = len(trees)
-                trees.append(_np_tree(tree))
-                tree_w.append(0.0)
-            tree_w[index_of[k]] += b
-        self.params = fedavg_mix_tree(self.params, trees, tree_w)
-        self.version += len(updates)
-        self.total_weight_applied += sum(alphas)
-        return alphas
+        grouped = group_coeffs([k for k, _, _ in updates], coeffs)
+        return alphas, grouped, keep_coeff(grouped)
 
-    def commit(self) -> Params:      # API symmetry with SyncAggregator
+    def commit_acc(self, acc: Optional[Params], keep: float,
+                   alphas: Sequence[float]) -> List[float]:
+        """Apply a finished (possibly merged) int64 accumulator — the
+        root fold of the two-level path. Empty folds skip without a
+        version bump (no phantom commit)."""
+        if acc is None or not alphas:
+            self.skipped_flushes += 1
+            return []
+        self.params = coeff_finalize_tree(self.params, keep, acc)
+        self.version += len(alphas)
+        self.total_weight_applied += sum(alphas)
+        return list(alphas)
+
+    def commit(self) -> Params:
+        """API symmetry with ``SyncAggregator``: async has no barrier,
+        so an (empty-window) commit is a pure carry-forward — never a
+        crash, never a phantom version bump."""
         return self.params

@@ -273,6 +273,9 @@ class SocketMailbox(Mailbox):
         #: a coordinator replay blocked on an update can never deadlock
         #: on a message queued behind it
         self.on_update: Optional[Callable[[Dict[str, Any]], None]] = None
+        #: same bypass for two-level ``partial_agg`` records — a replay
+        #: blocked in ``partials_for`` must never deadlock on the queue
+        self.on_partial: Optional[Callable[[Dict[str, Any]], None]] = None
         #: called (with a reason) when a records channel errors or dies
         self.on_abort: Optional[Callable[[str], None]] = None
         self.transport = SocketTransport(host, port)
@@ -314,6 +317,9 @@ class SocketMailbox(Mailbox):
                 kind = msg.get("type")
                 if kind == "update" and self.on_update is not None:
                     self.on_update(msg)
+                    return
+                if kind == "partial_agg" and self.on_partial is not None:
+                    self.on_partial(msg)
                     return
                 if kind == "err" and self.on_abort is not None:
                     self.on_abort(msg.get("traceback", "trainer error"))
@@ -468,6 +474,11 @@ class PipeRecordSink:
         self._send({"type": "update", "cohort": cohort_key, "epoch": epoch,
                     "payload": payload})
 
+    def partial_agg(self, group: int, seq: int, n: int,
+                    payload: bytes) -> None:
+        self._send({"type": "partial_agg", "group": group, "seq": seq,
+                    "n": n, "payload": payload})
+
     def idle(self, gen: int) -> None:
         self._send({"type": "idle", "gen": gen})
 
@@ -511,6 +522,10 @@ class SocketRecordSink:
     def update(self, cohort_key, epoch, payload):
         self._send({"type": "update", "cohort": cohort_key, "epoch": epoch,
                     "payload": payload})
+
+    def partial_agg(self, group, seq, n, payload):
+        self._send({"type": "partial_agg", "group": group, "seq": seq,
+                    "n": n, "payload": payload})
 
     def idle(self, gen):
         self._send({"type": "idle", "gen": gen})
@@ -703,7 +718,7 @@ def _dispatch_control(source: "queue.Queue",
             # which synthesizes the stop that ends this loop
             msg = source.get()
             kind = msg["type"]
-            if kind in ("bcast", "train"):
+            if kind in ("bcast", "train", "fold", "agg_place"):
                 trainer.post(msg)
             elif kind == "reassign":
                 new_owner = msg["owner"]
@@ -911,7 +926,9 @@ def _pipe_group_main(conn, peers, lookahead, group_id) -> None:
         if telemetry:
             obs.enable(rank=group_id, process_name=f"group {group_id}")
         sink = PipeRecordSink(conn)
-        trainer = GroupTrainer(trainer_blob, sink)
+        # group_id matters: partial_agg records are keyed by it, and the
+        # coordinator's partials_for waits on exact (seq, group) pairs
+        trainer = GroupTrainer(trainer_blob, sink, group_id=group_id)
         source: "queue.Queue" = queue.Queue()
 
         def pump():               # parent pipe -> control source queue
@@ -979,6 +996,7 @@ class PeerShardedEngine(_MeshEngineBase):
         self.owner = {sid: sid % self.num_groups for sid in self.shard_ids}
         self.state = _MeshState(self.num_groups)
         self.on_update: Optional[Callable] = None
+        self.on_partial: Optional[Callable] = None
         self.on_abort: Optional[Callable[[str], None]] = None
         self._barrier_timeout_s = barrier_timeout_s or _BARRIER_TIMEOUT_S
         self._control_timeout_s = control_timeout_s or _BARRIER_TIMEOUT_S
@@ -1064,6 +1082,10 @@ class PeerShardedEngine(_MeshEngineBase):
                     if kind == "update":
                         if self.on_update is not None:
                             self.on_update(msg)
+                        continue
+                    if kind == "partial_agg":
+                        if self.on_partial is not None:
+                            self.on_partial(msg)
                         continue
                     if kind == "err" and self.on_abort is not None:
                         self.on_abort(msg["traceback"])
@@ -1200,6 +1222,7 @@ class MultihostControl(_MeshEngineBase):
         self.owner = owner_of_shard
         self.state = _MeshState(self.num_groups)
         self.on_update: Optional[Callable] = None
+        self.on_partial: Optional[Callable] = None
         self.on_abort: Optional[Callable[[str], None]] = None
         self._ctrl: Dict[int, FrameStream] = {}
         for r in sorted(addresses):
@@ -1309,6 +1332,14 @@ class HostShardedEngine(_MeshEngineBase):
     @on_update.setter
     def on_update(self, fn):
         self._collector.on_update = fn
+
+    @property
+    def on_partial(self):
+        return self._collector.on_partial
+
+    @on_partial.setter
+    def on_partial(self, fn):
+        self._collector.on_partial = fn
 
     @property
     def on_abort(self):

@@ -93,6 +93,33 @@ class ScenarioSpec:
     sample_fraction: float = 1.0
     scheduler: str = "heap"           # heap | calendar
     client_state: str = "objects"     # objects | soa
+    # hierarchical aggregation (ARCHITECTURE §3.8): "2level" folds each
+    # group's updates into one partial at the edge and commits the
+    # merged partials at a per-round floating root — bit-identical to
+    # "flat", coordinator aggregation ingress O(groups) not O(cohorts)
+    agg_tree: str = "flat"            # flat | 2level
+
+    def __post_init__(self) -> None:
+        """Validate at construction: a bad spec should fail where it is
+        written, not minutes later inside a worker process."""
+        if not 0.0 < self.sample_fraction <= 1.0:
+            raise ValueError(
+                f"sample_fraction must be in (0, 1], got "
+                f"{self.sample_fraction}")
+        if self.num_cohorts < 1:
+            raise ValueError(
+                f"num_cohorts must be >= 1, got {self.num_cohorts}")
+        if self.agg_tree not in ("flat", "2level"):
+            raise ValueError(
+                f"agg_tree must be flat|2level, got {self.agg_tree!r}")
+        if self.num_clients < 1:
+            raise ValueError(
+                f"num_clients must be >= 1, got {self.num_clients}")
+        if self.num_edges < 1:
+            raise ValueError(
+                f"num_edges must be >= 1, got {self.num_edges}")
+        if self.rounds < 1:
+            raise ValueError(f"rounds must be >= 1, got {self.rounds}")
 
     def replace(self, **kw) -> "ScenarioSpec":
         return dataclasses.replace(self, **kw)
@@ -228,7 +255,8 @@ def build_scenario(spec: ScenarioSpec) -> FleetSimulator:
                           control_timeout_s=spec.control_timeout_s,
                           sample_fraction=spec.sample_fraction,
                           scheduler=spec.scheduler,
-                          client_state=spec.client_state, **kw)
+                          client_state=spec.client_state,
+                          agg_tree=spec.agg_tree, **kw)
 
 
 def run_scenario(spec: ScenarioSpec) -> Dict[str, Any]:
@@ -246,7 +274,8 @@ def run_scenario(spec: ScenarioSpec) -> Dict[str, Any]:
                    "hosts": spec.hosts,
                    "sample_fraction": spec.sample_fraction,
                    "scheduler": spec.scheduler,
-                   "client_state": spec.client_state},
+                   "client_state": spec.client_state,
+                   "agg_tree": spec.agg_tree},
         "rounds": result.rounds,
         "migrations": result.migration_summary,
         "engine": result.engine_stats,

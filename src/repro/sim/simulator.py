@@ -58,14 +58,16 @@ import numpy as np
 from repro.core.checkpoint import EdgeCheckpoint
 from repro.core.migration import MigrationExecutor
 from repro.core.mobility import MobilityTrace
+from repro.kernels.fedavg_agg import coeff_merge_trees, coeff_term_tree
 from repro.obs import telemetry as obs
 from repro.obs import trace as obs_trace
+from repro.sim import agg_tree as agg_place
 from repro.sim.async_agg import (AsyncAggregator, StalenessFn, SyncAggregator,
-                                 poly_staleness)
+                                 poly_staleness, sync_coeffs)
 from repro.sim.edge import SimEdge
 from repro.sim.engine import (EventKind, Mail, SerialExecutor, ShardedEngine)
 from repro.sim.faults import FaultPlan
-from repro.sim.fleet import Fleet
+from repro.sim.fleet import Fleet, tree_nbytes
 from repro.sim.mailbox import (_BARRIER_TIMEOUT_S, GroupFailure,
                                HostShardedEngine, MultihostControl,
                                PeerShardedEngine, SocketMailbox,
@@ -109,6 +111,9 @@ class FleetResult:
                 [r["mean_round_time_s"] for r in timed])) if timed else None,
             "migrations": self.migration_summary,
             "recoveries": self.engine_stats.get("recoveries", 0),
+            # aggregation-plane digest (ARCHITECTURE §3.8): which tree
+            # ran, what crossed into the root, where the root sat
+            "agg": self.engine_stats.get("agg"),
         }
         if self.obs is not None:
             out["obs"] = self.obs
@@ -151,9 +156,13 @@ class FleetSimulator:
                  control_timeout_s: Optional[float] = None,
                  sample_fraction: float = 1.0,
                  scheduler: str = "heap",
-                 client_state: str = "objects"):
+                 client_state: str = "objects",
+                 agg_tree: str = "flat"):
         if mode not in ("sync", "async"):
             raise ValueError(f"mode must be sync|async, got {mode!r}")
+        if agg_tree not in ("flat", "2level"):
+            raise ValueError(f"agg_tree must be flat|2level, got "
+                             f"{agg_tree!r}")
         if not 0.0 < sample_fraction <= 1.0:
             raise ValueError(f"sample_fraction must be in (0, 1], got "
                              f"{sample_fraction}")
@@ -224,6 +233,7 @@ class FleetSimulator:
         self.sample_fraction = sample_fraction
         self.scheduler = scheduler
         self.client_state = client_state
+        self.agg_tree = agg_tree
         # per-round participant accounting (sampled runs only; None
         # means every client participates every round)
         self._expected_by_round: Optional[List[int]] = None
@@ -281,6 +291,20 @@ class FleetSimulator:
         self._applied = 0                       # items applied, ever
         self._skip = 0                          # items to drop on replay
         self._seen_migs: set = set()
+        # hierarchical aggregation plane (ARCHITECTURE §3.8). All of it
+        # is numerics-and-reporting state: the fold algebra is partition-
+        # invariant (exact int64 accumulators), and root placement is a
+        # priced *decision*, never a timeline event — so none of this
+        # can perturb per-round timing metrics.
+        self._cohort_owner: Dict[Tuple, int] = {}
+        self._owner_of_shard: Dict[int, int] = {}
+        self._fold_seq = 0                      # fresh per fold exchange
+        self._pending_floors: Dict[Tuple, int] = {}
+        self._ingress_bytes = 0                 # bytes folded at the root
+        self._root_edge: Optional[str] = None
+        self._root_log: List[List[Any]] = []    # [window, edge] per place
+        self._root_moves = 0
+        self._root_move_bytes = 0
         #: per-round restart mail, appended at commit time — what a
         #: rebuilt sync mesh needs to be re-driven through already-
         #: committed rounds (``_mesh_catch_up``)
@@ -493,7 +517,17 @@ class FleetSimulator:
             updates.append((tree, weight, staleness))
             items.append((item, staleness))
         self._buffer.clear()
-        alphas = self.agg.flush_batch(updates)
+        if self.agg_tree == "2level":
+            alphas = self._flush_two_level(updates, items)
+        else:
+            # flat ingress: one model-sized tree per *distinct* update
+            # folded at the coordinator (cohort replicas shared by many
+            # clients count once — they arrive once)
+            uniq: Dict[int, Any] = {}
+            for tree, _, _ in updates:
+                uniq.setdefault(id(tree), tree)
+            self._count_ingress(list(uniq.values()))
+            alphas = self.agg.flush_batch(updates)
         for (item, staleness), a in zip(items, alphas):
             item["record"].staleness = staleness
             item["record"].mix_weight = a
@@ -509,6 +543,145 @@ class FleetSimulator:
         while (self._grid_k + 1) * self._flush_dt <= t:
             self._grid_k += 1
             self._fire_flush(self._grid_k * self._flush_dt)
+
+    # -- hierarchical aggregation (ARCHITECTURE §3.8) ---------------------
+
+    def _count_ingress(self, trees: Sequence[Params]) -> None:
+        """Account aggregation-plane bytes folded at the root: model-
+        sized update trees in flat mode, ONE int64 partial per
+        contributing group in two-level mode. Computed from tree sizes,
+        so the counter is executor-independent (the serial path has no
+        wire but folds the same trees)."""
+        n = 0
+        for t in trees:
+            n += tree_nbytes(t)
+        self._ingress_bytes += n
+        obs.count("coord.ingress_bytes", n)
+
+    def _edges_of_shard(self) -> Dict[int, List[str]]:
+        out: Dict[int, List[str]] = {}
+        for i, eid in enumerate(self.edge_order):
+            out.setdefault(i % self.num_shards, []).append(eid)
+        return out
+
+    def _flush_two_level(self, updates: Sequence[Tuple[Any, float, int]],
+                         items: Sequence[Tuple[Any, int]]) -> List[float]:
+        """Async flush, two-level: the buffer holds (cohort, epoch,
+        replica) references instead of trees, the owner groups fold
+        their retained snapshots under the exact effective coefficients,
+        and the merged partials commit through ``commit_acc`` —
+        bit-identical to ``flush_batch`` (same sequential coefficients,
+        same exact fold algebra, partition-invariant int64 sums).
+
+        A group death mid-exchange restores the flush window — buffer
+        contents, weight EMA, grid cursor (both callers advanced it
+        immediately before this flush) — because the post-recovery
+        replay skips already-applied items, so an un-restored flush
+        would never re-fire and its updates would be lost."""
+        saved_ema = self.agg._weight_ema
+        try:
+            alphas, grouped, keep = self.agg.flush_coeffs(updates)
+            acc = self._exchange_partials(list(grouped.items()))
+            return self.agg.commit_acc(acc, keep, alphas)
+        except TrainerAborted:
+            self.agg._weight_ema = saved_ema
+            self._buffer = [(k, w, item) for (k, w, _), (item, _)
+                            in zip(updates, items)]
+            self._grid_k -= 1
+            raise
+
+    def _exchange_partials(self, per: Sequence[Tuple[Tuple, float]]
+                           ) -> Optional[Params]:
+        """One fold exchange: group the ((cohort, epoch, replica) ->
+        exact coefficient) entries by owner group, obtain ONE int64
+        partial per contributing group — folded inline from the local
+        fleet's snapshots on the serial path, via ``fold`` directives +
+        ``partial_agg`` records on a mesh — place the floating root,
+        and return the merged accumulator. Root-side aggregation
+        ingress is O(contributing groups), not O(cohort replicas)."""
+        by_group: Dict[int, List[list]] = {}
+        for (ck, epoch, rep), coeff in per:
+            g = self._cohort_owner[ck]
+            by_group.setdefault(g, []).append(
+                [ck, int(epoch), int(rep), float(coeff)])
+        seq = self._fold_seq
+        self._fold_seq += 1
+        accs: Dict[int, Params] = {}
+        if isinstance(self._trainer, TrainerProxy):
+            # prune floors ride the owner's fold directive (retain-mode
+            # groups don't prune eagerly); floors for groups with no
+            # fold this window stay pending
+            floors: Dict[int, List[list]] = {}
+            for ck in sorted(self._pending_floors):
+                g = self._cohort_owner.get(ck)
+                if g in by_group:
+                    floors.setdefault(g, []).append(
+                        [ck, self._pending_floors[ck]])
+            for g in sorted(by_group):
+                self._trainer.send_fold(g, seq, by_group[g],
+                                        floors.get(g, []))
+            for g in sorted(floors):
+                for ck, _ in floors[g]:
+                    self._pending_floors.pop(ck, None)
+            payloads = self._trainer.partials_for(seq, by_group)
+            from repro.runtime.serialization import unpack_pytree
+            for g in sorted(payloads):
+                accs[g] = unpack_pytree(payloads[g])
+        else:
+            for g in sorted(by_group):
+                acc = None
+                for ck, epoch, rep, coeff in by_group[g]:
+                    tree = self.fleet.cohorts[ck].snapshots[epoch][rep]
+                    term = coeff_term_tree(tree, coeff)
+                    acc = (term if acc is None
+                           else coeff_merge_trees([acc, term]))
+                accs[g] = acc
+        self._count_ingress([accs[g] for g in sorted(accs)])
+        self._place_root({g: float(tree_nbytes(accs[g]))
+                          for g in sorted(accs)}, seq)
+        return coeff_merge_trees([accs[g] for g in sorted(accs)])
+
+    def _place_root(self, bytes_by_group: Dict[int, float],
+                    window: int) -> None:
+        """Re-score the floating root over the live groups' home edges.
+        A placement change is priced through the real delta-migration
+        pipeline (report-only — the simulated timeline never sees it,
+        keeping timing metrics bit-identical with and without a move)
+        and announced to the mesh as ``agg_place`` control mail."""
+        homes = agg_place.group_homes(self._owner_of_shard,
+                                      self._edges_of_shard())
+        links = {eid: self.edges[eid].backhaul for eid in self.edge_order}
+        root, _ = agg_place.place_root(homes, bytes_by_group, links)
+        if root == self._root_edge:
+            return
+        if self._root_edge is not None:
+            moved = self._price_root_move(self._root_edge, root)
+            self._root_moves += 1
+            self._root_move_bytes += moved
+            obs.count("agg.root_move_bytes", moved)
+        self._root_edge = root
+        self._root_log.append([int(window), root])
+        obs.gauge("agg.root_edge", float(self.edge_order.index(root)))
+        if isinstance(self._trainer, TrainerProxy):
+            for g in sorted(set(self._owner_of_shard.values())):
+                self._trainer.send_place(g, self._round_idx, root)
+
+    def _price_root_move(self, src: str, dst: str) -> int:
+        """Price relocating the root aggregator's state (the server-
+        stage partition of the current global model) src -> dst through
+        the migration pipeline — delta-encoded against the broadcast
+        base every edge already holds, exactly like a client move."""
+        fleet = self.fleet
+        ckpt = EdgeCheckpoint(
+            client_id="agg-root", round_idx=self._round_idx,
+            epoch=self._round_idx, batch_idx=0, split_point=fleet.sp,
+            server_params=fleet.migration_base()["server_params"],
+            optimizer_state={}, loss=0.0, rng_seed=fleet.seed)
+        base = (fleet.migration_base()
+                if self.migrator.codec == "delta" else None)
+        _, report = self.migrator.migrate(ckpt, src, dst, base=base,
+                                          base_version="global")
+        return int(report.nbytes)
 
     def _consume(self, cohort_key, epoch: int, prune: bool = True):
         """Snapshot-pruning bookkeeping: one *client's* contribution for
@@ -540,6 +713,11 @@ class FleetSimulator:
             for e in range(floor0, floor):
                 self._consumed.pop((cohort_key, e), None)
             self._trainer.prune(cohort_key, floor)
+            if (self.agg_tree == "2level"
+                    and isinstance(self._trainer, TrainerProxy)):
+                # retain-mode groups keep snapshots for their folds, so
+                # the floor rides the owner's next fold directive
+                self._pending_floors[cohort_key] = floor
 
     def _on_window(self, bound: float,
                    all_records: Dict[int, Dict[str, list]]) -> List[Mail]:
@@ -596,9 +774,11 @@ class FleetSimulator:
             (arrival, cid, cohort_key, replica, epoch, epoch_start_s,
              pulled_s, num_samples) = action[1]
             # may raise TrainerAborted (owner group died): the item is
-            # then NOT counted as applied and replays after recovery
+            # then NOT counted as applied and replays after recovery.
+            # Two-level mode ships losses-only updates (the model trees
+            # stay with the owner group for its fold), so the trees list
+            # must not be indexed.
             trees, losses = self._trainer.update_for(cohort_key, epoch)
-            tree = trees[replica]
             loss = float(losses[replica])
             record = self.metrics.record_contribution(
                 client_id=cid, round_idx=epoch, arrival_s=arrival,
@@ -613,13 +793,24 @@ class FleetSimulator:
                 # count per client; prune deferred to after the commit
                 self._consume(cohort_key, epoch, prune=False)
             else:
-                self._buffer.append((tree, float(num_samples), {
+                ref = ((cohort_key, epoch, replica)
+                       if self.agg_tree == "2level" else trees[replica])
+                self._buffer.append((ref, float(num_samples), {
                     "record": record, "pulled_s": pulled_s,
                     "cohort_key": cohort_key, "epoch": epoch}))
             self._applied += 1
         # fire flush points the window has fully covered
         if self.mode == "async" and self._buffer and math.isfinite(bound):
             self._advance_grid(bound)
+        if (self.mode == "async" and self._buffer
+                and not math.isfinite(bound)
+                and self.agg_tree == "2level" and self._mesh is not None):
+            # trailing mesh window (every group idle, replay complete):
+            # the tail flush needs fold directives, and the drive loop
+            # stops the group trainers right after this callback — fire
+            # it now, while the mesh is still alive. _finish_run's drain
+            # then sees an empty buffer.
+            self._drain_async_tail()
         # the range guard matters on the sampled path: after the final
         # commit _expected is 0, and a trailing window callback (peer
         # meshes flush one) would otherwise re-fire an empty commit and
@@ -636,6 +827,24 @@ class FleetSimulator:
         if not self._round_weights:
             self.agg.commit()                      # empty: carry forward
             self.metrics.record_skipped_round(r, t)
+        elif self.agg_tree == "2level":
+            # two-level barrier: exact FedAvg coefficients computed here
+            # (canonical sequential order), folded into ONE partial per
+            # owner group, committed from the merged accumulators —
+            # bit-identical to the flat fold for any cohort partition.
+            # The exchange runs BEFORE any aggregator mutation: a group
+            # death mid-exchange leaves _round_weights/_arrived intact,
+            # so the commit re-fires whole after recovery.
+            entries = sorted(self._round_weights.items())
+            coeffs = sync_coeffs([w for _, w in entries])
+            per = [((ck, r, rep), c)
+                   for ((ck, rep), _), c in zip(entries, coeffs)]
+            acc = self._exchange_partials(per)
+            self._round_weights.clear()
+            self.fleet.set_global(self.agg.commit_acc(acc, len(per)))
+            self.metrics.record_barrier(r, t)
+            for cohort_key in self.fleet.cohorts:  # snapshots now consumed
+                self._maybe_prune(cohort_key)
         else:
             # gather every update BEFORE the first submit: if a waiter
             # aborts mid-round (group death), the aggregator is still
@@ -646,6 +855,7 @@ class FleetSimulator:
                     self._round_weights.items()):
                 trees, _ = self._trainer.update_for(cohort_key, r)
                 gathered.append((trees[replica], weight))
+            self._count_ingress([tree for tree, _ in gathered])
             for tree, weight in gathered:
                 self.agg.submit(tree, weight)
             self._round_weights.clear()
@@ -712,6 +922,14 @@ class FleetSimulator:
     def _build_result(self, stats: Dict[str, Any]) -> FleetResult:
         """Fold merged engine stats + accumulated metrics into the
         FleetResult (shared by every executor path)."""
+        stats["agg"] = {
+            "tree": self.agg_tree,
+            "ingress_bytes": self._ingress_bytes,
+            "root_edge": self._root_edge,
+            "root_places": self._root_log,
+            "root_moves": self._root_moves,
+            "root_move_bytes": self._root_move_bytes,
+        }
         by_edge = {e["edge_id"]: e for e in stats.pop("edges")}
         return FleetResult(
             mode=self.mode,
@@ -736,10 +954,12 @@ class FleetSimulator:
             mesh.control_send, cohort_owner,
             lr_of=self.fleet.lr_schedule,
             params_of=lambda: self.agg.params,
-            version_of=lambda: self.agg.version)
+            version_of=lambda: self.agg.version,
+            retain=self.agg_tree == "2level")
         self._trainer = proxy
         self._mesh = mesh
         mesh.on_update = proxy.on_update
+        mesh.on_partial = proxy.on_partial
         mesh.on_abort = proxy.abort
         return proxy
 
@@ -832,6 +1052,14 @@ class FleetSimulator:
             # serial reference path: inline replay, inline training
             self._trainer = LocalTrainer(self.fleet)
             self._mesh = None
+            if self.agg_tree == "2level":
+                # every shard is its own "group": the exact fold is
+                # partition-invariant, so the serial reference commits
+                # the same bits as any mesh grouping
+                self._owner_of_shard = {s: s
+                                        for s in range(self.num_shards)}
+                self._cohort_owner = self._cohort_owners(
+                    self._owner_of_shard)
             lookahead = self._lookahead() if self.num_shards > 1 else None
             self.coordinator = ShardedEngine(
                 shards, lookahead=lookahead,
@@ -877,6 +1105,8 @@ class FleetSimulator:
             owner_of_shard = {s.shard_id: s.shard_id % groups
                               for s in shards}
             cohort_owner = self._cohort_owners(owner_of_shard)
+            self._owner_of_shard = owner_of_shard
+            self._cohort_owner = cohort_owner
             blobs = self._trainer_blobs(cohort_owner)
             kw: Dict[str, Any] = dict(
                 lookahead=self._lookahead(), trainer_blobs=blobs,
@@ -899,6 +1129,7 @@ class FleetSimulator:
                     proxy = self._trainer
                     self._mesh = engine
                     engine.on_update = proxy.on_update
+                    engine.on_partial = proxy.on_partial
                     engine.on_abort = proxy.abort
                     reassigned = sum(
                         1 for sid in sorted(owner_of_shard)
@@ -910,8 +1141,9 @@ class FleetSimulator:
                             g, {"type": "reassign",
                                 "owner": owner_of_shard,
                                 "epoch": attempt})
-                    proxy.reset_for_recovery(engine.control_send,
-                                             cohort_owner)
+                    proxy.reset_for_recovery(
+                        engine.control_send, cohort_owner,
+                        drop_stored=self.agg_tree == "2level")
                 engine.on_idle = self._mesh_catch_up
                 if self.fault_plan is not None:
                     for f in self.fault_plan.for_coordinator(attempt):
@@ -936,6 +1168,7 @@ class FleetSimulator:
                     # would poison the re-armed proxy
                     engine.on_abort = None
                     engine.on_update = None
+                    engine.on_partial = None
                     engine.on_idle = None
                     engine.close()
                     engine = None
@@ -998,6 +1231,8 @@ class FleetSimulator:
                 s.bootstrap_async()
         lookahead = self._lookahead()
         cohort_owner = self._cohort_owners(owner)
+        self._owner_of_shard = owner
+        self._cohort_owner = cohort_owner
         specs = self.fleet.cohort_specs()
         barrier_s = self.barrier_timeout_s or _BARRIER_TIMEOUT_S
         control_s = self.control_timeout_s or _BARRIER_TIMEOUT_S
@@ -1041,6 +1276,7 @@ class FleetSimulator:
             ctrl = MultihostControl(addresses, owner)
             proxy = self._attach_proxy(ctrl, cohort_owner)
             mailbox.on_update = proxy.on_update
+            mailbox.on_partial = proxy.on_partial
             mailbox.on_abort = proxy.abort
             if self.mode == "sync":
                 ctrl.restart(self._round0_mail())

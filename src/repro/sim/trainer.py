@@ -99,6 +99,9 @@ class GroupTrainer:
         self._th: Optional[threading.Thread] = None
         self.epochs_trained = 0
         self._trained_cohorts: set = set()
+        self.partials_folded = 0
+        self.agg_root: Optional[str] = None
+        self.agg_places = 0
 
     # -- message intake (dispatcher thread) ------------------------------
 
@@ -122,9 +125,15 @@ class GroupTrainer:
             self._th.join()
         if not self._trained_cohorts:
             return None
-        return {"pid": os.getpid(),
-                "epochs_trained": self.epochs_trained,
-                "cohorts": sorted(self._trained_cohorts)}
+        out = {"pid": os.getpid(),
+               "epochs_trained": self.epochs_trained,
+               "cohorts": sorted(self._trained_cohorts)}
+        if self.partials_folded:
+            out["partials_folded"] = self.partials_folded
+        if self.agg_places:
+            out["agg_root"] = self.agg_root
+            out["agg_places"] = self.agg_places
+        return out
 
     # -- the trainer thread ----------------------------------------------
 
@@ -161,10 +170,21 @@ class GroupTrainer:
                         bases[int(msg["version"])] = unpack_pytree(
                             msg["params"])
                     continue
+                if kind == "agg_place":
+                    # the coordinator's root-placement decision for the
+                    # round (ARCHITECTURE §3.8) — recorded for the
+                    # group's stats, never touches training state
+                    self.agg_root = str(msg["edge"])
+                    self.agg_places += 1
+                    continue
+                if kind == "fold":
+                    self._fold(built, msg)
+                    continue
                 assert kind == "train", f"unexpected trainer msg {kind!r}"
                 key = tuple(msg["cohort"])
                 version = int(msg["version"])
                 epoch = int(msg["epoch"])
+                retain = bool(msg.get("retain"))
                 cohort = built.get(key)
                 if cohort is None:
                     cohort = built[key] = specs[key].build()
@@ -172,13 +192,19 @@ class GroupTrainer:
                 with obs.span("trainer.train", cohort=str(key), epoch=epoch):
                     cohort.run_epoch(bases[version], epoch, float(msg["lr"]))
                 with obs.span("trainer.pack", cohort=str(key), epoch=epoch):
-                    payload = pack_pytree({"trees": cohort.snapshots[epoch],
-                                           "losses": cohort.losses[epoch]})
+                    # two-level mode (retain): the model trees stay here
+                    # for the round's fold directive — only the losses
+                    # ride the update record, so coordinator ingress is
+                    # O(groups) model-sized payloads, not O(cohorts)
+                    payload = pack_pytree(
+                        {"trees": [] if retain else cohort.snapshots[epoch],
+                         "losses": cohort.losses[epoch]})
                 self._sink.update(key, epoch, payload)
-                # the update is shipped; the coordinator owns it now.
+                if not retain:
+                    # the update is shipped; the coordinator owns it now
+                    cohort.prune(epoch + 1)
                 # Directive base versions are non-decreasing, so older
                 # bases can never be referenced again.
-                cohort.prune(epoch + 1)
                 for v in [v for v in bases if v < version]:
                     del bases[v]
                 self.epochs_trained += 1
@@ -188,6 +214,39 @@ class GroupTrainer:
                 self._sink.err(traceback.format_exc())
             except OSError:
                 pass
+
+    def _fold(self, built: Dict[CohortKey, Any],
+              msg: Dict[str, Any]) -> None:
+        """Edge-local partial aggregation (ARCHITECTURE §3.8): fold the
+        named retained snapshots under the coordinator-supplied exact
+        coefficients into ONE int64 accumulator and ship it as a
+        ``partial_agg`` record. Control FIFO guarantees every named
+        (cohort, epoch) was trained by this thread before the fold
+        arrives, so the snapshots exist. ``floors`` carries the
+        coordinator's prune floors — applied after the fold, since
+        retain-mode training no longer prunes eagerly."""
+        # lazy import mirrors the JAX-free bootstrap contract: a fold
+        # only ever follows this group's own train directives, which
+        # already paid the JAX import
+        from repro.kernels.fedavg_agg import coeff_merge_trees, coeff_term_tree
+        entries = msg["entries"]
+        acc = None
+        with obs.span("agg.partial_fold", group=self.group_id,
+                      n=len(entries)):
+            for cohort, epoch, replica, coeff in entries:
+                tree = built[tuple(cohort)].snapshots[int(epoch)][
+                    int(replica)]
+                term = coeff_term_tree(tree, float(coeff))
+                acc = term if acc is None else coeff_merge_trees([acc, term])
+            from repro.runtime.serialization import pack_pytree
+            payload = pack_pytree(acc if acc is not None else {})
+        self._sink.partial_agg(self.group_id, int(msg["seq"]),
+                               len(entries), payload)
+        self.partials_folded += 1
+        for cohort, floor in msg.get("floors") or []:
+            c = built.get(tuple(cohort))
+            if c is not None:
+                c.prune(int(floor))
 
 
 class TrainerProxy:
@@ -206,19 +265,24 @@ class TrainerProxy:
                  lr_of: Callable[[int], float],
                  params_of: Callable[[], Params],
                  version_of: Callable[[], int], *,
-                 timeout_s: float = _UPDATE_TIMEOUT_S):
+                 timeout_s: float = _UPDATE_TIMEOUT_S,
+                 retain: bool = False):
         self._send = send
         self._owner = owner_of_cohort
         self._lr_of = lr_of
         self._params_of = params_of
         self._version_of = version_of
         self._timeout_s = timeout_s
+        #: two-level aggregation: train directives carry retain=True, so
+        #: groups keep their snapshots for the round's fold directive
+        self.retain = retain
         self._requested: set = set()
         self._req_t: Dict[Tuple[CohortKey, int], float] = {}
         self._group_version: Dict[int, int] = {}
         self._packed: Tuple[int, Optional[bytes]] = (-1, None)
         self._store: Dict[Tuple[CohortKey, int],
                           Tuple[List[Params], Any]] = {}
+        self._partials: Dict[Tuple[int, int], bytes] = {}
         self._cond = threading.Condition()
         self._abort: Optional[str] = None
 
@@ -239,9 +303,54 @@ class TrainerProxy:
             self._send(group, {"type": "bcast", "version": version,
                                "params": self._packed[1]})
             self._group_version[group] = version
-        self._send(group, {"type": "train", "cohort": cohort_key,
-                           "epoch": epoch, "version": version,
-                           "lr": float(self._lr_of(epoch))})
+        msg = {"type": "train", "cohort": cohort_key,
+               "epoch": epoch, "version": version,
+               "lr": float(self._lr_of(epoch))}
+        if self.retain:
+            msg["retain"] = True
+        self._send(group, msg)
+
+    def send_fold(self, group: int, seq: int,
+                  entries: List[Tuple[CohortKey, int, int, float]],
+                  floors: List[Tuple[CohortKey, int]]) -> None:
+        """Ship one round/window's fold directive to an owner group:
+        the (cohort, epoch, replica, exact coefficient) entries it must
+        fold, plus the prune floors it may apply afterwards. Control
+        FIFO puts this behind every train directive it references."""
+        self._send(group, {"type": "fold", "seq": int(seq),
+                           "entries": entries, "floors": floors})
+
+    def send_place(self, group: int, round_idx: int, edge: str) -> None:
+        """Announce the round's root-aggregator placement to a group."""
+        self._send(group, {"type": "agg_place", "round": int(round_idx),
+                           "edge": str(edge)})
+
+    def partials_for(self, seq: int, groups) -> Dict[int, bytes]:
+        """Block until every group in ``groups`` shipped its
+        ``partial_agg`` for fold sequence ``seq`` (routed here from the
+        transport reader threads exactly like updates, bypassing the
+        replay queue). Aborts poison this wait the same way they poison
+        ``update_for`` — recovery re-places and re-folds."""
+        deadline = time.monotonic() + self._timeout_s
+        want = sorted(groups)
+        with self._cond:
+            while True:
+                missing = [g for g in want
+                           if (seq, g) not in self._partials]
+                if not missing:
+                    break
+                if self._abort is not None:
+                    raise TrainerAborted(
+                        f"cohort trainer aborted while waiting for "
+                        f"partials {missing} of fold {seq}: {self._abort}")
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise RuntimeError(
+                        f"no partial_agg from groups {missing} for fold "
+                        f"{seq} after {self._timeout_s}s "
+                        "(trainer stalled?)")
+                self._cond.wait(timeout=min(remaining, 1.0))
+            return {g: self._partials.pop((seq, g)) for g in want}
 
     def update_for(self, cohort_key: CohortKey, epoch: int):
         key = (cohort_key, epoch)
@@ -273,7 +382,8 @@ class TrainerProxy:
 
     def reset_for_recovery(self, send: Callable[[int, Dict[str, Any]],
                                                 None],
-                           owner_of_cohort: Dict[CohortKey, int]) -> int:
+                           owner_of_cohort: Dict[CohortKey, int], *,
+                           drop_stored: bool = False) -> int:
         """Re-arm the proxy against a rebuilt mesh (ARCHITECTURE §3.7).
 
         Clears the abort poison, swaps in the new control-send and
@@ -288,12 +398,25 @@ class TrainerProxy:
         epochs per cohort form a contiguous high range — updates arrive
         in epoch order per cohort and prune removes prefixes — so the
         sorted re-issue trains cleanly on a fresh cohort replica.
+
+        ``drop_stored`` is the two-level (retain) mode: stored updates
+        are losses-only and the model trees they refer to lived in the
+        dead groups' retained snapshots, so every unpruned stored epoch
+        is invalidated back to outstanding and retrained on the rebuilt
+        mesh — without it the next fold directive would name snapshots
+        no live group holds. Flat mode keeps stored updates untouched
+        (the trees live here, in the coordinator's store).
         Returns the number of re-issued directives."""
         with self._cond:
             self._abort = None
             self._send = send
             self._owner = dict(owner_of_cohort)
             self._group_version = {}
+            # partials of a dead fold sequence can never be consumed
+            # (every fold is re-issued with a fresh seq after recovery)
+            self._partials.clear()
+            if drop_stored:
+                self._store.clear()
             outstanding = sorted(k for k in self._requested
                                  if k not in self._store)
         version = self._version_of()
@@ -306,9 +429,12 @@ class TrainerProxy:
                 self._send(group, {"type": "bcast", "version": version,
                                    "params": self._packed[1]})
                 self._group_version[group] = version
-            self._send(group, {"type": "train", "cohort": cohort_key,
-                               "epoch": epoch, "version": version,
-                               "lr": float(self._lr_of(epoch))})
+            msg = {"type": "train", "cohort": cohort_key,
+                   "epoch": epoch, "version": version,
+                   "lr": float(self._lr_of(epoch))}
+            if self.retain:
+                msg["retain"] = True
+            self._send(group, msg)
         return len(outstanding)
 
     def prune(self, cohort_key: CohortKey, floor: int) -> None:
@@ -334,6 +460,12 @@ class TrainerProxy:
         key = (tuple(msg["cohort"]), int(msg["epoch"]))
         with self._cond:
             self._store[key] = (tree["trees"], tree["losses"])
+            self._cond.notify_all()
+
+    def on_partial(self, msg: Dict[str, Any]) -> None:
+        with self._cond:
+            self._partials[(int(msg["seq"]), int(msg["group"]))] = \
+                msg["payload"]
             self._cond.notify_all()
 
     def abort(self, why: str) -> None:

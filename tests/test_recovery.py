@@ -95,6 +95,55 @@ def test_hosts_sync_kill_recovers():
 
 
 @pytest.mark.slow
+def test_kill_root_group_replaces_root():
+    """Recovery composes with the hierarchical aggregation plane
+    (ARCHITECTURE §3.8): a fast edge-0 and slow everything-else pins the
+    floating root on the *other* group's home edge; killing that group
+    forces a rebuild, and the next exchange re-places the root over the
+    surviving homes — priced as a root move, with timing metrics still
+    bit-identical to the no-fault run."""
+    from repro.sim.edge import LinkModel, make_edges
+    fast = LinkModel(bandwidth_bps=1e9, latency_s=0.002)
+    slow = LinkModel(bandwidth_bps=1e6, latency_s=0.2)
+
+    def sim(**kw):
+        edges = make_edges(4, slots=8,
+                           backhauls=[fast, slow, slow, slow])
+        # 2 cohorts: even-indexed clients sit on group 0's shards {0,2},
+        # odd ones on group 1's {1,3}, so BOTH groups own a cohort and
+        # contribute partials (a one-cohort fleet has one voter and the
+        # placement is trivially its home)
+        specs = make_fleet_specs(8, [e.edge_id for e in edges],
+                                 batch_size=8, num_batches=3, cohorts=2)
+        fleet = Fleet(VGG5(), sgd(momentum=0.9), specs, split_point=2,
+                      lr_schedule=constant(0.01), max_replicas=4, seed=1)
+        trace = MobilityTrace(poisson_moves(
+            [s.client_id for s in specs], [e.edge_id for e in edges],
+            2, 0.3, seed=1))
+        return FleetSimulator(fleet, edges, mode="sync", shards=4,
+                              trace=trace, measure_pack=False,
+                              agg_tree="2level", **kw)
+
+    base = sim().run(2)
+    plan = FaultPlan((Fault("kill", group=1, round=1),))
+    r = sim(workers=2, fault_plan=plan).run(2)
+    agg = r.engine_stats["agg"]
+    assert r.engine_stats["recoveries"] == 1
+    assert_timing_matches(r, base)
+    # round 0 committed before the fault: the root sat on group 1's
+    # home (slow uplinks keep partials home; edge-0 is the cheap
+    # fallback for everyone else's partial)
+    assert agg["root_places"][0][1] == "edge-1"
+    # the rebuilt single-group mesh homes at edge-0: the root moved, and
+    # the move was priced through the migration pipeline
+    assert agg["root_moves"] >= 1
+    assert agg["root_move_bytes"] > 0
+    assert agg["root_edge"] == "edge-0"
+    assert [w for w, _ in agg["root_places"]] == \
+        sorted(w for w, _ in agg["root_places"])
+
+
+@pytest.mark.slow
 def test_hosts_drop_records_recovers():
     """A closed records stream (process survives, network path dies) is
     a group failure too — same recovery, no hang."""
